@@ -1,0 +1,50 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs.paper_cnn import CIFAR10, CIFAR100, FASHION
+from repro.data import (make_image_classification, partition_dirichlet,
+                        partition_iid)
+
+DATASETS = {
+    "cifar10-syn": (CIFAR10, 10),
+    "cifar100-syn": (CIFAR100, 100),
+    "fashion-syn": (FASHION, 10),
+}
+
+
+def make_problem(name: str, n_train: int = 4000, n_test: int = 800,
+                 seed: int = 0):
+    """(train, test, cnn_cfg) for one of the paper's three datasets
+    (synthetic stand-ins — offline container, see DESIGN.md)."""
+    cnn_cfg, n_classes = DATASETS[name]
+    full = make_image_classification(
+        n_samples=n_train + n_test, hw=cnn_cfg.input_hw,
+        channels=cnn_cfg.channels, n_classes=n_classes, seed=seed)
+    train = dataclasses.replace(full, x=full.x[:n_train],
+                                y=full.y[:n_train])
+    test = dataclasses.replace(full, x=full.x[n_train:], y=full.y[n_train:])
+    return train, test, cnn_cfg
+
+
+def split(train, K: int, iid: bool, seed: int = 0):
+    if iid:
+        return partition_iid(train, K, seed)
+    return partition_dirichlet(train, K, alpha=0.3, seed=seed)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

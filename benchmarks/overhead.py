@@ -1,0 +1,76 @@
+"""Overhead-reduction accounting (r-bar, §IV) + the beyond-paper
+rate-aware bit allocation, plus wire-format microbenchmarks of the
+pack/dequant reference path (the Pallas kernels' jnp oracle)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.power import (equalizing_target_latency,
+                              rate_aware_fractions)
+from repro.core.quantize import (MixedResolutionQuantizer, pack_signs,
+                                 static_budget_roundtrip, wire_bits)
+from repro.kernels.ops import sign_dequant_reduce_op, signpack_op
+
+from .common import csv_row
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / n * 1e6
+
+
+def run(quick: bool = True, out="runs/bench"):
+    lines = []
+    rng = np.random.default_rng(0)
+
+    # r-bar for the paper's formula at the Table II/III operating points
+    for lam, b, s_meas in [(0.05, 10, 0.01), (0.2, 10, 0.009),
+                           (0.4, 4, 0.00044)]:
+        rbar = 100 - 100 / 32 - 100 * s_meas * (b - 1) / 32
+        lines.append(csv_row(f"overhead/rbar_lam{lam}", 0.0,
+                             f"rbar={rbar:.1f}%_vs_32bit"))
+
+    # static wire format vs fp32 all-reduce bytes
+    d, k, b = 2 ** 24, 2 ** 24 // 100, 4
+    ratio = wire_bits(d, k, b) / (32 * d)
+    lines.append(csv_row("overhead/static_wire_ratio", 0.0,
+                         f"bytes_ratio={ratio:.4f}"))
+
+    # rate-aware bit allocation (beyond-paper)
+    rates = rng.uniform(0.5e6, 8e6, 16)
+    ell = equalizing_target_latency(rates, d=10 ** 6, b=8, s_floor=0.005)
+    s = rate_aware_fractions(rates, 10 ** 6, 8, ell, s_min=0.005)
+    lines.append(csv_row("overhead/rate_aware_alloc", 0.0,
+                         f"latency={ell:.3f}s;s_spread={s.max()/s.min():.1f}x"))
+
+    # pack/dequant micro (jnp reference path == kernel oracle)
+    dd = 2 ** 18 if quick else 2 ** 22
+    x = jnp.asarray(rng.standard_normal(dd), jnp.float32)
+    us = _time(signpack_op, x)
+    lines.append(csv_row("kernels/signpack_interpret+ref", us,
+                         f"d={dd};GBps={dd * 4 / us / 1e3:.2f}"))
+    words = signpack_op(x)
+    scales = jnp.asarray(rng.uniform(0.1, 1, 8), jnp.float32)
+    w8 = jnp.broadcast_to(words[None], (8,) + words.shape)
+    us = _time(sign_dequant_reduce_op, w8, scales)
+    lines.append(csv_row("kernels/sign_dequant_reduce", us,
+                         f"G=8;d={dd}"))
+
+    # quantize roundtrip throughput (simulation layer)
+    q = MixedResolutionQuantizer(lambda_=0.2, b=10)
+    f = jax.jit(lambda v: q(v)[0].recon)
+    us = _time(f, x)
+    lines.append(csv_row("quantize/mixed_res_roundtrip", us, f"d={dd}"))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

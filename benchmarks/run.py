@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Quick mode (default)
+uses reduced K/T so the whole harness finishes on this CPU container;
+pass --full for paper-scale settings.  The roofline/dry-run tables are
+produced by launch/roofline.py from the dry-run sweep, not here.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,table2,table3,overhead")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import fig2_convergence, overhead, table2_accuracy, \
+        table3_latency
+    benches = {
+        "overhead": lambda: overhead.run(quick=quick),
+        "fig2": lambda: fig2_convergence.run(T=40 if quick else 100,
+                                             quick=quick),
+        "table2": lambda: table2_accuracy.run(quick=quick),
+        "table3": lambda: table3_latency.run(quick=quick),
+    }
+    selected = list(benches) if args.only is None \
+        else args.only.split(",")
+
+    print("name,us_per_call,derived")
+    failed = False
+    for name in selected:
+        try:
+            for line in benches[name]():
+                print(line, flush=True)
+        except Exception:
+            failed = True
+            traceback.print_exc()
+            print(f"{name},nan,ERROR", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Table II — accuracy of mixed-resolution FL vs classic FL on the
+three datasets, IID and non-IID (K=20, L=5, b=10, lambda=0.2 in the
+paper; reduced K/T in quick mode)."""
+from __future__ import annotations
+
+import csv
+import os
+
+from repro.core.quantize import ClassicQuantizer, MixedResolutionQuantizer
+from repro.fl import FLConfig, run_fl
+
+from .common import Timer, csv_row, make_problem, split
+
+
+def run(quick: bool = True, out="runs/bench"):
+    os.makedirs(out, exist_ok=True)
+    K = 8 if quick else 20
+    T = 20 if quick else 100
+    fl = FLConfig(L=5, T=T, batch_size=48, alpha=0.01, eval_every=5)
+    lines, rows = [], []
+    for ds in (["cifar10-syn", "fashion-syn"] if quick
+               else ["cifar10-syn", "cifar100-syn", "fashion-syn"]):
+        train, test, cfg = make_problem(ds, n_train=2000 if quick else 8000)
+        for iid in (True, False):
+            shards = split(train, K, iid=iid)
+            with Timer() as t:
+                ours = run_fl(train, test, shards, cfg,
+                              MixedResolutionQuantizer(lambda_=0.2, b=10),
+                              None, None, fl)
+                classic = run_fl(train, test, shards, cfg,
+                                 ClassicQuantizer(), None, None, fl)
+            b = max(l.test_acc for l in ours.logs if l.test_acc is not None)
+            c = max(l.test_acc for l in classic.logs
+                    if l.test_acc is not None)
+            rbar = 100 * (1 - ours.mean_bits() / classic.mean_bits())
+            tag = f"{ds}/{'iid' if iid else 'noniid'}"
+            rows.append([tag, b, c, 100 * ours.mean_s(), rbar])
+            lines.append(csv_row(
+                f"table2/{tag}", t.seconds * 1e6 / (2 * T),
+                f"ours={b:.3f};classic={c:.3f};"
+                f"s={100 * ours.mean_s():.2f}%;rbar={rbar:.1f}%"))
+    with open(os.path.join(out, "table2.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["setting", "acc_ours", "acc_classic", "s_pct",
+                    "rbar_pct"])
+        w.writerows(rows)
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,86 @@
+"""Table III — quantizers x power-control under a total latency budget.
+
+For each quantizer (LAQ, Top-q, AQUILA, mixed-resolution) and each
+power control (ours bisection+LP, Dinkelbach, max-sum-rate): run FL
+over the CFmMIMO channel with a total latency budget and report T_max
+(rounds completed) and test accuracy.  Paper: K=40, L=5, b=4,
+lambda=0.4, budget 3s (quick mode scales these down).
+"""
+from __future__ import annotations
+
+import csv
+import os
+
+import numpy as np
+
+from repro.core.channel import CFmMIMOConfig, make_channel
+from repro.core.power import (BisectionLPPowerControl,
+                              DinkelbachPowerControl,
+                              MaxSumRatePowerControl)
+from repro.core.quantize import (AquilaQuantizer, LAQQuantizer,
+                                 MixedResolutionQuantizer, TopQQuantizer)
+from repro.fl import FLConfig, run_fl
+
+from .common import Timer, csv_row, make_problem, split
+
+
+def run(quick: bool = True, out="runs/bench"):
+    os.makedirs(out, exist_ok=True)
+    K = 8 if quick else 40
+    T = 12 if quick else 60
+    train, test, cfg = make_problem("cifar10-syn",
+                                    n_train=2000 if quick else 8000)
+    shards = split(train, K, iid=False)
+    chan = make_channel(CFmMIMOConfig(K=K), seed=0)
+
+    # calibrate the budget so the best scheme can do ~T rounds and the
+    # worst is clearly capped (the paper uses an absolute 3 s budget)
+    lam, b = 0.4, 4
+    s_ref = 0.01
+    quantizers = {
+        "mixed-resolution": lambda: MixedResolutionQuantizer(lambda_=lam,
+                                                             b=b),
+        "top-q": lambda: TopQQuantizer(q=max(s_ref, 0.005)),
+        "laq": lambda: LAQQuantizer(b=b, xi=0.5),
+        "aquila": lambda: AquilaQuantizer(b_min=2, b_max=8, tol=0.05),
+    }
+    powers = {
+        "ours-bisection-lp": BisectionLPPowerControl(),
+        "dinkelbach": DinkelbachPowerControl(outer=4, inner=15),
+        "max-sum-rate": MaxSumRatePowerControl(iters=20, restarts=0),
+    }
+
+    # budget: time for ~2/3 T rounds of classic-ish payload under our PC
+    probe = run_fl(train, test, shards, cfg, quantizers["laq"](),
+                   powers["ours-bisection-lp"], chan,
+                   FLConfig(L=5, T=3, batch_size=32, alpha=0.01,
+                            eval_every=3))
+    per_round = probe.logs[-1].cum_latency_s / 3
+    budget = per_round * T * 0.6
+
+    lines, rows = [], []
+    for qname, qf in quantizers.items():
+        for pname, pc in powers.items():
+            fl = FLConfig(L=5, T=T, batch_size=32, alpha=0.01,
+                          eval_every=4, latency_budget_s=budget)
+            with Timer() as t:
+                res = run_fl(train, test, shards, cfg, qf(), pc, chan, fl)
+            accs = [l.test_acc for l in res.logs if l.test_acc is not None]
+            acc = max(accs) if accs else float("nan")
+            rows.append([qname, pname, res.rounds_completed, acc,
+                         res.mean_bits()])
+            lines.append(csv_row(
+                f"table3/{qname}/{pname}", t.seconds * 1e6,
+                f"Tmax={res.rounds_completed};acc={acc:.3f};"
+                f"bits={res.mean_bits():.2e}"))
+    with open(os.path.join(out, "table3.csv"), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["quantizer", "power_control", "T_max", "best_acc",
+                    "mean_bits"])
+        w.writerows(rows)
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,0 +1,69 @@
+"""Batched serving demo: prefill a batch of prompts, then decode with
+the static KV cache through the real serve_step path (the same code the
+decode dry-runs lower for the production mesh).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch granite-3-8b
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import decode_step, forward, init_cache, init_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_config(args.arch).reduced(),
+                              ssm_chunk=16)
+    print(f"arch={cfg.name} (reduced for CPU) pattern={cfg.block_pattern}")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, P = args.batch, args.prompt_len
+    max_len = P + args.gen
+    prompts = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, P)), jnp.int32)
+
+    cache = init_cache(cfg, B, max_len, jnp.dtype(cfg.dtype))
+    if cfg.is_encoder_decoder:
+        from repro.models.transformer import encode
+        frames = jnp.zeros((B, cfg.encoder_seq, 128), jnp.float32)
+        cache["enc_out"] = encode(params, frames, cfg)
+
+    # prefill: token-by-token here (a fused prefill path is what the
+    # prefill_32k dry-run lowers at scale)
+    jit_step = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg))
+    t0 = time.time()
+    logits = None
+    for t in range(P):
+        logits, cache = jit_step(params, cache, prompts[:, t:t + 1],
+                                 jnp.asarray(t, jnp.int32))
+    print(f"prefill: {P} tokens x {B} seqs in {time.time()-t0:.2f}s")
+
+    t0 = time.time()
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
+    generated = [tok]
+    for t in range(P, max_len - 1):
+        logits, cache = jit_step(params, cache, tok.astype(jnp.int32),
+                                 jnp.asarray(t, jnp.int32))
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
+        generated.append(tok)
+    dt = time.time() - t0
+    n = len(generated) * B
+    print(f"decode: {n} tokens in {dt:.2f}s -> {n/dt:.1f} tok/s (CPU, "
+          f"interpret-level perf; see dry-run roofline for TPU)")
+    out = jnp.concatenate(generated, axis=1)
+    print("sample token ids:", np.asarray(out[0])[:12])
+
+
+if __name__ == "__main__":
+    main()

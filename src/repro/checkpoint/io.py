@@ -1,0 +1,82 @@
+"""Checkpointing: pytree save/restore as a single .npz + structure map.
+
+No orbax in this container; this implementation is complete for
+single-process use (atomic write via temp file + rename, step
+retention, metadata).  Sharded arrays are pulled to host before save.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    metadata: Optional[dict] = None, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    meta = {"step": step, "metadata": metadata or {}}
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz")
+    os.close(fd)
+    np.savez(tmp, __meta__=json.dumps(meta), **arrays)
+    final = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    os.replace(tmp, final)
+    _prune(directory, keep)
+    return final
+
+
+def _prune(directory: str, keep: int):
+    ckpts = sorted(f for f in os.listdir(directory)
+                   if f.startswith("ckpt_") and f.endswith(".npz"))
+    for f in ckpts[:-keep]:
+        os.remove(os.path.join(directory, f))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(f for f in os.listdir(directory)
+                   if f.startswith("ckpt_") and f.endswith(".npz"))
+    if not ckpts:
+        return None
+    return int(ckpts[-1][5:-4])
+
+
+def restore_checkpoint(directory: str, template: Any,
+                       step: Optional[int] = None):
+    """Restore into the structure of ``template``; returns
+    (tree, step, metadata)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    meta = json.loads(str(data["__meta__"]))
+    flat_template, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat_template:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+    return tree, meta["step"], meta["metadata"]

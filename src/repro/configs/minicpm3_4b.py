@@ -1,0 +1,26 @@
+"""minicpm3-4b [dense] — Multi-head Latent Attention (MLA).
+[hf:openbmb/MiniCPM3-4B]
+
+62L d_model=2560 40H d_ff=6400 vocab=73448.  MLA dims follow the
+MiniCPM3-4B model card: q_lora_rank=768, kv_lora_rank=256,
+qk_nope/rope head dims 64/32, v_head_dim=64.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    num_layers=62,
+    d_model=2560,
+    d_ff=6400,
+    vocab_size=73448,
+    attn_type="mla",
+    num_heads=40,
+    num_kv_heads=40,
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_head_dim=64,
+    qk_rope_head_dim=32,
+    v_head_dim=64,
+    source="hf:openbmb/MiniCPM3-4B",
+)

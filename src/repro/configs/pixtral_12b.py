@@ -1,0 +1,26 @@
+"""pixtral-12b [vlm] — Pixtral-ViT frontend (stub) + Mistral-Nemo-style
+decoder backbone.  [hf:mistralai/Pixtral-12B-2409]
+
+40L d_model=5120 32H (GQA kv=8, head_dim=128) d_ff=14336 vocab=131072.
+The vision encoder + projector are a STUB per the assignment:
+``input_specs`` supplies precomputed patch embeddings (d_model-sized)
+for ``num_patch_tokens`` positions; the language backbone is real.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    num_layers=40,
+    d_model=5120,
+    d_ff=14336,
+    vocab_size=131072,
+    attn_type="gqa",
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    rope_theta=1e6,
+    frontend="vision_stub",
+    num_patch_tokens=256,
+    source="hf:mistralai/Pixtral-12B-2409",
+)

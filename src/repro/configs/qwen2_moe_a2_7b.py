@@ -1,0 +1,27 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed experts, top-4.
+[hf:Qwen/Qwen1.5-MoE-A2.7B]
+
+24L d_model=2048 16H (kv=16, head_dim=128) moe_d_ff=1408 vocab=151936.
+60 routed experts padded to 64 for clean expert-parallel sharding over
+the 16-way model axis (router logits of padding experts are masked).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    d_ff=5632,                 # shared-expert path width (4 x 1408)
+    vocab_size=151936,
+    attn_type="gqa",
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    num_experts=60,
+    num_experts_padded=64,
+    num_shared_experts=4,
+    top_k=4,
+    moe_d_ff=1408,
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+)

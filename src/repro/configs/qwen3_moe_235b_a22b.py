@@ -1,0 +1,30 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts, top-8, qk_norm.
+[hf:Qwen/Qwen3-30B-A3B family, 235B-A22B scale]
+
+94L d_model=4096 64H (GQA kv=4, head_dim=128) moe_d_ff=1536 vocab=151936.
+Largest assigned model (~235B total, ~22B active): uses fully-sharded
+("fsdp") parameter placement; the paper's quantized delta aggregation
+applies across the pod axis in the multi-pod mesh (see DESIGN.md §4).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    d_ff=12288,                # dense fallback width (unused when MoE)
+    vocab_size=151936,
+    attn_type="gqa",
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1e6,
+    num_experts=128,
+    num_shared_experts=0,
+    top_k=8,
+    moe_d_ff=1536,
+    fsdp=True,
+    source="hf:Qwen/Qwen3-30B-A3B",
+)

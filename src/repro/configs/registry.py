@@ -1,0 +1,33 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "pixtral-12b": "pixtral_12b",
+    "minicpm3-4b": "minicpm3_4b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "whisper-base": "whisper_base",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "zamba2-7b": "zamba2_7b",
+    "granite-3-8b": "granite_3_8b",
+    "minitron-8b": "minitron_8b",
+    "rwkv6-7b": "rwkv6_7b",
+    "qwen3-14b": "qwen3_14b",
+}
+
+ARCH_IDS = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def list_archs() -> List[str]:
+    return list(ARCH_IDS)

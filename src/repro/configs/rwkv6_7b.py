@@ -1,0 +1,21 @@
+"""rwkv6-7b [ssm] — Finch, data-dependent decay linear attention
+(attention-free).  [arXiv:2404.05892]
+
+32L d_model=4096 d_ff=14336 vocab=65536, head_dim=64 (64 heads).
+long_500k runs natively: the WKV state is O(1) per head.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    d_ff=14336,
+    vocab_size=65536,
+    attn_type="none",
+    block_pattern="R" * 32,
+    ssm_state_dim=64,          # == head_dim for WKV
+    ssm_head_dim=64,
+    source="arXiv:2404.05892",
+)

@@ -1,0 +1,29 @@
+"""whisper-base [audio] — encoder-decoder with conv frontend (STUB).
+[arXiv:2212.04356]
+
+6 encoder + 6 decoder layers, d_model=512 8H d_ff=2048 vocab=51865.
+The mel-spectrogram + conv feature extractor is a stub per the
+assignment: ``input_specs`` supplies 1500 precomputed frame embeddings.
+Decode shapes exercise the decoder's self-attention KV cache at the
+assigned lengths (shape-level; real Whisper caps at 448 tokens —
+noted deviation).  long_500k is skipped (enc-dec, see DESIGN.md).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,
+    d_model=512,
+    d_ff=2048,
+    vocab_size=51865,
+    attn_type="gqa",
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    is_encoder_decoder=True,
+    encoder_layers=6,
+    encoder_seq=1500,
+    frontend="audio_stub",
+    source="arXiv:2212.04356",
+)

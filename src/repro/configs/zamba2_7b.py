@@ -1,0 +1,31 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242]
+
+81L d_model=3584 d_ff=14336 vocab=32000 ssm_state=64.  Every 6th block
+is a SHARED-parameter attention+MLP block ('S' — Zamba2's weight-shared
+global block, 32H); the rest are Mamba2 ('M').  long_500k runs natively
+(SSM state is O(1); the shared attention blocks use a sliding window in
+the long-context serving variant).
+"""
+from repro.models.config import ModelConfig
+
+_PATTERN = "".join(
+    "S" if (i % 6) == 5 else "M" for i in range(81))
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    d_ff=14336,
+    vocab_size=32000,
+    attn_type="gqa",
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    block_pattern=_PATTERN,
+    ssm_state_dim=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    source="arXiv:2411.15242",
+)

@@ -1,0 +1,2 @@
+from .cfmmimo import (CFmMIMOConfig, ChannelRealization, computation_latency,
+                      make_channel, uplink_latency)

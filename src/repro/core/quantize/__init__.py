@@ -1,0 +1,26 @@
+"""Quantization schemes: the paper's mixed-resolution + all benchmarks."""
+from .aquila import AquilaQuantizer, aquila_quantize
+from .base import QuantResult, Quantizer, flatten_pytree, unflatten_pytree
+from .classic import ClassicQuantizer
+from .laq import LAQQuantizer, LAQState, laq_quantize
+from .mixed_resolution import (MixedResolutionQuantizer, lemma1_bound,
+                               mixed_resolution_quantize)
+from .packing import pack_codes, pack_signs, unpack_codes, unpack_signs
+from .static_budget import (StaticPayload, static_budget_decode,
+                            static_budget_encode, static_budget_roundtrip,
+                            wire_bits)
+from .topq import TopQQuantizer, topq_quantize
+
+QUANTIZERS = {
+    "mixed-resolution": MixedResolutionQuantizer,
+    "classic": ClassicQuantizer,
+    "laq": LAQQuantizer,
+    "aquila": AquilaQuantizer,
+    "top-q": TopQQuantizer,
+}
+
+
+def make_quantizer(name: str, **kwargs) -> Quantizer:
+    if name not in QUANTIZERS:
+        raise KeyError(f"unknown quantizer {name!r}; have {list(QUANTIZERS)}")
+    return QUANTIZERS[name](**kwargs)

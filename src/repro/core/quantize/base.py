@@ -1,0 +1,62 @@
+"""Quantizer interface shared by the paper's scheme and all benchmarks.
+
+A quantizer maps a local gradient (delta) vector ``delta`` to
+``(recon, bits)`` where ``recon`` is the server-side reconstruction
+(what arrives after dequantization) and ``bits`` is the number of bits
+the user must transmit for that vector in that iteration.  Everything
+is pure-functional jnp so the quantizers compose with jit/vmap and with
+the distributed aggregation path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantResult:
+    """Outcome of quantizing one local delta vector."""
+
+    recon: jax.Array        # dequantized vector, same shape as the input
+    bits: jax.Array         # scalar — total payload bits for this vector
+    aux: Dict[str, Any]     # scheme-specific diagnostics (s fraction, ...)
+
+
+class Quantizer:
+    """Stateless quantizer base.  Subclasses implement __call__.
+
+    Stateful schemes (LAQ keeps per-user reference copies) thread their
+    state explicitly: ``__call__(delta, state) -> (QuantResult, state)``.
+    """
+
+    name: str = "base"
+
+    def init_state(self, dim: int) -> Any:  # noqa: D401
+        """Per-user state (None for stateless schemes)."""
+        return None
+
+    def __call__(self, delta: jax.Array, state: Any = None
+                 ) -> Tuple[QuantResult, Any]:
+        raise NotImplementedError
+
+
+def flatten_pytree(tree) -> Tuple[jax.Array, Any]:
+    """Flatten a pytree of arrays into one 1-D vector + treedef/aux."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(jnp.size(l)) for l in leaves]
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+    return flat, (treedef, shapes, sizes)
+
+
+def unflatten_pytree(flat: jax.Array, spec) -> Any:
+    treedef, shapes, sizes = spec
+    leaves = []
+    offset = 0
+    for shape, size in zip(shapes, sizes):
+        leaves.append(jnp.reshape(flat[offset:offset + size], shape))
+        offset += size
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,19 @@
+"""Classic FL baseline: full-precision (32-bit) transmission."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax.numpy as jnp
+
+from .base import QuantResult, Quantizer
+
+
+class ClassicQuantizer(Quantizer):
+    """No compression — every element costs 32 bits."""
+
+    name = "classic"
+
+    def __call__(self, delta, state: Any = None) -> Tuple[QuantResult, Any]:
+        bits = jnp.asarray(32.0 * delta.size)
+        return QuantResult(recon=delta.astype(jnp.float32), bits=bits,
+                           aux={"s": jnp.asarray(1.0)}), state

@@ -1,0 +1,85 @@
+"""LAQ — Lazily Aggregated Quantized Gradients [Sun et al., TPAMI 2022].
+
+Each user quantizes the *innovation* of its local gradient relative to
+the most recently transmitted quantized gradient, with b-bit uniform
+quantization on a grid of radius ``||innovation||_inf``.  A user skips
+the upload entirely (lazy aggregation) when the innovation energy is
+small relative to the recent history of quantized-update energies:
+
+    ||Q(g_t) - q_{t-1}||^2 <= (xi / D) * sum_{d=1..D} e_{t-d} + 3 eps_t
+
+(we use the simplified energy rule with the 3*eps slack dropped and a
+configurable laziness factor xi).  A skipped round costs 0 payload bits;
+the server reuses the user's last transmitted value.
+
+State per user: (last transmitted quantized gradient, D recent update
+energies).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from .base import QuantResult, Quantizer
+
+
+class LAQState(NamedTuple):
+    last_sent: jnp.ndarray     # last transmitted quantized vector
+    energies: jnp.ndarray      # ring buffer of D recent update energies
+    ptr: jnp.ndarray           # ring pointer
+
+
+def _uniform_quantize(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    """b-bit uniform quantization on [-r, r], r = ||x||_inf."""
+    r = jnp.max(jnp.abs(x))
+    safe_r = jnp.where(r > 0, r, 1.0)
+    levels = 2 ** (b - 1) - 1          # symmetric grid incl. sign
+    step = safe_r / levels
+    q = jnp.round(x / step) * step
+    return jnp.where(r > 0, q, jnp.zeros_like(x))
+
+
+def laq_quantize(delta: jnp.ndarray, state: LAQState, b: int, xi: float
+                 ) -> Tuple[QuantResult, LAQState]:
+    x = delta.astype(jnp.float32)
+    d = x.size
+    innovation = x - state.last_sent
+    q_innov = _uniform_quantize(innovation, b)
+    candidate = state.last_sent + q_innov
+    energy = jnp.sum(q_innov ** 2)
+
+    hist = jnp.mean(state.energies)
+    # lazy rule: skip when the innovation energy is below xi * history.
+    # First rounds (hist == 0) always transmit.
+    skip = jnp.logical_and(hist > 0, energy <= xi * hist)
+
+    recon = jnp.where(skip, state.last_sent, candidate)
+    bits = jnp.where(skip, 0.0, float(d) * b + 32.0)
+
+    new_energies = state.energies.at[state.ptr].set(
+        jnp.where(skip, state.energies[state.ptr], energy))
+    new_ptr = jnp.where(skip, state.ptr,
+                        (state.ptr + 1) % state.energies.size)
+    new_state = LAQState(last_sent=recon, energies=new_energies, ptr=new_ptr)
+    aux = {"s": jnp.asarray(1.0), "skipped": skip, "energy": energy}
+    return QuantResult(recon=recon, bits=bits, aux=aux), new_state
+
+
+class LAQQuantizer(Quantizer):
+    name = "laq"
+
+    def __init__(self, b: int = 4, xi: float = 0.8, history: int = 10):
+        self.b = int(b)
+        self.xi = float(xi)
+        self.history = int(history)
+
+    def init_state(self, dim: int) -> LAQState:
+        return LAQState(last_sent=jnp.zeros((dim,), jnp.float32),
+                        energies=jnp.zeros((self.history,), jnp.float32),
+                        ptr=jnp.asarray(0, jnp.int32))
+
+    def __call__(self, delta, state: Any = None) -> Tuple[QuantResult, Any]:
+        if state is None:
+            state = self.init_state(delta.size)
+        return laq_quantize(delta, state, self.b, self.xi)

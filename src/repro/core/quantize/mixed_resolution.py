@@ -1,0 +1,129 @@
+"""Adaptive mixed-resolution quantization — the paper's §II-C scheme.
+
+Element-wise two-category quantization of a local gradient vector
+``delta`` (d elements):
+
+* high-resolution — elements with ``|x_i| / ||x||_inf >= lambda_`` are
+  uniformly quantized with ``b`` bits on the grid ``[dw_q, ||x||_inf]``
+  of radius ``r = ||x||_inf - dw_q``, where ``dw_q`` is the smallest
+  magnitude among high-resolution elements (eq. 6-7);
+* low-resolution — every other element is sent as a single sign bit and
+  reconstructed as ``± dw_q_hat / 2`` (eq. 8).
+
+Total payload (eq. below (7)): ``b_t = d (b s + 1 - s) + 32`` bits with
+``s = dbar / d`` the high-resolution fraction; 32 bits carry the grid
+radius.  Lemma 1 bounds the error: ``||delta - recon||_inf <=
+c(lambda_, b) ||delta||_inf`` — property-tested in tests/test_quantize.py.
+
+Faithfulness notes:
+* the paper transmits ``r`` in 32 bits; reconstructing also needs the
+  grid anchor ``dw_q`` (or equivalently ``||x||_inf``).  We follow the
+  paper's bit accounting (+32) and note the extra scalar would add 32
+  bits — immaterial at d >= 1e4.
+* ``dw_q`` lies on the grid by construction so ``dw_q_hat == dw_q``;
+  Lemma 1's slack for a quantized anchor is therefore not exercised.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax.numpy as jnp
+
+from .base import QuantResult, Quantizer
+
+_F32_BITS = 32.0
+
+
+def lemma1_bound(lambda_: float, b: int) -> float:
+    """The constant ``c_j`` of Lemma 1, eq. (9) — as printed in the paper.
+
+    REPRO FINDING: the paper's low-resolution branch (Appendix A,
+    eq. 17) bounds ``eps_i = x_i - dw_q/2`` only from above, using
+    ``dw_q >= lambda ||x||_inf``.  When the magnitude spectrum has a
+    *gap* at the threshold (``dw_q >> lambda ||x||_inf``) the other
+    side dominates: a near-zero element is reconstructed as
+    ``+- dw_q / 2``, giving ``|eps| = dw_q/2`` which can exceed
+    ``c_j ||x||_inf``.  Eq. (9) therefore holds under the implicit
+    no-gap condition ``dw_q <= (lambda + 2 c_j) ||x||_inf`` — true for
+    dense magnitude spectra (the regime of real gradient deltas in the
+    paper's experiments) but not universally.  See
+    :func:`lemma1_bound_realized` for the always-valid data-dependent
+    constant; both are property-tested.
+    """
+    hi = (1.0 - lambda_) / (2.0 * (2 ** b - 1))
+    lo = lambda_ / 2.0 + (1.0 - lambda_) / (4.0 * (2 ** b - 1))
+    return max(lo, hi)
+
+
+def lemma1_bound_realized(lambda_: float, b: int, rho: float) -> float:
+    """Corrected Lemma 1 constant given ``rho = dw_q / ||x||_inf``.
+
+    * high-res: ``|eps| <= (1 - rho) / (2 (2^b - 1)) ||x||_inf``
+      (grid radius is ``(1 - rho)||x||_inf``);
+    * low-res:  ``|eps| <= max(rho / 2, lambda - rho / 2) ||x||_inf``
+      (element in ``[0, lambda ||x||_inf)`` reconstructed at
+      ``rho ||x||_inf / 2``).
+
+    Reduces to eq. (9)'s low branch when ``rho == lambda`` (no gap).
+    """
+    hi = (1.0 - rho) / (2.0 * (2 ** b - 1))
+    lo = max(rho / 2.0, lambda_ - rho / 2.0)
+    return max(lo, hi)
+
+
+def mixed_resolution_quantize(delta: jnp.ndarray, lambda_: float, b: int
+                              ) -> QuantResult:
+    """Quantize one flat vector.  Pure jnp; jit/vmap friendly."""
+    x = delta.astype(jnp.float32)
+    d = x.size
+    absx = jnp.abs(x)
+    inf = jnp.max(absx)
+    safe_inf = jnp.where(inf > 0, inf, 1.0)
+
+    hi_mask = (absx / safe_inf) >= lambda_          # eq. (6)
+    dbar = jnp.sum(hi_mask)
+    # smallest high-resolution magnitude = grid anchor dw_q
+    dw_q = jnp.min(jnp.where(hi_mask, absx, jnp.inf))
+    dw_q = jnp.where(jnp.isfinite(dw_q), dw_q, 0.0)
+    r = inf - dw_q                                   # grid radius
+    levels = 2 ** b - 1
+    step = r / levels
+    safe_step = jnp.where(step > 0, step, 1.0)
+
+    # high-resolution reconstruction: b-bit uniform grid on [dw_q, inf]
+    code = jnp.round((absx - dw_q) / safe_step)
+    q_mag = dw_q + code * step                       # exact when step == 0
+    hi_recon = jnp.sign(x) * q_mag
+
+    # low-resolution reconstruction: sign bit -> +- dw_q_hat / 2 (eq. 8)
+    # sign convention per eq. (7): bit 1 <=> x > 0, bit 0 <=> x <= 0.
+    lo_recon = jnp.where(x > 0, dw_q / 2.0, -dw_q / 2.0)
+
+    recon = jnp.where(hi_mask, hi_recon, lo_recon)
+    recon = jnp.where(inf > 0, recon, jnp.zeros_like(x))
+
+    s = dbar / d
+    bits = d * (b * s + 1.0 - s) + _F32_BITS
+    bits = jnp.where(inf > 0, bits, d + _F32_BITS)   # all-sign when zero
+    aux = {"s": s, "dbar": dbar, "r": r, "dw_q": dw_q, "inf": inf}
+    return QuantResult(recon=recon, bits=bits, aux=aux)
+
+
+class MixedResolutionQuantizer(Quantizer):
+    """Paper quantizer with per-user threshold lambda_ and bit width b."""
+
+    name = "mixed-resolution"
+
+    def __init__(self, lambda_: float = 0.2, b: int = 10):
+        if not (0.0 <= lambda_ <= 1.0):
+            raise ValueError(f"lambda_ must be in [0,1], got {lambda_}")
+        if b < 2:
+            raise ValueError(f"b must be >= 2, got {b}")
+        self.lambda_ = float(lambda_)
+        self.b = int(b)
+
+    def __call__(self, delta, state: Any = None) -> Tuple[QuantResult, Any]:
+        return mixed_resolution_quantize(delta, self.lambda_, self.b), state
+
+    def error_bound(self) -> float:
+        return lemma1_bound(self.lambda_, self.b)

@@ -1,0 +1,56 @@
+"""Bit-packing for wire-format payloads (pure jnp reference).
+
+These are the reference implementations of the packed planes the
+distributed aggregation path sends over ICI collectives; the Pallas
+kernels in ``repro.kernels`` implement the same transforms with VMEM
+block tiling and are checked against these functions.
+
+* sign plane — 1 bit per element, 32 elements per uint32 word;
+* code plane — ``b``-bit unsigned codes packed ``32 // b`` per uint32
+  (b must divide 32 for the packed path: b in {2,4,8,16}).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _pad_to(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    pad = (-x.shape[-1]) % multiple
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x
+
+
+def pack_signs(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack sign bits (1 <=> x > 0) of a 1-D float vector into uint32."""
+    bits = (x > 0).astype(jnp.uint32)
+    bits = _pad_to(bits, 32).reshape(-1, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_signs(words: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Inverse of pack_signs -> float32 vector of +1 / -1 (length d)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts) & jnp.uint32(1)
+    signs = bits.reshape(-1)[:d].astype(jnp.float32) * 2.0 - 1.0
+    return signs
+
+
+def pack_codes(codes: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Pack b-bit unsigned integer codes (uint32 values < 2**b) into words."""
+    if 32 % b != 0:
+        raise ValueError(f"b must divide 32, got {b}")
+    per = 32 // b
+    codes = _pad_to(codes.astype(jnp.uint32), per).reshape(-1, per)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * b).astype(jnp.uint32)
+    return jnp.sum(codes << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_codes(words: jnp.ndarray, b: int, n: int) -> jnp.ndarray:
+    """Inverse of pack_codes -> uint32 codes (length n)."""
+    per = 32 // b
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * b).astype(jnp.uint32)
+    mask = jnp.uint32(2 ** b - 1)
+    codes = (words[:, None] >> shifts) & mask
+    return codes.reshape(-1)[:n]

@@ -1,0 +1,42 @@
+"""Top-q sparsification benchmark [Wangni et al., NeurIPS 2018].
+
+Only the q-fraction largest-magnitude entries are transmitted; each
+kept entry costs 32 value bits + ceil(log2 d) index bits; dropped
+entries are reconstructed as zero.  The paper compares against Top-q
+with q matched to the mixed-resolution scheme's measured s.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax.numpy as jnp
+
+from .base import QuantResult, Quantizer
+
+
+def topq_quantize(delta: jnp.ndarray, q: float) -> QuantResult:
+    x = delta.astype(jnp.float32)
+    d = x.size
+    k = max(1, int(math.ceil(q * d)))
+    absx = jnp.abs(x)
+    # threshold = k-th largest magnitude; keep everything >= it
+    thresh = jnp.sort(absx)[d - k]
+    mask = absx >= thresh
+    recon = jnp.where(mask, x, 0.0)
+    idx_bits = math.ceil(math.log2(max(d, 2)))
+    bits = jnp.asarray(float(k) * (32.0 + idx_bits))
+    return QuantResult(recon=recon, bits=bits,
+                       aux={"s": jnp.asarray(k / d), "k": k})
+
+
+class TopQQuantizer(Quantizer):
+    name = "top-q"
+
+    def __init__(self, q: float = 0.01):
+        if not (0.0 < q <= 1.0):
+            raise ValueError(f"q must be in (0,1], got {q}")
+        self.q = float(q)
+
+    def __call__(self, delta, state: Any = None) -> Tuple[QuantResult, Any]:
+        return topq_quantize(delta, self.q), state

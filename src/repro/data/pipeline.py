@@ -1,0 +1,48 @@
+"""Token-stream data pipeline for the distributed-training examples:
+deterministic sharded batching with host-side prefetch."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+class TokenBatcher:
+    """Yields {tokens: [B, S]} batches from a flat token stream,
+    deterministically, dropping the tail."""
+
+    def __init__(self, stream: np.ndarray, batch: int, seq: int,
+                 seed: int = 0):
+        self.stream, self.batch, self.seq = stream, batch, seq
+        self.rng = np.random.default_rng(seed)
+        self.per = len(stream) // (seq + 1)
+
+    def __iter__(self) -> Iterator[dict]:
+        order = self.rng.permutation(self.per)
+        for i in range(0, self.per - self.batch + 1, self.batch):
+            rows = order[i:i + self.batch]
+            toks = np.stack([self.stream[r * (self.seq + 1):
+                                         r * (self.seq + 1) + self.seq]
+                             for r in rows])
+            yield {"tokens": toks.astype(np.int32)}
+
+
+def prefetch(it: Iterator, depth: int = 2) -> Iterator:
+    """Host-side background prefetch."""
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    sentinel = object()
+
+    def worker():
+        for item in it:
+            q.put(item)
+        q.put(sentinel)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is sentinel:
+            return
+        yield item

@@ -1,0 +1,2 @@
+from .cnn import cnn_accuracy, cnn_forward, cnn_loss, init_cnn
+from .loop import FLConfig, FLResult, RoundLog, run_fl

@@ -1,0 +1,54 @@
+"""The paper's CNN (§IV) in pure JAX: Conv(32,3x3)+ReLU -> MaxPool(2x2)
+-> Flatten -> Dense(64)+ReLU -> Dense(n_classes)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import PaperCNNConfig
+
+
+def init_cnn(key, cfg: PaperCNNConfig) -> Dict[str, jnp.ndarray]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    fan1 = 3 * 3 * cfg.channels
+    return {
+        "conv_w": jax.random.normal(k1, (3, 3, cfg.channels,
+                                         cfg.conv_filters)) / jnp.sqrt(fan1),
+        "conv_b": jnp.zeros((cfg.conv_filters,)),
+        "dense1_w": jax.random.normal(k2, (cfg.flat_dim, cfg.dense_units))
+        / jnp.sqrt(cfg.flat_dim),
+        "dense1_b": jnp.zeros((cfg.dense_units,)),
+        "dense2_w": jax.random.normal(k3, (cfg.dense_units, cfg.n_classes))
+        / jnp.sqrt(cfg.dense_units),
+        "dense2_b": jnp.zeros((cfg.n_classes,)),
+    }
+
+
+def cnn_forward(params: Dict[str, jnp.ndarray], x: jnp.ndarray
+                ) -> jnp.ndarray:
+    """x: [B, H, W, C] -> logits [B, n_classes]."""
+    h = jax.lax.conv_general_dilated(
+        x, params["conv_w"], window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["conv_b"]
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["dense1_w"] + params["dense1_b"])
+    return h @ params["dense2_w"] + params["dense2_b"]
+
+
+def cnn_loss(params, x, y) -> jnp.ndarray:
+    logits = cnn_forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def cnn_accuracy(params, x, y, batch: int = 512) -> float:
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = cnn_forward(params, x[i:i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + batch]))
+    return correct / x.shape[0]

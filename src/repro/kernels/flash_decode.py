@@ -1,0 +1,94 @@
+"""Flash-decode attention kernel: ONE query token against a long KV
+cache with online softmax over KV blocks.
+
+This is the serve-path hot spot for decode_32k / long_500k: memory-
+bound streaming of the KV cache through VMEM with an O(1) running
+(m, l, acc) state — the TPU adaptation of flash-decoding.  GQA is
+handled by blocking over kv heads and carrying the whole query group
+(G = H / Hkv) per kv head.
+
+Grid: (B, Hkv, S/block) with the KV-block dimension innermost; the
+running max / normalizer / accumulator live in VMEM scratch across the
+KV-block iterations (initialized at block 0, emitted at the last
+block).  Cache positions >= ``length`` (scalar) are masked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+KV_BLOCK = 512
+
+
+def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
+                         m_ref, l_ref, acc_ref, *, kv_block: int):
+    s = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bs, D]
+    v = v_ref[0, 0].astype(jnp.float32)            # [bs, Dv]
+    length = len_ref[0]
+
+    scores = jnp.dot(q, k.T,
+                     preferred_element_type=jnp.float32)    # [G, bs]
+    scores = scores / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    pos = s * kv_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                  scores.shape, 1)
+    scores = jnp.where(pos < length, scores, -jnp.inf)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)          # [G, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(jnp.where(jnp.isfinite(scores),
+                          scores - m_safe, -jnp.inf))        # [G, bs]
+    scale = jnp.where(jnp.isfinite(m_prev),
+                      jnp.exp(m_prev - m_safe), 0.0)         # [G, 1]
+    l_new = l_prev * scale + jnp.sum(p, -1, keepdims=True)
+    acc_new = acc_prev * scale + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)            # [G, Dv]
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(s == n_s - 1)
+    def _emit():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0, 0] = out.astype(out_ref.dtype)
+
+
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 length: jnp.ndarray, *, kv_block: int = KV_BLOCK,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hkv, G, D]; k: [B, Hkv, S, D]; v: [B, Hkv, S, Dv];
+    length: scalar int32.  Returns [B, Hkv, G, Dv]."""
+    B, Hkv, G, D = q.shape
+    S = k.shape[2]
+    Dv = v.shape[-1]
+    bs = min(kv_block, S)
+    assert S % bs == 0, (S, bs)
+    grid = (B, Hkv, S // bs)
+    kernel = functools.partial(_flash_decode_kernel, kv_block=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda b, h, s: (0,)),
+                  pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+                  pl.BlockSpec((1, 1, bs, D), lambda b, h, s: (b, h, s, 0)),
+                  pl.BlockSpec((1, 1, bs, Dv), lambda b, h, s: (b, h, s, 0))],
+        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, Dv), jnp.float32)],
+        interpret=interpret,
+    )(length.reshape(1), q, k, v)

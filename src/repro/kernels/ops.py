@@ -1,0 +1,60 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU backends (this container) and
+False on TPU, so the same call sites work in both environments.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_decode import flash_decode as _flash_decode
+from .quant_pack import sign_dequant_reduce as _sdr
+from .quant_pack import signpack as _signpack
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def signpack_op(x: jnp.ndarray, interpret: bool | None = None
+                ) -> jnp.ndarray:
+    """Pack the sign plane of a flat f32 vector.
+
+    x: [d] f32 with d % 128 == 0  ->  [d/32] uint32 (viewed flat)."""
+    interp = _default_interpret() if interpret is None else interpret
+    words = _signpack(x.reshape(-1, 128), interpret=interp)
+    return words.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sign_dequant_reduce_op(words: jnp.ndarray, scales: jnp.ndarray,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """words: [G, d/32] u32, scales: [G] -> [d] f32 weighted sign sum."""
+    interp = _default_interpret() if interpret is None else interpret
+    G = words.shape[0]
+    out = _sdr(words.reshape(G, -1, 4), scales, interpret=interp)
+    return out.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "kv_block"))
+def flash_decode_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    length: jnp.ndarray, kv_block: int = 512,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Single-token GQA decode attention.
+
+    q: [B, H, D]; k/v: [B, S, Hkv, D(v)]; length: scalar int32.
+    Returns [B, H, Dv]."""
+    interp = _default_interpret() if interpret is None else interpret
+    B, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    kt = k.transpose(0, 2, 1, 3)     # [B, Hkv, S, D]
+    vt = v.transpose(0, 2, 1, 3)
+    out = _flash_decode(qg, kt, vt, length, kv_block=kv_block,
+                        interpret=interp)
+    return out.reshape(B, H, -1)

@@ -1,0 +1,85 @@
+"""Pallas TPU kernels for the quantized-aggregation wire format.
+
+These are the bandwidth-bound hot spots of the paper's technique at
+datacenter scale: packing the 1-bit sign plane of a 10^8-element delta
+shard, and the fused multi-peer dequantize+weighted-reduce after the
+all-gather.  Both are elementwise streaming transforms -> VMEM-tiled
+elementwise kernels with 128-lane last dims.
+
+Layout convention: the flat f32 vector is viewed as [W, 128] (W = d /
+128 rows); its packed sign plane is [W, 4] uint32 (4 words x 32 bits =
+128 lanes).  The host-side reshape is free (layout-only).
+
+TARGET is TPU (pl.pallas_call + BlockSpec); on this CPU-only container
+the kernels run and are validated under interpret=True (see ops.py and
+tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256            # rows of 128 lanes per VMEM tile
+
+
+def _signpack_kernel(x_ref, out_ref):
+    """x_ref: [bm, 128] f32 -> out_ref: [bm, 4] uint32."""
+    x = x_ref[...]
+    bits = (x > 0).astype(jnp.uint32).reshape(x.shape[0], 4, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    out_ref[...] = jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def signpack(x: jnp.ndarray, *, interpret: bool = False,
+             block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """x: [W, 128] f32 -> [W, 4] uint32 packed sign plane."""
+    W = x.shape[0]
+    bm = min(block_rows, W)
+    assert W % bm == 0, (W, bm)
+    return pl.pallas_call(
+        _signpack_kernel,
+        grid=(W // bm,),
+        in_specs=[pl.BlockSpec((bm, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((W, 4), jnp.uint32),
+        interpret=interpret,
+    )(x)
+
+
+def _sign_dequant_reduce_kernel(words_ref, scales_ref, out_ref):
+    """words_ref: [G, bm, 4] u32; scales_ref: [G, 1] f32;
+    out_ref: [bm, 128] f32 = sum_g scale_g * signs_g."""
+    words = words_ref[...]
+    G, bm, _ = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, None, :]
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)     # [G,bm,4,32]
+    signs = bits.astype(jnp.float32) * 2.0 - 1.0
+    signs = signs.reshape(G, bm, 128)
+    scales = scales_ref[...].reshape(G)                     # [G]
+    out_ref[...] = jnp.einsum("g,gwl->wl", scales, signs,
+                              preferred_element_type=jnp.float32)
+
+
+def sign_dequant_reduce(words: jnp.ndarray, scales: jnp.ndarray, *,
+                        interpret: bool = False,
+                        block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """words: [G, W, 4] u32, scales: [G] f32 -> [W, 128] f32.
+
+    Fuses per-peer sign unpacking with the rho-weighted reduction over
+    peers: the G x d intermediate float planes never hit HBM.
+    """
+    G, W, _ = words.shape
+    bm = min(block_rows, W)
+    assert W % bm == 0, (W, bm)
+    return pl.pallas_call(
+        _sign_dequant_reduce_kernel,
+        grid=(W // bm,),
+        in_specs=[pl.BlockSpec((G, bm, 4), lambda i: (0, i, 0)),
+                  pl.BlockSpec((G, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bm, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((W, 128), jnp.float32),
+        interpret=interpret,
+    )(words, scales.reshape(G, 1))

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground
+truth for the interpret-mode kernel tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def signpack_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: [W, 128] f32 -> words [W, 4] uint32 (bit j of word w,c is the
+    sign of x[w, 32*c + j]; 1 <=> positive)."""
+    W = x.shape[0]
+    bits = (x > 0).astype(jnp.uint32).reshape(W, 4, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def sign_dequant_reduce_ref(words: jnp.ndarray, scales: jnp.ndarray
+                            ) -> jnp.ndarray:
+    """Fused multi-peer sign dequantization + weighted reduce.
+
+    words: [G, W, 4] uint32 (per-peer packed sign planes);
+    scales: [G] f32 (rho_g * dw_q_g / 2 per peer).
+    Returns [W, 128] f32 = sum_g scales[g] * (+-1 bits of peer g).
+    """
+    G, W, _ = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)      # [G,W,4,32]
+    signs = bits.astype(jnp.float32) * 2.0 - 1.0
+    signs = signs.reshape(G, W, 128)
+    return jnp.einsum("g,gwl->wl", scales, signs)
+
+
+def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     length: jnp.ndarray) -> jnp.ndarray:
+    """Single-token decode attention oracle.
+
+    q: [B, Hkv, G, D]; k: [B, Hkv, S, D]; v: [B, Hkv, S, Dv];
+    length: scalar int32 — positions >= length are masked out.
+    Returns [B, Hkv, G, Dv].
+    """
+    S = k.shape[2]
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(q.shape[-1])
+    mask = jnp.arange(S) < length
+    scores = jnp.where(mask[None, None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhgs,bhsv->bhgv", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh, record memory / cost / collective statistics.
+
+This file MUST set --xla_force_host_platform_device_count before any
+other import (jax locks the device count at first init), hence the
+unusual import order above.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch granite-3-8b --shape train_4k --mesh single \
+        [--compressor mixed|none] [--out runs/dryrun]
+
+One (arch, shape, mesh) per process: compile state is isolated and a
+single failure cannot take down the sweep (launch/runner.py drives the
+full matrix).
+"""
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.dist import (CompressorConfig, TrainHParams,  # noqa: E402
+                        build_decode_step, build_prefill_step,
+                        build_train_step, decode_cache_shape,
+                        decode_shardings, microbatch, param_shardings,
+                        train_input_shardings)
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.inputs import input_specs, supports  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import init_model  # noqa: E402
+from repro.models.config import INPUT_SHAPES  # noqa: E402
+
+
+def abstract_params(cfg):
+    """Parameter ShapeDtypeStructs — no allocation."""
+    return jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg))
+
+
+def count_params(params_shape) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params_shape):
+        n = 1
+        for s in leaf.shape:
+            n *= int(s)
+        total += n
+    return total
+
+
+def active_param_count(cfg, params_shape) -> int:
+    """MoE: experts contribute top_k / num_experts of their params."""
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    for path, leaf in flat:
+        p = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                     for q in path)
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if "/moe/" in p and p.split("/")[-1] in ("w_gate", "w_up",
+                                                 "w_down"):
+            n = int(n * cfg.top_k / max(cfg.num_experts_padded, 1))
+        total += n
+    return total
+
+
+def run_dryrun(arch: str, shape_name: str, multi_pod: bool,
+               compressor: str = "mixed", s_budget: float = 0.01,
+               bits: int = 4, l_local: int = 1) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not supports(cfg, shape):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "documented skip (DESIGN.md §Arch-applicability)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    params_shape = abstract_params(cfg)
+    n_params = count_params(params_shape)
+    n_active = active_param_count(cfg, params_shape)
+
+    if shape.kind == "train":
+        hp = TrainHParams(L_local=l_local, compressor=CompressorConfig(
+            kind=compressor, s_budget=s_budget, bits=bits))
+        step = build_train_step(cfg, mesh, shape, hp)
+        batch = microbatch(input_specs(cfg, shape, abstract=True),
+                           hp.L_local)
+        ps, bs = train_input_shardings(cfg, mesh, shape, params_shape,
+                                       batch)
+        lowered = jax.jit(step, in_shardings=(ps, bs)).lower(
+            params_shape, batch)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        step = build_prefill_step(cfg, mesh, shape)
+        batch = input_specs(cfg, shape, abstract=True)
+        ps = param_shardings(params_shape, cfg, mesh)
+        from repro.dist.sharding import batch_shardings
+        bs = batch_shardings(batch, mesh, shape)
+        lowered = jax.jit(step, in_shardings=(ps, bs)).lower(
+            params_shape, batch)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:  # decode
+        step = build_decode_step(cfg, mesh, shape)
+        cache_shape = decode_cache_shape(cfg, shape)
+        ps, cs, ts, isd = decode_shardings(cfg, mesh, shape, params_shape)
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        idx = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = jax.jit(step, in_shardings=(ps, cs, ts, isd),
+                          out_shardings=(None, cs)).lower(
+            params_shape, cache_shape, tok, idx)
+        model_flops = 2.0 * n_active * shape.global_batch
+    t_lower = time.time() - t0
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo)   # trip-count-aware per-device stats
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "compressor": compressor,
+        "n_devices": mesh.devices.size,
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "model_flops": model_flops,
+        "flops": stats["flops"],
+        "hbm_bytes": stats["hbm_bytes"],
+        "bytes_written": stats["bytes_written"],
+        "param_bytes": stats["param_bytes"],
+        "collective_bytes": stats["collective_bytes"],
+        "collective_breakdown": stats["collective_breakdown"],
+        "xla_flops_body_once": float(cost.get("flops", 0.0)),
+        "xla_bytes_body_once": float(cost.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    }
+    return result
+
+
+def _run_one(arch, shape, mesh, compressor, s_budget, bits, out,
+             l_local=1):
+    os.makedirs(out, exist_ok=True)
+    tag = f"{arch}__{shape}__{mesh}__{compressor}"
+    path = os.path.join(out, tag + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        if prev.get("status") in ("ok", "skipped"):
+            print(f"[skip existing] {tag}")
+            return prev
+    t0 = time.time()
+    try:
+        res = run_dryrun(arch, shape, mesh == "multi",
+                         compressor, s_budget, bits, l_local)
+    except Exception as e:  # recorded, not raised: the sweep continues
+        res = {"arch": arch, "shape": shape, "mesh": mesh,
+               "compressor": compressor, "status": "error",
+               "error": str(e)[-2000:],
+               "traceback": traceback.format_exc()[-4000:]}
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    brief = {k: res.get(k) for k in
+             ("arch", "shape", "mesh", "status", "flops",
+              "collective_bytes", "compile_s", "error")}
+    brief["wall_s"] = round(time.time() - t0, 1)
+    print(json.dumps(brief))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="one arch id, or comma list, or 'all'")
+    ap.add_argument("--shape", default=None,
+                    help="one shape, comma list, or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--compressor", default="mixed",
+                    choices=["mixed", "none"])
+    ap.add_argument("--s-budget", type=float, default=0.01)
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--l-local", type=int, default=1)
+    ap.add_argument("--out", default="runs/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS
+    archs = ARCH_IDS if args.arch in (None, "all") \
+        else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape in (None, "all") \
+        else args.shape.split(",")
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            res = _run_one(arch, shape, args.mesh, args.compressor,
+                           args.s_budget, args.bits, args.out,
+                           args.l_local)
+            failures += res.get("status") == "error"
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

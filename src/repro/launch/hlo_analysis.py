@@ -1,0 +1,215 @@
+"""Trip-count-aware analysis of compiled (post-SPMD) HLO text.
+
+XLA's ``cost_analysis()`` visits every computation ONCE — a
+scan-over-layers body is counted a single time, which would understate
+FLOPs/bytes/collectives by the layer count.  This walker multiplies
+``while`` bodies by their ``known_trip_count`` backend_config (emitted
+by XLA for counted loops, i.e. every lax.scan).
+
+Per-device statistics extracted:
+* flops            — 2 * prod(out) * prod(contracting dims) per dot
+                     (matmul-dominated models; elementwise flops are
+                     not counted — documented approximation);
+* bytes_written    — sum of op output sizes at fusion granularity;
+                     HBM traffic ~ 2x this (read+write), plus ENTRY
+                     parameter reads, reported as hbm_bytes;
+* collective_bytes — output sizes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute,
+                     trip-multiplied, with a per-op breakdown.
+
+All shapes in post-partitioning HLO are per-device, so every number
+here is per-device per-step.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%([\w.\-]+), body=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BOOKKEEPING = ("parameter(", "get-tuple-element(", "tuple(", "constant(",
+                "bitcast(", "after-all(", "partition-id(")
+
+
+def _shape_list_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(m.group(1), 4)
+    return total
+
+
+def _first_shape(text: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) \
+        else ()
+    return m.group(1), dims
+
+
+class _Comp:
+    def __init__(self, name):
+        self.name = name
+        self.lines = []
+        self.symbols: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+
+
+def _parse_computations(text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = _Comp(m.group(2))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        cur.lines.append(line.strip())
+        dm = _DEF_RE.match(line.strip())
+        if dm:
+            shape = _first_shape(dm.group(2))
+            if shape:
+                cur.symbols[dm.group(1)] = shape
+    return comps
+
+
+def _dot_flops(rhs: str, symbols: Dict) -> float:
+    """rhs: 'f32[a,b] dot(%x, %y), lhs_contracting_dims={1}, ...'"""
+    out = _first_shape(rhs)
+    if out is None:
+        return 0.0
+    out_elems = 1
+    for d in out[1]:
+        out_elems *= d
+    m = re.search(r"dot\(%?([\w.\-]+)", rhs)
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+    if not m or not cm:
+        return 0.0
+    lhs_shape = symbols.get(m.group(1))
+    if lhs_shape is None:
+        return 2.0 * out_elems  # unknown operand: degenerate estimate
+    contract = 1
+    if cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_shape[1]):
+                contract *= lhs_shape[1][i]
+    return 2.0 * out_elems * contract
+
+
+def analyze_hlo(text: str) -> Dict:
+    comps = _parse_computations(text)
+    memo: Dict[str, Dict] = {}
+
+    def walk(name: str) -> Dict:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        stats = {"flops": 0.0, "bytes_written": 0.0,
+                 "collective_bytes": 0.0,
+                 "coll": defaultdict(float)}
+        memo[name] = stats  # pre-insert (defensive vs cycles)
+        if comp is None:
+            return stats
+        for line in comp.lines:
+            dm = _DEF_RE.match(line)
+            rhs = dm.group(2) if dm else line
+
+            # --- collectives ---
+            for op in _COLL_OPS:
+                if re.search(rf"\s{op}(-start)?\(", rhs) or \
+                        rhs.startswith(f"{op}("):
+                    head = rhs.split(op)[0]
+                    b = _shape_list_bytes(head)
+                    stats["collective_bytes"] += b
+                    stats["coll"][op] += b
+                    break
+
+            # --- dots ---
+            if re.search(r"\sdot\(", rhs):
+                stats["flops"] += _dot_flops(rhs, comp.symbols)
+
+            # --- sub-computations ---
+            wm = _WHILE_RE.search(rhs)
+            if wm and " while(" in rhs:
+                tm = _TRIP_RE.search(rhs)
+                trip = int(tm.group(1)) if tm else 1
+                sub = walk(wm.group(2))
+                cond = walk(wm.group(1))
+                for k in ("flops", "bytes_written", "collective_bytes"):
+                    stats[k] += trip * (sub[k] + cond[k])
+                for k, v in sub["coll"].items():
+                    stats["coll"][k] += trip * v
+                continue
+            cm = _CALLS_RE.search(rhs)
+            if cm:
+                sub = walk(cm.group(1))
+                # fusion: flops/collectives from inside; bytes at the
+                # fusion boundary only (sub-ops live in registers)
+                stats["flops"] += sub["flops"]
+                stats["collective_bytes"] += sub["collective_bytes"]
+                for k, v in sub["coll"].items():
+                    stats["coll"][k] += v
+
+            # --- bytes written (fusion-boundary granularity) ---
+            if dm and not any(b in rhs for b in _BOOKKEEPING):
+                sh = _first_shape(rhs)
+                if sh:
+                    n = 1
+                    for d in sh[1]:
+                        n *= d
+                    stats["bytes_written"] += n * _DTYPE_BYTES.get(
+                        sh[0], 4)
+        return stats
+
+    entry_name = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line)
+            entry_name = m.group(2)
+            break
+    if entry_name is None:
+        raise ValueError("no ENTRY computation found")
+
+    # ENTRY parameter bytes (weight/input reads)
+    entry = comps[entry_name]
+    param_bytes = 0
+    for line in entry.lines:
+        if "parameter(" in line:
+            dm = _DEF_RE.match(line)
+            if dm:
+                param_bytes += _shape_list_bytes(dm.group(2).split("=")[0]
+                                                 if "=" in dm.group(2)
+                                                 else dm.group(2))
+
+    total = walk(entry_name)
+    return {
+        "flops": total["flops"],
+        "bytes_written": total["bytes_written"],
+        "param_bytes": float(param_bytes),
+        "hbm_bytes": 2.0 * total["bytes_written"] + param_bytes,
+        "collective_bytes": total["collective_bytes"],
+        "collective_breakdown": {k: v for k, v in total["coll"].items()},
+    }

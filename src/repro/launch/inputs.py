@@ -1,0 +1,82 @@
+"""Input construction for every (arch x shape): concrete arrays for
+smoke tests / examples, ShapeDtypeStructs for the dry-run.
+
+Batch dict conventions (see models.transformer.forward / decode_step):
+  train/prefill: {"tokens": [B, S_tok] i32}
+    + vlm:   {"patch_embeds": [B, P, 1024] bf16}  (S_tok = S - P)
+    + audio: {"frames": [B, enc_seq, 128] bf16}
+  decode: {"tokens": [B, 1] i32, "cache_index": scalar i32} + cache
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.transformer import (AUDIO_FRONTEND_DIM,
+                                      VISION_FRONTEND_DIM)
+
+# dense (full-attention) archs run long_500k through this serving window
+LONG_CONTEXT_WINDOW = 8192
+
+
+def serving_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Sliding-window size used for this (arch, shape); 0 = full."""
+    if shape.name == "long_500k" and cfg.family not in ():
+        # dense/moe/vlm archs need the sub-quadratic serving variant;
+        # hybrid archs window their shared attention blocks too.
+        if cfg.attn_type != "none":
+            return LONG_CONTEXT_WINDOW
+    return cfg.sliding_window
+
+
+def supports(cfg: ModelConfig, shape: InputShape) -> bool:
+    """Which (arch x shape) pairs run (skips are documented in
+    DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k" and cfg.is_encoder_decoder:
+        return False          # whisper: enc-dec, no 500k variant
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                abstract: bool = True, seed: int = 0) -> Dict[str, Any]:
+    """Model inputs for a train/prefill step (decode handled by
+    cache_specs + token specs in the step builders)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    def make(shape_, dtype, hi=None):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape_, dtype)
+        rng = np.random.default_rng(seed)
+        if np.issubdtype(dtype, np.integer):
+            return jnp.asarray(rng.integers(0, hi, shape_), dtype)
+        return jnp.asarray(rng.standard_normal(shape_), dtype)
+
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "vision_stub":
+        P = cfg.num_patch_tokens
+        batch["tokens"] = make((B, S - P), jnp.int32, cfg.vocab_size)
+        batch["patch_embeds"] = make((B, P, VISION_FRONTEND_DIM), dt)
+    elif cfg.frontend == "audio_stub":
+        batch["tokens"] = make((B, S), jnp.int32, cfg.vocab_size)
+        batch["frames"] = make((B, cfg.encoder_seq, AUDIO_FRONTEND_DIM), dt)
+    else:
+        batch["tokens"] = make((B, S), jnp.int32, cfg.vocab_size)
+    return batch
+
+
+def decode_token_specs(cfg: ModelConfig, shape: InputShape,
+                       abstract: bool = True) -> Dict[str, Any]:
+    B = shape.global_batch
+    if abstract:
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "cache_index": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {"tokens": jnp.zeros((B, 1), jnp.int32),
+            "cache_index": jnp.asarray(
+                min(shape.seq_len,
+                    serving_window(cfg, shape) or shape.seq_len) - 1,
+                jnp.int32)}

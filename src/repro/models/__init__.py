@@ -1,0 +1,3 @@
+from .config import INPUT_SHAPES, InputShape, ModelConfig
+from .transformer import (decode_step, forward, init_cache, init_model,
+                          loss_fn, param_count)

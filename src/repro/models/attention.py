@@ -1,0 +1,106 @@
+"""GQA self-attention block with RoPE, optional qk-norm and sliding
+window; decode path updates a static-shape KV cache."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (apply_rope, causal_mask_bias, chunked_softmax_attend,
+                     dense_init, rms_norm, softmax_attend)
+from .sharding_ctx import shard
+
+CHUNKED_THRESHOLD = 2048
+
+
+def init_gqa(key, cfg: ModelConfig, d_model: Optional[int] = None) -> dict:
+    d = d_model or cfg.d_model
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, H * Dh).reshape(d, H, Dh),
+         "wk": dense_init(ks[1], d, Hkv * Dh).reshape(d, Hkv, Dh),
+         "wv": dense_init(ks[2], d, Hkv * Dh).reshape(d, Hkv, Dh),
+         "wo": dense_init(ks[3], H * Dh, d).reshape(H, Dh, d)}
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((Dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((Dh,), jnp.float32)
+    return p
+
+
+def gqa_apply(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+              cfg: ModelConfig, window: int = 0,
+              cache: Optional[dict] = None,
+              cache_index: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: [B, S, d].  Training/prefill when cache is None; decode
+    (S == 1) updates cache at cache_index and attends over it."""
+    dt = x.dtype
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+
+    if cache is None:
+        if S > CHUNKED_THRESHOLD:
+            out = chunked_softmax_attend(q, k, v, positions, positions,
+                                         window=window)
+        else:
+            bias = causal_mask_bias(positions, positions, window)
+            out = softmax_attend(q, k, v, bias)
+        new_cache = None
+    else:
+        # decode: write new kv at cache_index, attend over whole cache
+        idx = cache_index
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+            cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+            cache["v"].dtype), idx, axis=1)
+        S_max = ck.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(S_max)[None, :], (B, S_max))
+        bias = causal_mask_bias(positions, k_pos, window)
+        out = softmax_attend(q, ck.astype(dt), cv.astype(dt), bias)
+        new_cache = {"k": ck, "v": cv}
+
+    out = shard(out, "batch", "seq", "heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return shard(out, "batch", "seq", None), new_cache
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype) -> dict:
+    return {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                           dtype)}
+
+
+# --------------------------------------------------------- cross-attention
+def init_cross(key, cfg: ModelConfig) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], d, H * Dh).reshape(d, H, Dh),
+            "wk": dense_init(ks[1], d, Hkv * Dh).reshape(d, Hkv, Dh),
+            "wv": dense_init(ks[2], d, Hkv * Dh).reshape(d, Hkv, Dh),
+            "wo": dense_init(ks[3], H * Dh, d).reshape(H, Dh, d)}
+
+
+def cross_apply(params: dict, x: jnp.ndarray, enc_out: jnp.ndarray
+                ) -> jnp.ndarray:
+    """Decoder cross-attention over encoder output (no mask)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(dt))
+    bias = jnp.zeros((x.shape[0], x.shape[1], enc_out.shape[1]), jnp.float32)
+    out = softmax_attend(q, k, v, bias)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))

@@ -1,0 +1,172 @@
+"""Shared building blocks: norms, RoPE, MLPs, init helpers.
+
+Conventions:
+* params are nested dicts of jnp arrays, stored float32;
+* forward functions cast to the config compute dtype at use;
+* all linears are bias-free (Llama-style) for uniformity across the
+  zoo — a documented simplification for Whisper, which has biases.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float = 1.0) -> jnp.ndarray:
+    """Truncated-normal fan-in init."""
+    std = scale / jnp.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out),
+                                        jnp.float32) * std)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray,
+             eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                      # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [...,S,hd/2]
+    angles = angles[..., None, :]                            # [...,S,1,hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def init_mlp(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, d_model, d_ff),
+            "w_up": dense_init(k2, d_model, d_ff),
+            "w_down": dense_init(k3, d_ff, d_model)}
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, dtype) -> jnp.ndarray:
+    return swiglu(x,
+                  params["w_gate"].astype(dtype),
+                  params["w_up"].astype(dtype),
+                  params["w_down"].astype(dtype))
+
+
+def causal_mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                     window: int = 0) -> jnp.ndarray:
+    """Additive attention bias: 0 where k may attend, -inf otherwise.
+
+    q_pos: [..., Sq], k_pos: [..., Sk] absolute positions.
+    window > 0 enables sliding-window attention (k in
+    (q - window, q]).
+    """
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window > 0:
+        ok &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def expand_kv(k: jnp.ndarray, H: int) -> jnp.ndarray:
+    """GQA kv-head expansion [B,S,Hkv,D] -> [B,S,H,D].
+
+    When the tensor-parallel degree exceeds the kv head count, the
+    grouped [B,S,Hkv,g,D] layout cannot carry a clean 16-way sharding
+    (the head dim splits as Hkv x g and GSPMD falls back to partial
+    replication).  Expanding kv to the full head count keeps every
+    attention tensor sharded H-ways — the standard TP treatment; the
+    expanded copy is itself sharded so the memory cost is Hkv/H-small.
+    """
+    Hkv = k.shape[2]
+    if Hkv == H:
+        return k
+    return jnp.repeat(k, H // Hkv, axis=2)
+
+
+def softmax_attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   bias: jnp.ndarray) -> jnp.ndarray:
+    """q: [B,Sq,H,D], k/v: [B,Sk,Hkv,D(v)], bias: [B?,Sq,Sk] additive.
+
+    GQA: kv heads are expanded to H (see expand_kv).  Plain
+    (non-chunked) attention — short sequences and the oracle for the
+    chunked/online-softmax path."""
+    B, Sq, H, D = q.shape
+    kf = expand_kv(k, H).astype(jnp.float32)
+    vf = expand_kv(v, H).astype(jnp.float32)
+    qf = q.astype(jnp.float32) / jnp.sqrt(D)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    scores = scores + bias[:, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vf)
+    return out.astype(q.dtype)
+
+
+def chunked_softmax_attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                           window: int = 0,
+                           kv_chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV chunks (flash-style in XLA).
+
+    Peak memory O(Sq * kv_chunk) instead of O(Sq * Sk).  The scanned
+    body is rematerialized (jax.checkpoint) so the backward pass does
+    not store per-chunk score tensors.  kv heads are expanded to H
+    (expand_kv) so every tensor carries the full H-way model sharding.
+    """
+    B, Sq, H, D = q.shape
+    k = expand_kv(k, H)
+    v = expand_kv(v, H)
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    n_chunks = -(-Sk // kv_chunk)
+    pad = n_chunks * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2 ** 30)
+    kc = k.reshape(B, n_chunks, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, H, Dv).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(B, n_chunks, kv_chunk).transpose(1, 0, 2)
+
+    qf = q.astype(jnp.float32) / jnp.sqrt(D)
+
+    def body(carry, chunk):
+        m, l, acc = carry
+        kch, vch, pch = chunk
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qf,
+                            kch.astype(jnp.float32))
+        bias = causal_mask_bias(q_pos, pch, window)          # [B,Sq,Ck]
+        scores = scores + bias[:, None, :, :]
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        # guard fully-masked rows (all -inf) -> m_new may be -inf
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(scores - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(scores), p, 0.0)
+        scale = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vch.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, acc0),
+                                  (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)

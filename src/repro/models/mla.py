@@ -1,0 +1,127 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Queries go through a low-rank bottleneck (q_lora_rank); keys/values are
+compressed into a kv_lora_rank latent plus a single shared RoPE key.
+The decode cache stores only the latent + rope key (the MLA memory
+win): per token ``kv_lora_rank + qk_rope_head_dim`` instead of
+``2 * H * head_dim``.  The baseline decode path re-expands K/V from the
+latent each step; weight absorption is a §Perf iteration.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (apply_rope, causal_mask_bias, chunked_softmax_attend,
+                     dense_init, rms_norm)
+from .sharding_ctx import shard
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], d, qr),
+        "q_norm": jnp.ones((qr,), jnp.float32),
+        "w_uq": dense_init(ks[1], qr, H * (dn + dr)).reshape(qr, H, dn + dr),
+        "w_dkv": dense_init(ks[2], d, kvr),
+        "kv_norm": jnp.ones((kvr,), jnp.float32),
+        "w_uk": dense_init(ks[3], kvr, H * dn).reshape(kvr, H, dn),
+        "w_uv": dense_init(ks[4], kvr, H * dv).reshape(kvr, H, dv),
+        "w_kr": dense_init(ks[5], d, dr),
+        "wo": dense_init(ks[6], H * dv, d).reshape(H, dv, d),
+    }
+
+
+def _expand_kv(params: dict, latent: jnp.ndarray, k_rope: jnp.ndarray,
+               cfg: ModelConfig, dt) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """latent: [B,S,kvr] (already normed), k_rope: [B,S,dr] (roped)."""
+    k_nope = jnp.einsum("bsr,rhk->bshk", latent, params["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", latent, params["w_uv"].astype(dt))
+    kr = jnp.broadcast_to(k_rope[:, :, None, :],
+                          k_nope.shape[:3] + (cfg.qk_rope_head_dim,))
+    k = jnp.concatenate([k_nope, kr], axis=-1)
+    return k, v
+
+
+def mla_apply(params: dict, x: jnp.ndarray, positions: jnp.ndarray,
+              cfg: ModelConfig, window: int = 0,
+              cache: Optional[dict] = None,
+              cache_index: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    dt = x.dtype
+    B, S, _ = x.shape
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+
+    # queries through the low-rank bottleneck
+    q_lat = rms_norm(x @ params["w_dq"].astype(dt), params["q_norm"],
+                     cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["w_uq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    if cache is None:
+        # §Perf iteration P2/P3: MLA head counts (40) do not divide the
+        # model axis (16), so head/head_dim TP turns every score einsum
+        # into an all-reduce of [B,H,Sq,Sk] partials (~2.5 TB/step
+        # measured).  Instead: queries SEQUENCE-sharded over the model
+        # axis (context-parallel), keys/values head-gathered per device
+        # (they come from a small latent — ~0.5 GB vs TBs).
+        q = shard(q, "batch", "res_seq", None, None)
+    else:
+        q = shard(q, "batch", "seq", "heads", None)
+
+    # compressed kv latent + shared rope key
+    latent = rms_norm(x @ params["w_dkv"].astype(dt), params["kv_norm"],
+                      cfg.norm_eps)
+    k_rope = apply_rope((x @ params["w_kr"].astype(dt))[:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is None:
+        k, v = _expand_kv(params, latent, k_rope, cfg, dt)
+        k = shard(k, "batch", None, None, None)   # heads replicated
+        v = shard(v, "batch", None, None, None)
+        if S > 2048:
+            out = chunked_softmax_attend(q, k, v, positions, positions,
+                                         window=window)
+        else:
+            bias = causal_mask_bias(positions, positions, window)
+            out = _attend(q, k, v, bias)
+        new_cache = None
+    else:
+        idx = cache_index
+        clat = jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], latent.astype(cache["latent"].dtype), idx, 1)
+        ckr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx, 1)
+        k, v = _expand_kv(params, clat.astype(dt), ckr.astype(dt), cfg, dt)
+        S_max = clat.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(S_max)[None, :], (B, S_max))
+        bias = causal_mask_bias(positions, k_pos, window)
+        out = _attend(q, k, v, bias)
+        new_cache = {"latent": clat, "k_rope": ckr}
+
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return shard(out, "batch", "seq", None), new_cache
+
+
+def _attend(q, k, v, bias):
+    """MHA (no GQA grouping) with distinct qk/v head dims."""
+    D = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(D)
+    scores = scores + bias[:, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    return {"latent": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim),
+                                dtype)}

@@ -1,0 +1,197 @@
+"""RWKV6 ("Finch") block — data-dependent per-channel decay linear
+attention (attention-free), time-mix + channel-mix.
+
+Recurrence per head (K = V = head dim):
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t,     w_t = exp(-exp(w0 + lora(x_t)))
+Training uses a chunked formulation: within a chunk the pairwise decay
+products are materialized as a [cl, cl, K] tensor (exact, no division
+by vanishing decay products — numerically safe for any w), chunks are
+scanned with the [B,H,K,V] state carried; the scanned body is
+rematerialized.  Decode is the raw recurrence step.
+
+Simplifications vs the released RWKV6 (noted for the record): static
+token-shift lerp (no data-dependent lerp LoRA), per-head RMS instead of
+GroupNorm on the WKV output.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+from .sharding_ctx import shard
+
+_W_LORA = 64
+
+
+def init_rwkv_time(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, K = cfg.rwkv_heads, cfg.ssm_head_dim
+    ks = jax.random.split(key, 9)
+    return {
+        "mu": jnp.full((5, d), 0.5, jnp.float32),   # r,k,v,g,w shift lerps
+        "wr": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, d),
+        "wv": dense_init(ks[2], d, d),
+        "wg": dense_init(ks[3], d, d),
+        "w0": jnp.full((d,), -0.6, jnp.float32),    # decay bias
+        "w_a": dense_init(ks[4], d, _W_LORA),
+        "w_b": dense_init(ks[5], _W_LORA, d, scale=0.1),
+        "u": (jax.random.normal(ks[6], (H, K), jnp.float32) * 0.1),
+        "ln_w": jnp.ones((H, K), jnp.float32),      # per-head output norm
+        "wo": dense_init(ks[7], d, d),
+    }
+
+
+def init_rwkv_channel(key, cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"mu": jnp.full((2, d), 0.5, jnp.float32),
+            "wk": dense_init(ks[0], d, ff),
+            "wv": dense_init(ks[1], ff, d),
+            "wr": dense_init(ks[2], d, d)}
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray]
+                 ) -> jnp.ndarray:
+    """x_{t-1} stream; last: [B,d] previous token (decode) or None."""
+    if x.shape[1] == 1 and last is not None:
+        return last[:, None, :].astype(x.dtype)
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if last is not None:
+        prev = prev.at[:, 0].set(last.astype(x.dtype))
+    return prev
+
+
+def rwkv_time_apply(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                    state: Optional[dict] = None
+                    ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: [B,S,d] -> (y, new_state); state = {"S": [B,H,K,K] f32,
+    "last": [B,d]}."""
+    dt_ = x.dtype
+    B, S, d = x.shape
+    H, K = cfg.rwkv_heads, cfg.ssm_head_dim
+    prev = _token_shift(x, state["last"] if state else None)
+    mu = params["mu"].astype(dt_)
+    xr, xk, xv, xg, xw = (x + mu[i] * (prev - x) for i in range(5))
+
+    r = (xr @ params["wr"].astype(dt_)).reshape(B, S, H, K)
+    k = (xk @ params["wk"].astype(dt_)).reshape(B, S, H, K)
+    v = (xv @ params["wv"].astype(dt_)).reshape(B, S, H, K)
+    g = jax.nn.silu(xg @ params["wg"].astype(dt_))
+    # data-dependent decay (RWKV6's signature feature)
+    w_raw = params["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw.astype(jnp.float32) @ params["w_a"])
+        @ params["w_b"])                                  # [B,S,d]
+    logw = -jnp.exp(w_raw).reshape(B, S, H, K)            # log w_t < 0
+    u = params["u"]
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if S == 1 and state is not None:
+        S0 = state["S"]
+        kv = jnp.einsum("bhk,bhv->bhkv", kf[:, 0], vf[:, 0])
+        wkv = S0 + u[None, :, :, None] * kv
+        y = jnp.einsum("bhk,bhkv->bhv", rf[:, 0], wkv)[:, None]
+        S_new = jnp.exp(logw[:, 0])[..., None] * S0 + kv
+        new_state = {"S": S_new, "last": x[:, -1].astype(jnp.float32)}
+        y = y.reshape(B, 1, H, K)
+    else:
+        y, S_last = _wkv_chunked(rf, kf, vf, logw, u,
+                                 state["S"] if state else None, cfg)
+        new_state = None if state is None else {
+            "S": S_last, "last": x[:, -1].astype(jnp.float32)}
+
+    # per-head normalization + gating
+    yn = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-6)
+    yn = yn * params["ln_w"][None, None]
+    out = (yn.reshape(B, S, d).astype(dt_) * g) @ params["wo"].astype(dt_)
+    return shard(out, "batch", "seq", None), new_state
+
+
+def _wkv_chunked(r, k, v, logw, u, S0, cfg: ModelConfig):
+    """r/k/v/logw: [B,S,H,K] f32.  Returns (y [B,S,H,K], S_last)."""
+    B, S, H, K = r.shape
+    cl = min(32, S)
+    assert S % cl == 0, f"seq {S} not divisible by rwkv chunk {cl}"
+    nc = S // cl
+
+    def rc(t):
+        return t.reshape(B, nc, cl, H, K).transpose(1, 0, 2, 3, 4)
+
+    rch, kch, vch, lwch = rc(r), rc(k), rc(v), rc(logw)
+
+    def body(S_prev, inp):
+        rb, kb, vb, lwb = inp                     # [B,cl,H,K]
+        cum = jnp.cumsum(lwb, axis=1)             # inclusive
+        cum_prev = cum - lwb                      # exclusive
+        # state contribution
+        r_dec = rb * jnp.exp(cum_prev)
+        y_state = jnp.einsum("bthk,bhkv->bthv", r_dec, S_prev)
+        # intra-chunk pairwise (exact 3-tensor decay, s < t)
+        ldiff = cum_prev[:, :, None] - cum[:, None, :, :]  # [B,t,s,H,K]
+        mask = (jnp.arange(cl)[:, None] > jnp.arange(cl)[None, :])
+        # mask inside exp (inf * 0 = NaN in the VJP otherwise)
+        e = jnp.exp(jnp.where(mask[None, :, :, None, None], ldiff,
+                              -jnp.inf))
+        A = jnp.einsum("bthk,bshk,btshk->btsh", rb, kb, e)
+        y_intra = jnp.einsum("btsh,bshv->bthv", A, vb)
+        # diagonal bonus term
+        y_diag = jnp.einsum("bthk,hk,bthk,bthv->bthv", rb, u, kb, vb)
+        # state update
+        dec_tail = jnp.exp(cum[:, -1:, :] - cum)  # [B,cl,H,K]
+        S_new = (jnp.exp(cum[:, -1])[..., None] * S_prev
+                 + jnp.einsum("bshk,bshv->bhkv", kb * dec_tail, vb))
+        return S_new, y_state + y_intra + y_diag
+
+    if S0 is None:
+        S0 = jnp.zeros((B, H, K, K), jnp.float32)
+    S_last, ys = jax.lax.scan(jax.checkpoint(body), S0,
+                              (rch, kch, vch, lwch))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, K)
+    return y, S_last
+
+
+def rwkv_time_naive(r, k, v, logw, u, S0=None):
+    """Step-by-step oracle for tests.  r/k/v/logw: [B,S,H,K] f32."""
+    B, S, H, K = r.shape
+    if S0 is None:
+        S0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def step(Sp, t):
+        kv = jnp.einsum("bhk,bhv->bhkv", k[:, t], v[:, t])
+        y = jnp.einsum("bhk,bhkv->bhv", r[:, t],
+                       Sp + u[None, :, :, None] * kv)
+        S_new = jnp.exp(logw[:, t])[..., None] * Sp + kv
+        return S_new, y
+
+    S_last, ys = jax.lax.scan(step, S0, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3), S_last
+
+
+def rwkv_channel_apply(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                       state: Optional[dict] = None
+                       ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """RWKV channel-mix FFN.  state = {"last": [B,d]}."""
+    dt_ = x.dtype
+    prev = _token_shift(x, state["last"] if state else None)
+    mu = params["mu"].astype(dt_)
+    xk = x + mu[0] * (prev - x)
+    xr = x + mu[1] * (prev - x)
+    kk = jnp.square(jax.nn.relu(xk @ params["wk"].astype(dt_)))
+    kk = shard(kk, "batch", "seq", "ffn")
+    kv = kk @ params["wv"].astype(dt_)
+    out = jax.nn.sigmoid(xr @ params["wr"].astype(dt_)) * kv
+    new_state = None if state is None else {
+        "last": x[:, -1].astype(jnp.float32)}
+    return shard(out, "batch", "seq", None), new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:
+    H, K, d = cfg.rwkv_heads, cfg.ssm_head_dim, cfg.d_model
+    return {"time": {"S": jnp.zeros((batch, H, K, K), jnp.float32),
+                     "last": jnp.zeros((batch, d), jnp.float32)},
+            "channel": {"last": jnp.zeros((batch, d), jnp.float32)}}

@@ -1,0 +1,176 @@
+"""Mamba2 (SSD) block — chunked, matmul-dominant TPU formulation.
+
+State-space dual form with per-head scalar decay:
+    h_t = exp(dt_t * a_h) h_{t-1} + dt_t * x_t (x) B_t,   y_t = C_t h_t + D x
+Training uses the chunked SSD algorithm (intra-chunk quadratic matmuls
++ inter-chunk state scan), which maps the recurrence onto the MXU —
+this is the TPU adaptation of Mamba2's GPU kernel.  Decode is the raw
+single-step recurrence.  Single B/C group shared across heads
+(n_groups=1), depthwise causal conv over (x, B, C) as in Mamba2.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, rms_norm
+from .sharding_ctx import shard
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    """Projections are stored separately (wz/wx/wB/wC/wdt) rather than
+    as one fused in_proj so each output dim can be sharded cleanly
+    (d_inner and H divide the model axis; the small B/C state
+    projections stay replicated)."""
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim
+    H = cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], d, di),
+        "wx": dense_init(ks[1], d, di),
+        "wB": dense_init(ks[2], d, N),
+        "wC": dense_init(ks[3], d, N),
+        "wdt": dense_init(ks[4], d, H),
+        # depthwise conv split: x channels (model-sharded) and B/C
+        # channels (replicated) — a fused conv over the concat would
+        # force GSPMD to de-shard the whole inner stream (§Perf P4)
+        "conv_wx": (jax.random.normal(ks[5], (cfg.conv_width, di),
+                                      jnp.float32) * 0.1),
+        "conv_wbc": (jax.random.normal(ks[7], (cfg.conv_width, 2 * N),
+                                       jnp.float32) * 0.1),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[6], di, d),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 conv_state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv, width W.  x: [B,S,C]; w: [W,C].
+    conv_state: [B, W-1, C] tail from previous tokens (decode)."""
+    W = w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+              for i in range(W))
+    new_state = xp[:, -(W - 1):, :]
+    return jax.nn.silu(out), new_state
+
+
+def mamba_apply(params: dict, x: jnp.ndarray, cfg: ModelConfig,
+                state: Optional[dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: [B,S,d] -> (y, new_state).  state = {"h": [B,H,P,N],
+    "conv": [B,W-1,C]} for decode (S == 1)."""
+    dt_ = x.dtype
+    B, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+
+    z = x @ params["wz"].astype(dt_)
+    xc = shard(x @ params["wx"].astype(dt_), "batch", "seq", "ssm_inner")
+    Bc = x @ params["wB"].astype(dt_)
+    Cc = x @ params["wC"].astype(dt_)
+    dt_raw = shard(x @ params["wdt"].astype(dt_), "batch", "seq",
+                   "ssm_heads")
+    bc_in = jnp.concatenate([Bc, Cc], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_state_x = conv_state["x"] if conv_state is not None else None
+    conv_state_bc = conv_state["bc"] if conv_state is not None else None
+    xc, new_conv_x = _causal_conv(xc, params["conv_wx"], conv_state_x)
+    xc = shard(xc, "batch", "seq", "ssm_inner")
+    bc_out, new_conv_bc = _causal_conv(bc_in, params["conv_wbc"],
+                                       conv_state_bc)
+    Bc, Cc = jnp.split(bc_out, [N], axis=-1)
+    new_conv = {"x": new_conv_x, "bc": new_conv_bc}
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])            # [B,S,H]
+    a = -jnp.exp(params["A_log"])                        # [H], negative
+    log_dec = dt * a                                     # [B,S,H] <= 0
+    xh = xc.reshape(B, S, H, P).astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    if S == 1 and state is not None:
+        h = state["h"]                                   # [B,H,P,N] f32
+        decay = jnp.exp(log_dec[:, 0])                   # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0], Bf[:, 0])
+        h_new = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h_new, Cf[:, 0])[:, None]
+        y = y.reshape(B, 1, H, P)
+        new_state = {"h": h_new, "conv": new_conv}
+    else:
+        y, h_last = _ssd_chunked(xh, Bf, Cf, dt, log_dec, cfg)
+        new_state = None if state is None else {"h": h_last,
+                                                "conv": new_conv}
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, di).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    return shard(out, "batch", "seq", None), new_state
+
+
+def _ssd_chunked(xh, Bf, Cf, dt, log_dec, cfg: ModelConfig):
+    """Chunked SSD.  xh: [B,S,H,P] f32, Bf/Cf: [B,S,N], dt/log_dec:
+    [B,S,H].  Returns (y [B,S,H,P], h_last [B,H,P,N])."""
+    B, S, H, P = xh.shape
+    N = Bf.shape[-1]
+    cl = min(cfg.ssm_chunk, S)
+    assert S % cl == 0, f"seq {S} not divisible by ssm_chunk {cl}"
+    nc = S // cl
+
+    def r(t, tail):  # reshape into chunks
+        return t.reshape((B, nc, cl) + tail)
+
+    xch, Bch, Cch = r(xh, (H, P)), r(Bf, (N,)), r(Cf, (N,))
+    dtc, ldc = r(dt, (H,)), r(log_dec, (H,))
+    cum = jnp.cumsum(ldc, axis=2)                        # [B,nc,cl,H]
+
+    def chunk_body(h_prev, inp):
+        xcb, Bcb, Ccb, dtb, cumb = inp                   # per-chunk, [B,...]
+        # intra-chunk: decay matrix L[t,s] = exp(cum[t]-cum[s]), t >= s
+        ldiff = cumb[:, :, None, :] - cumb[:, None, :, :]   # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((cl, cl), bool))
+        # mask BEFORE exp: exp of the (t < s) positions overflows, and
+        # where-after-exp makes the backward pass inf * 0 = NaN
+        L = jnp.exp(jnp.where(tri[None, :, :, None], ldiff, -jnp.inf))
+        scores = jnp.einsum("btn,bsn->bts", Ccb, Bcb)    # group-shared
+        M = scores[..., None] * L                        # [B,t,s,H]
+        y_intra = jnp.einsum("btsh,bsh,bshp->bthp", M, dtb, xcb)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bth,btn,bhpn->bthp",
+                             jnp.exp(cumb), Ccb, h_prev)
+        # chunk state update
+        dec_tail = jnp.exp(cumb[:, -1:, :] - cumb)       # [B,cl,H]
+        s_c = jnp.einsum("bsh,bsh,bsn,bshp->bhpn",
+                         dec_tail, dtb, Bcb, xcb)
+        h_new = h_prev * jnp.exp(cumb[:, -1, :])[..., None, None] + s_c
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    inputs = (xch.transpose(1, 0, 2, 3, 4), Bch.transpose(1, 0, 2, 3),
+              Cch.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3),
+              cum.transpose(1, 0, 2, 3))
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, h_last
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> dict:
+    return {"h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state_dim), jnp.float32),
+            "conv": {"x": jnp.zeros((batch, cfg.conv_width - 1,
+                                     cfg.d_inner), jnp.float32),
+                     "bc": jnp.zeros((batch, cfg.conv_width - 1,
+                                      2 * cfg.ssm_state_dim),
+                                     jnp.float32)}}

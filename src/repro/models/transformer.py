@@ -1,0 +1,397 @@
+"""Model assembly: block dispatch, scan-over-layers, enc-dec, loss.
+
+Layer parameters of each block kind are stacked along a leading axis
+and consumed by ``lax.scan`` over contiguous runs of the block pattern
+— compile time is O(#runs), not O(depth).  Zamba2's shared attention
+block ('S') reuses one parameter set at every 'S' position.
+
+Params tree:
+    embed            [V, d]
+    frontend         {proj} (vlm/audio stubs)
+    encoder          {pos, blocks{A: stacked}, final_norm} (whisper)
+    blocks           {kind: stacked-leading-dim params}
+    shared           single 'S' block params (zamba2)
+    final_norm       [d]
+    lm_head          [d, V] (absent when tied)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (cross_apply, gqa_apply, init_cross, init_gqa,
+                        init_gqa_cache)
+from .config import ModelConfig
+from .layers import dense_init, init_mlp, mlp_apply, rms_norm
+from .mla import init_mla, init_mla_cache, mla_apply
+from .moe import init_moe, moe_apply
+from .rwkv import (init_rwkv_channel, init_rwkv_state, init_rwkv_time,
+                   rwkv_channel_apply, rwkv_time_apply)
+from .sharding_ctx import shard
+from .ssm import init_mamba, init_mamba_state, mamba_apply
+
+VISION_FRONTEND_DIM = 1024
+AUDIO_FRONTEND_DIM = 128
+
+
+# ---------------------------------------------------------------- blocks
+def init_block(key, cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    if kind in ("A", "S"):
+        p = {"norm1": jnp.ones((d,), jnp.float32),
+             "norm2": jnp.ones((d,), jnp.float32)}
+        if cfg.attn_type == "mla":
+            p["attn"] = init_mla(ks[0], cfg)
+        else:
+            p["attn"] = init_gqa(ks[0], cfg)
+        if cfg.num_experts and kind == "A":
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[1], d, cfg.d_ff)
+        if cfg.is_encoder_decoder:
+            p["cross_norm"] = jnp.ones((d,), jnp.float32)
+            p["cross"] = init_cross(ks[2], cfg)
+        return p
+    if kind == "M":
+        return {"norm": jnp.ones((d,), jnp.float32),
+                "mamba": init_mamba(ks[0], cfg)}
+    if kind == "R":
+        return {"norm1": jnp.ones((d,), jnp.float32),
+                "time": init_rwkv_time(ks[0], cfg),
+                "norm2": jnp.ones((d,), jnp.float32),
+                "channel": init_rwkv_channel(ks[1], cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def block_apply(kind: str, params: dict, x: jnp.ndarray,
+                positions: jnp.ndarray, cfg: ModelConfig,
+                window: int = 0, cache: Optional[dict] = None,
+                cache_index: Optional[jnp.ndarray] = None,
+                enc_out: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss)."""
+    x = shard(x, "batch", "res_seq", None)   # sequence-parallel residual
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("A", "S"):
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        if cfg.attn_type == "mla":
+            a, new_attn_cache = mla_apply(params["attn"], h, positions, cfg,
+                                          window, cache and cache["attn"],
+                                          cache_index)
+        else:
+            a, new_attn_cache = gqa_apply(params["attn"], h, positions, cfg,
+                                          window, cache and cache["attn"],
+                                          cache_index)
+        x = x + a
+        if cfg.is_encoder_decoder and enc_out is not None:
+            h = rms_norm(x, params["cross_norm"], cfg.norm_eps)
+            x = x + cross_apply(params["cross"], h, enc_out)
+        h = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if "moe" in params:
+            f, aux = moe_apply(params["moe"], h, cfg)
+        else:
+            f = mlp_apply(params["mlp"], h, x.dtype)
+        x = shard(x + f, "batch", "res_seq", None)
+        new_cache = None if cache is None else {"attn": new_attn_cache}
+        return x, new_cache, aux
+    if kind == "M":
+        h = rms_norm(x, params["norm"], cfg.norm_eps)
+        m, new_state = mamba_apply(params["mamba"], h, cfg,
+                                   cache and cache["mamba"])
+        new_cache = None if cache is None else {"mamba": new_state}
+        return shard(x + m, "batch", "res_seq", None), new_cache, aux
+    if kind == "R":
+        h = rms_norm(x, params["norm1"], cfg.norm_eps)
+        t, new_t = rwkv_time_apply(params["time"], h, cfg,
+                                   cache and cache["time"])
+        x = x + t
+        h = rms_norm(x, params["norm2"], cfg.norm_eps)
+        c, new_c = rwkv_channel_apply(params["channel"], h, cfg,
+                                      cache and cache["channel"])
+        new_cache = None if cache is None else {"time": new_t,
+                                                "channel": new_c}
+        return shard(x + c, "batch", "res_seq", None), new_cache, aux
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype) -> dict:
+    if kind in ("A", "S"):
+        if cfg.attn_type == "mla":
+            return {"attn": init_mla_cache(cfg, batch, max_len, dtype)}
+        return {"attn": init_gqa_cache(cfg, batch, max_len, dtype)}
+    if kind == "M":
+        return {"mamba": init_mamba_state(cfg, batch)}
+    if kind == "R":
+        return init_rwkv_state(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------- pattern
+def pattern_runs(pattern: str):
+    """Contiguous runs: [(kind, start_within_kind, length), ...]."""
+    runs, counts = [], {}
+    i = 0
+    while i < len(pattern):
+        k = pattern[i]
+        j = i
+        while j < len(pattern) and pattern[j] == k:
+            j += 1
+        runs.append((k, counts.get(k, 0), j - i))
+        counts[k] = counts.get(k, 0) + (j - i)
+        i = j
+    return runs
+
+
+# ---------------------------------------------------------------- model
+def init_model(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": dense_init(ks[0], cfg.vocab_padded, d, scale=1.0),
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], d, cfg.vocab_padded)
+    counts = cfg.counts()
+    blocks = {}
+    for kind in "AMR":
+        n = counts.get(kind, 0)
+        if n:
+            keys = jax.random.split(jax.random.fold_in(ks[2], ord(kind)), n)
+            blocks[kind] = jax.vmap(
+                lambda k, kk=kind: init_block(k, cfg, kk))(keys)
+    params["blocks"] = blocks
+    if counts.get("S", 0):
+        params["shared"] = init_block(ks[3], cfg, "S")
+    if cfg.frontend == "vision_stub":
+        params["frontend"] = {"proj": dense_init(ks[4], VISION_FRONTEND_DIM,
+                                                 d)}
+    if cfg.is_encoder_decoder:
+        ekeys = jax.random.split(ks[5], cfg.encoder_layers)
+        enc_cfg = cfg  # same dims
+        params["encoder"] = {
+            "proj": dense_init(ks[6], AUDIO_FRONTEND_DIM, d),
+            "pos": (jax.random.normal(ks[7], (cfg.encoder_seq, d),
+                                      jnp.float32) * 0.02),
+            "blocks": jax.vmap(lambda k: _init_enc_block(k, enc_cfg))(ekeys),
+            "final_norm": jnp.ones((d,), jnp.float32),
+        }
+    return params
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"norm1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": init_gqa(ks[0], cfg),
+            "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff)}
+
+
+def _enc_block_apply(params, x, positions, cfg):
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    a, _ = _enc_attend(params["attn"], h, positions, cfg)
+    x = x + a
+    h = rms_norm(x, params["norm2"], cfg.norm_eps)
+    return x + mlp_apply(params["mlp"], h, x.dtype)
+
+
+def _enc_attend(p, h, positions, cfg):
+    """Non-causal self-attention (encoder)."""
+    from .layers import softmax_attend
+    dt = h.dtype
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(dt))
+    bias = jnp.zeros((h.shape[0], h.shape[1], h.shape[1]), jnp.float32)
+    out = softmax_attend(q, k, v, bias)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt)), None
+
+
+def encode(params: dict, frames: jnp.ndarray, cfg: ModelConfig
+           ) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings [B, enc_seq, Df]."""
+    enc = params["encoder"]
+    dt = jnp.dtype(cfg.dtype)
+    h = frames.astype(dt) @ enc["proj"].astype(dt)
+    h = h + enc["pos"][None].astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1])[None],
+                                 h.shape[:2])
+
+    def body(carry, p_layer):
+        return _enc_block_apply(p_layer, carry, positions, cfg), None
+
+    h, _ = jax.lax.scan(body, h, enc["blocks"])
+    return rms_norm(h, enc["final_norm"], cfg.norm_eps)
+
+
+def embed_inputs(params: dict, batch: Dict[str, jnp.ndarray],
+                 cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token (+ modality stub) embedding.  Returns (h [B,S,d],
+    loss_mask [B,S])."""
+    dt = jnp.dtype(cfg.dtype)
+    tok = batch["tokens"]
+    h = jnp.take(params["embed"], tok, axis=0).astype(dt)
+    mask = jnp.ones(tok.shape, jnp.float32)
+    if cfg.frontend == "vision_stub":
+        patches = batch["patch_embeds"].astype(dt)
+        ph = patches @ params["frontend"]["proj"].astype(dt)
+        h = jnp.concatenate([ph, h], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros(ph.shape[:2], jnp.float32), mask], axis=1)
+    return shard(h, "batch", "res_seq", None), mask
+
+
+def forward(params: dict, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            window: int = 0, remat: bool = True
+            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Training/prefill forward.  Returns (logits, loss_mask, aux)."""
+    h, mask = embed_inputs(params, batch, cfg)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, batch["frames"], cfg)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for kind, off, n in pattern_runs(cfg.block_pattern):
+        if kind == "S":
+            # Perf P4: shared blocks are applied UNROLLED (one param
+            # set, many positions) — without remat all applications'
+            # internals stay live for backward (~50 GB on zamba2);
+            # checkpoint each application like the scanned blocks.
+            def s_apply(p_, h_):
+                out, _, aux_ = block_apply("S", p_, h_, positions, cfg,
+                                           window, enc_out=enc_out)
+                return out, aux_
+            if remat:
+                s_apply = jax.checkpoint(s_apply)
+            for _ in range(n):
+                h, aux = s_apply(params["shared"], h)
+                aux_total += aux
+            continue
+        stacked = jax.tree_util.tree_map(
+            lambda t: t[off:off + n], params["blocks"][kind])
+
+        def body(carry, p_layer, kk=kind):
+            x, at = carry
+            x, _, aux = block_apply(kk, p_layer, x, positions, cfg,
+                                    window, enc_out=enc_out)
+            return (x, at + aux), None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        (h, aux_total), _ = jax.lax.scan(body_fn, (h, aux_total), stacked)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = h @ head.astype(h.dtype)
+    return shard(logits, "batch", "seq", "vocab"), mask, aux_total
+
+
+def loss_fn(params: dict, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            window: int = 0, remat: bool = True) -> jnp.ndarray:
+    """Next-token cross-entropy (+ MoE aux)."""
+    logits, mask, aux = forward(params, batch, cfg, window, remat)
+    logits = logits[:, :-1].astype(jnp.float32)
+    # targets: tokens shifted; modality positions are masked out
+    tok = batch["tokens"]
+    S_front = logits.shape[1] + 1 - tok.shape[1]   # prepended stub positions
+    targets = tok
+    tmask = mask[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    if S_front > 0:
+        # predictions for text tokens start at position S_front - 1
+        logp_text = logp[:, S_front - 1:S_front - 1 + tok.shape[1] - 1]
+        tgt = targets[:, 1:]
+        tm = jnp.ones(tgt.shape, jnp.float32)
+    else:
+        logp_text = logp
+        tgt = targets[:, 1:]
+        tm = tmask
+    ll = jnp.take_along_axis(logp_text, tgt[..., None], axis=-1)[..., 0]
+    ce = -(ll * tm).sum() / jnp.maximum(tm.sum(), 1.0)
+    return ce + cfg.router_aux_weight * aux
+
+
+# ---------------------------------------------------------------- decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+               window: int = 0) -> dict:
+    """Static-shape cache stacks, one entry per block kind."""
+    counts = cfg.counts()
+    cache: Dict[str, Any] = {}
+    attn_len = min(max_len, window) if window else max_len
+    for kind in "AMRS":
+        n = counts.get(kind, 0)
+        if not n:
+            continue
+        one = init_block_cache(cfg, kind, batch, attn_len, dtype)
+        cache[kind] = jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t[None], (n,) + t.shape).copy(), one)
+    if cfg.is_encoder_decoder:
+        cache["enc_out"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model),
+                                     dtype)
+    return cache
+
+
+def decode_step(params: dict, cache: dict, tokens: jnp.ndarray,
+                cache_index: jnp.ndarray, cfg: ModelConfig,
+                window: int = 0) -> Tuple[jnp.ndarray, dict]:
+    """One decode step.  tokens: [B, 1]; cache_index: scalar int32
+    (next write position; with a window cache, positions are modulo the
+    window — handled by the caller keeping cache_index < cache len)."""
+    dt = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = jnp.broadcast_to(cache_index[None, None], (B, 1))
+    enc_out = cache.get("enc_out", None)
+    if enc_out is not None:
+        enc_out = enc_out.astype(dt)
+
+    new_cache = dict(cache)
+    for kind, off, n in pattern_runs(cfg.block_pattern):
+        if kind == "S":
+            # shared params; distinct cache per S position
+            for i in range(n):
+                cslice = jax.tree_util.tree_map(
+                    lambda t: t[off + i], cache["S"])
+                h, new_cs, _ = block_apply(
+                    "S", params["shared"], h, positions, cfg, window,
+                    cache=cslice, cache_index=cache_index, enc_out=enc_out)
+                new_cache["S"] = jax.tree_util.tree_map(
+                    lambda full, upd: full.at[off + i].set(upd),
+                    new_cache["S"], new_cs)
+            continue
+        stacked_p = jax.tree_util.tree_map(
+            lambda t: t[off:off + n], params["blocks"][kind])
+        stacked_c = jax.tree_util.tree_map(
+            lambda t: t[off:off + n], new_cache[kind])
+
+        def body(x, pc, kk=kind):
+            p_layer, c_layer = pc
+            x, new_c, _ = block_apply(kk, p_layer, x, positions, cfg,
+                                      window, cache=c_layer,
+                                      cache_index=cache_index,
+                                      enc_out=enc_out)
+            return x, new_c
+
+        h, upd = jax.lax.scan(body, h, (stacked_p, stacked_c))
+        new_cache[kind] = jax.tree_util.tree_map(
+            lambda full, u: full.at[off:off + n].set(u),
+            new_cache[kind], upd)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = h @ head.astype(h.dtype)
+    return logits, new_cache
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,27 @@
+"""AdaGrad — the paper's local optimizer (eq. 2).
+
+    g_acc <- g_acc + grad * grad
+    w     <- w - alpha / sqrt(g_acc + eps) * grad
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+
+def adagrad(alpha: float = 0.01, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        new_state = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.square(g.astype(jnp.float32)), state, grads)
+        updates = jax.tree_util.tree_map(
+            lambda g, a: -alpha * g.astype(jnp.float32)
+            / jnp.sqrt(a + eps), grads, new_state)
+        return updates, new_state
+
+    return Optimizer(init=init, update=update)

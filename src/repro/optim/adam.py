@@ -1,0 +1,36 @@
+"""Adam (bias-corrected), fp32 moments."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+
+def adam(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mu": z, "nu": jax.tree_util.tree_map(jnp.copy, z),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        c = state["count"] + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+        mu_hat = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** c), mu)
+        nu_hat = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** c), nu)
+        updates = jax.tree_util.tree_map(
+            lambda m, v: -lr * m / (jnp.sqrt(v) + eps), mu_hat, nu_hat)
+        if weight_decay and params is not None:
+            updates = jax.tree_util.tree_map(
+                lambda u, p: u - lr * weight_decay
+                * p.astype(jnp.float32), updates, params)
+        return updates, {"mu": mu, "nu": nu, "count": c}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,18 @@
+"""Minimal optax-free optimizer interface (pytree-native)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]                    # params -> state
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+    # (grads, state, params) -> (updates, new_state); caller applies
+    # params + updates.
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates)

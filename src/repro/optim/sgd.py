@@ -1,0 +1,26 @@
+"""SGD with optional momentum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+
+def sgd(lr: float = 0.01, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return None
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            return jax.tree_util.tree_map(
+                lambda g: -lr * g.astype(jnp.float32), grads), None
+        new_state = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        updates = jax.tree_util.tree_map(lambda m: -lr * m, new_state)
+        return updates, new_state
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,137 @@
+"""CFmMIMO channel + power-control tests."""
+import numpy as np
+import pytest
+
+from repro.core.channel import (CFmMIMOConfig, computation_latency,
+                                make_channel, uplink_latency)
+from repro.core.power import (BisectionLPPowerControl,
+                              DinkelbachPowerControl,
+                              MaxSumRatePowerControl, eta_upper_bound,
+                              make_power_controller,
+                              rate_aware_fractions,
+                              equalizing_target_latency)
+
+
+@pytest.fixture(scope="module")
+def chan():
+    return make_channel(CFmMIMOConfig(K=20), seed=0)
+
+
+@pytest.fixture(scope="module")
+def chan40():
+    return make_channel(CFmMIMOConfig(K=40), seed=1)
+
+
+def test_channel_shapes_and_positivity(chan):
+    cfg = chan.cfg
+    assert chan.beta.shape == (cfg.M, cfg.K)
+    assert chan.gamma.shape == (cfg.M, cfg.K)
+    assert np.all(chan.beta > 0) and np.all(chan.gamma > 0)
+    assert np.all(chan.gamma <= chan.beta + 1e-18)  # estimation quality <= beta
+    assert np.all(chan.A_bar > 0) and np.all(chan.I_M > 0)
+    assert np.all(np.diag(chan.B_tilde) == 0.0)
+
+
+def test_pilot_assignment(chan40):
+    cfg = chan40.cfg
+    assert chan40.pilot.shape == (cfg.K,)
+    assert np.all(chan40.pilot < cfg.tau_p)
+    # first tau_p users orthogonal
+    assert len(set(chan40.pilot[: cfg.tau_p].tolist())) == cfg.tau_p
+
+
+def test_sinr_monotone_in_own_power(chan):
+    p = np.full(chan.cfg.K, 0.5)
+    s0 = chan.sinr(p)
+    p2 = p.copy()
+    p2[3] = 1.0
+    s1 = chan.sinr(p2)
+    assert s1[3] > s0[3]          # own SINR increases
+    assert np.all(np.delete(s1, 3) <= np.delete(s0, 3) + 1e-12)  # others hurt
+
+
+def test_rates_reasonable_spectral_efficiency(chan):
+    """Full power: per-user SE should be in a physically sane range."""
+    rates = chan.rates(np.ones(chan.cfg.K))
+    se = rates / chan.cfg.bandwidth_hz
+    assert np.all(rates > 0)
+    assert np.all(se < 25.0), se.max()   # not absurd
+    assert np.median(se) > 0.05, se      # not dead either
+
+
+def test_uplink_latency_eq12(chan):
+    rates = chan.rates(np.ones(chan.cfg.K))
+    bits = np.full(chan.cfg.K, 1e6)
+    lat = uplink_latency(bits, rates)
+    np.testing.assert_allclose(lat, 1e6 / rates)
+
+
+def test_computation_latency_table3():
+    # L=5, |D|=5e4, K=40, a=1e6 cycles/sample, nu=20 cycles/s scaled
+    ell = computation_latency(5, 50_000, 40)
+    assert ell > 0
+
+
+# ------------------------------------------------------------ power control
+def test_bisection_lp_reduces_straggler(chan):
+    rng = np.random.default_rng(0)
+    bits = rng.uniform(1e5, 2e6, chan.cfg.K)  # heterogeneous payloads
+    ours = BisectionLPPowerControl().solve(chan, bits)
+    full = MaxSumRatePowerControl(iters=0).solve(chan, bits)  # p = 1
+    assert ours.straggler_latency <= full.straggler_latency * (1 + 1e-6)
+    assert np.all(ours.p >= 0) and np.all(ours.p <= 1)
+    assert ours.info["eta"] > 0
+
+
+def test_bisection_eta_is_min_rate_per_bit(chan):
+    bits = np.full(chan.cfg.K, 1e6)
+    sol = BisectionLPPowerControl().solve(chan, bits)
+    eta_real = np.min(sol.rates / bits)
+    # achieved min rate-per-bit >= certified eta (bisection lower bound)
+    assert eta_real >= sol.info["eta"] * (1 - 1e-3)
+    assert sol.info["eta"] <= eta_upper_bound(chan, bits)
+
+
+def test_bisection_latency_equalization(chan):
+    """With equal bits, optimal min-max powers should roughly equalize
+    latencies (the straggler gap shrinks vs full power)."""
+    bits = np.full(chan.cfg.K, 1e6)
+    ours = BisectionLPPowerControl().solve(chan, bits)
+    full = MaxSumRatePowerControl(iters=0).solve(chan, bits)
+    spread_ours = ours.straggler_latency / np.min(ours.latencies)
+    spread_full = full.straggler_latency / np.min(full.latencies)
+    assert spread_ours < spread_full
+
+
+def test_dinkelbach_converges(chan):
+    bits = np.full(chan.cfg.K, 1e6)
+    sol = DinkelbachPowerControl(outer=6, inner=20).solve(chan, bits)
+    assert sol.info["energy_efficiency"] > 0
+    assert np.all((0 <= sol.p) & (sol.p <= 1))
+
+
+def test_maxsum_improves_sum_rate(chan):
+    bits = np.full(chan.cfg.K, 1e6)
+    opt = MaxSumRatePowerControl(iters=40, restarts=1).solve(chan, bits)
+    base = MaxSumRatePowerControl(iters=0).solve(chan, bits)
+    assert opt.info["sum_rate"] >= np.sum(np.log2(1 + chan.sinr(base.p))) - 1e-9
+
+
+def test_registry_power():
+    for name in ["bisection-lp", "dinkelbach", "max-sum-rate"]:
+        assert make_power_controller(name).name == name
+    with pytest.raises(KeyError):
+        make_power_controller("nope")
+
+
+def test_rate_aware_bitalloc():
+    rates = np.array([1e6, 2e6, 4e6])
+    d, b = 100_000, 10
+    ell = equalizing_target_latency(rates, d, b, s_floor=0.01)
+    s = rate_aware_fractions(rates, d, b, ell, s_min=0.01, s_max=1.0)
+    bits = d * (b * s + 1 - s) + 32
+    lat = bits / rates
+    assert np.all(s >= 0.01 - 1e-12)
+    # faster links get bigger budgets; latencies equalized at the target
+    assert s[2] >= s[1] >= s[0]
+    np.testing.assert_allclose(lat.max(), ell, rtol=1e-6)

@@ -1,0 +1,24 @@
+"""Driver for the multi-device distributed-runtime checks.
+
+They run in a subprocess because --xla_force_host_platform_device_count
+must be set before jax initializes (and only for these checks — the
+rest of the suite sees 1 device, per the dry-run isolation rule)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_dist_checks_subprocess():
+    script = os.path.join(os.path.dirname(__file__), "dist_checks.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    res = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, env=env, timeout=880)
+    sys.stdout.write(res.stdout)
+    sys.stderr.write(res.stderr[-4000:])
+    assert res.returncode == 0, "dist checks failed"
+    assert "ALL DIST CHECKS PASSED" in res.stdout

@@ -1,0 +1,76 @@
+"""Validate the dry-run sweep artifacts (deliverable e).
+
+The sweep itself runs out-of-band (hours of XLA compiles for 512
+placeholder devices): ``python -m repro.launch.dryrun --arch all
+--shape all --mesh single|multi``.  These tests check the recorded
+results: every (arch x shape x mesh) must have compiled OK or be a
+documented skip; skips are exactly the DESIGN.md §Arch-applicability
+set; roofline inputs are sane.
+"""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCH_IDS
+from repro.models.config import INPUT_SHAPES
+
+RUNS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "runs", "dryrun")
+
+EXPECTED_SKIPS = {("whisper-base", "long_500k")}
+
+
+def _load(mesh):
+    out = {}
+    for p in glob.glob(os.path.join(RUNS, f"*__{mesh}__*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_matrix_complete(mesh):
+    results = _load(mesh)
+    if not results:
+        pytest.skip(f"no {mesh} dry-run artifacts; run the sweep first")
+    missing, errors = [], []
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            r = results.get((arch, shape))
+            if r is None:
+                missing.append((arch, shape))
+            elif r["status"] == "error":
+                errors.append((arch, shape, r.get("error", "")[:80]))
+            elif r["status"] == "skipped":
+                assert (arch, shape) in EXPECTED_SKIPS, (arch, shape)
+    assert not errors, errors
+    if missing:
+        pytest.skip(f"sweep incomplete for {mesh}: {len(missing)} missing")
+
+
+def test_single_pod_roofline_inputs_sane():
+    results = _load("single")
+    if not results:
+        pytest.skip("no artifacts")
+    for (arch, shape), r in results.items():
+        if r["status"] != "ok":
+            continue
+        assert r["flops"] > 0, (arch, shape)
+        assert r["hbm_bytes"] > 0
+        assert r["n_devices"] == 256
+        assert r["model_flops"] > 0
+        # train/prefill move more than decode
+        if shape == "train_4k":
+            assert r["collective_bytes"] > 0
+
+
+def test_skips_documented():
+    results = _load("single")
+    if not results:
+        pytest.skip("no artifacts")
+    skips = {(a, s) for (a, s), r in results.items()
+             if r["status"] == "skipped"}
+    assert skips <= EXPECTED_SKIPS

@@ -1,0 +1,105 @@
+"""End-to-end FL simulation tests (small but real training)."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import PaperCNNConfig
+from repro.core.channel import CFmMIMOConfig, make_channel
+from repro.core.power import BisectionLPPowerControl
+from repro.core.quantize import (ClassicQuantizer, MixedResolutionQuantizer,
+                                 TopQQuantizer)
+from repro.data import (make_image_classification, partition_dirichlet,
+                        partition_iid, user_fractions)
+from repro.fl import FLConfig, run_fl
+
+
+@pytest.fixture(scope="module")
+def problem():
+    full = make_image_classification(n_samples=1600, hw=16, n_classes=4,
+                                     noise=0.25, seed=0)
+    train_idx, test_idx = np.arange(1200), np.arange(1200, 1600)
+    import dataclasses
+    train = dataclasses.replace(full, x=full.x[train_idx],
+                                y=full.y[train_idx])
+    test = dataclasses.replace(full, x=full.x[test_idx], y=full.y[test_idx])
+    cfg = PaperCNNConfig(input_hw=16, n_classes=4)
+    return train, test, cfg
+
+
+def test_partitions(problem):
+    train, _, _ = problem
+    iid = partition_iid(train, 8)
+    assert sum(len(s) for s in iid) == len(train)
+    assert len(np.unique(np.concatenate(iid))) == len(train)  # disjoint
+    nid = partition_dirichlet(train, 8, alpha=0.3)
+    assert sum(len(s) for s in nid) == len(train)
+    rho = user_fractions(nid)
+    np.testing.assert_allclose(rho.sum(), 1.0)
+    # non-IID should be more label-skewed than IID
+    def skew(shards):
+        fr = []
+        for s in shards:
+            counts = np.bincount(train.y[s], minlength=4) / len(s)
+            fr.append(counts.max())
+        return np.mean(fr)
+    assert skew(nid) > skew(iid)
+
+
+def test_fl_learns_with_mixed_resolution(problem):
+    train, test, cfg = problem
+    shards = partition_iid(train, 8)
+    fl = FLConfig(L=5, T=16, batch_size=48, alpha=0.01, eval_every=8,
+                  seed=0)
+    res = run_fl(train, test, shards, cfg,
+                 MixedResolutionQuantizer(lambda_=0.05, b=10),
+                 power=None, chan=None, fl=fl)
+    best = max(l.test_acc for l in res.logs if l.test_acc is not None)
+    assert best > 0.5            # 4 classes, chance = 0.25
+    assert res.mean_s() < 0.6    # adaptivity: not everything high-res
+
+
+def test_mixed_resolution_tracks_classic(problem):
+    """Fig. 2 claim: mixed-resolution ~ classic FL accuracy, >>fewer bits."""
+    train, test, cfg = problem
+    shards = partition_iid(train, 8)
+    fl = FLConfig(L=5, T=20, batch_size=48, alpha=0.01, eval_every=5)
+    r_classic = run_fl(train, test, shards, cfg, ClassicQuantizer(),
+                       None, None, fl)
+    r_mixed = run_fl(train, test, shards, cfg,
+                     MixedResolutionQuantizer(lambda_=0.05, b=10),
+                     None, None, fl)
+
+    def best(r):
+        return max(l.test_acc for l in r.logs if l.test_acc is not None)
+
+    # comparable accuracy (small-model FL runs are noisy; the full
+    # benchmark in benchmarks/fig2_convergence.py runs the real horizon)
+    assert best(r_mixed) >= best(r_classic) - 0.12
+    assert r_mixed.mean_bits() < 0.15 * r_classic.mean_bits()  # >85% saved
+
+
+def test_fl_with_power_control_latency(problem):
+    train, test, cfg = problem
+    shards = partition_dirichlet(train, 8, alpha=0.5)
+    chan = make_channel(CFmMIMOConfig(K=8), seed=0)
+    fl = FLConfig(L=2, T=4, batch_size=16, eval_every=4,
+                  latency_budget_s=None)
+    res = run_fl(train, test, shards, cfg,
+                 MixedResolutionQuantizer(lambda_=0.2, b=10),
+                 BisectionLPPowerControl(), chan, fl)
+    assert all(l.uplink_latency_s > 0 for l in res.logs)
+    assert res.logs[-1].cum_latency_s > 0
+
+
+def test_fl_latency_budget_caps_rounds(problem):
+    train, test, cfg = problem
+    shards = partition_iid(train, 8)
+    chan = make_channel(CFmMIMOConfig(K=8), seed=0)
+    fl_unlim = FLConfig(L=2, T=6, batch_size=16, eval_every=6)
+    r1 = run_fl(train, test, shards, cfg, ClassicQuantizer(),
+                BisectionLPPowerControl(), chan, fl_unlim)
+    budget = r1.logs[2].cum_latency_s  # allow ~3 rounds
+    fl_budget = FLConfig(L=2, T=6, batch_size=16, eval_every=6,
+                         latency_budget_s=budget)
+    r2 = run_fl(train, test, shards, cfg, ClassicQuantizer(),
+                BisectionLPPowerControl(), chan, fl_budget)
+    assert r2.rounds_completed <= 3

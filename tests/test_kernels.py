@@ -1,0 +1,123 @@
+"""Pallas kernel tests: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.ops import (flash_decode_op, sign_dequant_reduce_op,
+                               signpack_op)
+from repro.kernels.quant_pack import sign_dequant_reduce, signpack
+from repro.kernels.ref import (flash_decode_ref, sign_dequant_reduce_ref,
+                               signpack_ref)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+# ------------------------------------------------------------- signpack
+@pytest.mark.parametrize("W", [4, 256, 1024])
+def test_signpack_matches_ref(W):
+    x = rand(0, (W, 128))
+    got = signpack(x, interpret=True, block_rows=min(256, W))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(signpack_ref(x)))
+
+
+def test_signpack_op_flat_roundtrip():
+    d = 128 * 64
+    x = rand(1, (d,))
+    words = signpack_op(x)
+    assert words.shape == (d // 32,) and words.dtype == jnp.uint32
+    # consistency with core packing (wire-format compatibility)
+    from repro.core.quantize import pack_signs
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np.asarray(pack_signs(x)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([1, 2, 8]))
+def test_signpack_property(seed, wmul):
+    W = 8 * wmul
+    x = rand(seed, (W, 128))
+    got = signpack(x, interpret=True, block_rows=W)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(signpack_ref(x)))
+
+
+# -------------------------------------------------- sign dequant+reduce
+@pytest.mark.parametrize("G,W", [(1, 8), (4, 256), (16, 64)])
+def test_sign_dequant_reduce_matches_ref(G, W):
+    rng = np.random.default_rng(0)
+    words = jnp.asarray(rng.integers(0, 2 ** 32, (G, W, 4), dtype=np.uint64)
+                        .astype(np.uint32))
+    scales = jnp.asarray(rng.uniform(0.1, 2.0, G), jnp.float32)
+    got = sign_dequant_reduce(words, scales, interpret=True,
+                              block_rows=min(256, W))
+    want = sign_dequant_reduce_ref(words, scales)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_sign_pack_dequant_end_to_end():
+    """pack(x) -> dequant == sign(x) * scale (the aggregation fast path)."""
+    d = 128 * 32
+    x = rand(2, (d,))
+    words = signpack_op(x)
+    out = sign_dequant_reduce_op(words[None], jnp.asarray([0.5]))
+    expect = np.where(np.asarray(x) > 0, 0.5, -0.5)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-6)
+
+
+# ----------------------------------------------------------- flash decode
+@pytest.mark.parametrize("B,Hkv,G,S,D,Dv,dtype", [
+    (1, 1, 1, 512, 64, 64, jnp.float32),
+    (2, 4, 2, 1024, 128, 128, jnp.float32),
+    (2, 2, 8, 2048, 64, 64, jnp.bfloat16),
+    (1, 8, 5, 512, 128, 64, jnp.float32),   # uneven group, Dv != D
+])
+def test_flash_decode_matches_ref(B, Hkv, G, S, D, Dv, dtype):
+    q = rand(0, (B, Hkv, G, D), dtype)
+    k = rand(1, (B, Hkv, S, D), dtype)
+    v = rand(2, (B, Hkv, S, Dv), dtype)
+    length = jnp.asarray(S - 17, jnp.int32)
+    from repro.kernels.flash_decode import flash_decode
+    got = flash_decode(q, k, v, length, kv_block=256, interpret=True)
+    want = flash_decode_ref(q, k, v, length)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_decode_short_length():
+    """Masking: only the first 3 cache entries count."""
+    B, Hkv, G, S, D = 1, 1, 1, 512, 64
+    q = rand(0, (B, Hkv, G, D))
+    k = rand(1, (B, Hkv, S, D))
+    v = rand(2, (B, Hkv, S, D))
+    from repro.kernels.flash_decode import flash_decode
+    got = flash_decode(q, k, v, jnp.asarray(3, jnp.int32),
+                       kv_block=128, interpret=True)
+    want = flash_decode_ref(q, k, v, jnp.asarray(3, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_op_gqa_layout():
+    """ops wrapper: [B,H,D] x [B,S,Hkv,D] layout equals oracle."""
+    B, H, Hkv, S, D = 2, 8, 2, 1024, 64
+    q = rand(0, (B, H, D))
+    k = rand(1, (B, S, Hkv, D))
+    v = rand(2, (B, S, Hkv, D))
+    length = jnp.asarray(S, jnp.int32)
+    got = flash_decode_op(q, k, v, length, kv_block=256)
+    want = flash_decode_ref(q.reshape(B, Hkv, H // Hkv, D),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), length)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want.reshape(B, H, D)),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,244 @@
+"""Quantizer unit + property tests, incl. Lemma 1 verification."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quantize import (AquilaQuantizer, ClassicQuantizer,
+                                 LAQQuantizer, MixedResolutionQuantizer,
+                                 TopQQuantizer, lemma1_bound, make_quantizer,
+                                 mixed_resolution_quantize, pack_codes,
+                                 pack_signs, static_budget_encode,
+                                 static_budget_roundtrip, unpack_codes,
+                                 unpack_signs, wire_bits)
+from repro.core.quantize.mixed_resolution import lemma1_bound_realized
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand_vec(seed, d=4096, scale=1.0):
+    rng = np.random.default_rng(seed)
+    # heavy-tailed like real gradient deltas: mostly near-zero, few spikes
+    x = rng.standard_normal(d) * scale
+    spikes = rng.choice(d, size=max(1, d // 100), replace=False)
+    x[spikes] *= 50.0
+    return jnp.asarray(x, jnp.float32)
+
+
+# ---------------------------------------------------------------- mixed-res
+def dense_spectrum_vec(seed, d=4096):
+    """Vector with a dense magnitude spectrum (no gap at any threshold):
+    magnitudes uniform in [0, 1] — the regime where the paper's eq. (9)
+    holds as printed (dw_q ~= lambda * inf)."""
+    rng = np.random.default_rng(seed)
+    mags = rng.uniform(0.0, 1.0, d)
+    signs = rng.choice([-1.0, 1.0], d)
+    return jnp.asarray(mags * signs, jnp.float32)
+
+
+@pytest.mark.parametrize("lam,b", [(0.05, 10), (0.2, 10), (0.4, 4), (0.8, 2)])
+def test_mixed_resolution_lemma1_paper_bound_no_gap(lam, b):
+    """Lemma 1 eq. (9) under its implicit no-gap condition.
+
+    With a dense magnitude spectrum dw_q -> lambda*inf and the printed
+    constant is valid (small slack for the finite-sample gap)."""
+    for seed in range(5):
+        x = dense_spectrum_vec(seed)
+        res = mixed_resolution_quantize(x, lam, b)
+        err = jnp.max(jnp.abs(x - res.recon))
+        bound = lemma1_bound(lam, b) * jnp.max(jnp.abs(x))
+        # finite-sample gap: dw_q exceeds lambda*inf by <= one order stat
+        slack = float(res.aux["dw_q"]) / 2 - lam / 2 * float(res.aux["inf"])
+        assert float(err) <= float(bound) + max(slack, 0.0) + 1e-5
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.01, 0.99),
+       st.integers(2, 12))
+def test_mixed_resolution_lemma1_realized_property(seed, lam, b):
+    """Corrected (data-dependent) Lemma 1 holds for ANY input — including
+    heavy-tailed vectors with magnitude gaps at the threshold, where the
+    paper's printed constant can be exceeded (documented repro finding)."""
+    x = rand_vec(seed, d=512)
+    res = mixed_resolution_quantize(x, lam, b)
+    err = float(jnp.max(jnp.abs(x - res.recon)))
+    inf = float(res.aux["inf"])
+    rho = float(res.aux["dw_q"]) / inf
+    bound = lemma1_bound_realized(lam, b, rho) * inf
+    assert err <= bound * (1 + 1e-4)
+
+
+def test_lemma1_gap_counterexample():
+    """Explicit counterexample to eq. (9) as printed: magnitude gap at the
+    threshold makes the low-res reconstruction error dw_q/2 > c_j*inf."""
+    lam, b = 0.05, 10
+    x = jnp.asarray([100.0, 50.0, 0.01], jnp.float32)  # dw_q=50 >> lam*inf=5
+    res = mixed_resolution_quantize(x, lam, b)
+    err = float(jnp.max(jnp.abs(x - res.recon)))
+    paper_bound = lemma1_bound(lam, b) * 100.0
+    assert err > paper_bound  # the printed bound fails here...
+    rho = float(res.aux["dw_q"]) / 100.0
+    assert err <= lemma1_bound_realized(lam, b, rho) * 100.0 * (1 + 1e-5)
+
+
+def test_mixed_resolution_bit_accounting():
+    x = rand_vec(0, d=10000)
+    lam, b = 0.2, 10
+    res = mixed_resolution_quantize(x, lam, b)
+    d = x.size
+    s = float(res.aux["s"])
+    expected = d * (b * s + 1 - s) + 32
+    assert abs(float(res.bits) - expected) < 1e-3
+    # adaptive: higher threshold -> fewer high-res -> fewer bits
+    res_hi = mixed_resolution_quantize(x, 0.8, b)
+    assert float(res_hi.bits) < float(res.bits)
+
+
+def test_mixed_resolution_zero_vector():
+    x = jnp.zeros(128)
+    res = mixed_resolution_quantize(x, 0.2, 8)
+    assert not jnp.any(jnp.isnan(res.recon))
+    np.testing.assert_allclose(res.recon, 0.0)
+    assert float(res.bits) == 128 + 32
+
+
+def test_mixed_resolution_signs_preserved():
+    """Low-res elements keep their sign (the paper's key claim vs Top-q)."""
+    x = rand_vec(3)
+    res = mixed_resolution_quantize(x, 0.4, 4)
+    nz = jnp.abs(x) > 0
+    assert bool(jnp.all(jnp.where(nz, jnp.sign(res.recon) == jnp.sign(x),
+                                  True)))
+
+
+def test_mixed_resolution_jit_compatible():
+    f = jax.jit(lambda v: mixed_resolution_quantize(v, 0.2, 8).recon)
+    x = rand_vec(1, d=1024)
+    np.testing.assert_allclose(
+        f(x), mixed_resolution_quantize(x, 0.2, 8).recon, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- baselines
+def test_classic_identity():
+    x = rand_vec(0)
+    res, _ = ClassicQuantizer()(x)
+    np.testing.assert_allclose(res.recon, x)
+    assert float(res.bits) == 32 * x.size
+
+
+def test_topq_keeps_largest():
+    x = rand_vec(0, d=1000)
+    res, _ = TopQQuantizer(q=0.01)(x)
+    kept = jnp.sum(res.recon != 0)
+    assert int(kept) >= 10  # >= k (ties allowed)
+    # all kept entries exact
+    mask = res.recon != 0
+    np.testing.assert_allclose(jnp.where(mask, x, 0.0), res.recon)
+
+
+def test_laq_skips_and_state():
+    qz = LAQQuantizer(b=4, xi=1e6)  # huge xi -> always lazy after round 1
+    x = rand_vec(0, d=256)
+    state = qz.init_state(256)
+    res1, state = qz(x, state)
+    assert float(res1.bits) > 0  # first round transmits
+    res2, state = qz(x * 1.001, state)
+    assert float(res2.bits) == 0.0  # lazy skip
+    np.testing.assert_allclose(res2.recon, res1.recon)
+
+
+def test_laq_error_bounded():
+    qz = LAQQuantizer(b=8, xi=0.0)  # never skip
+    x = rand_vec(1, d=512)
+    res, _ = qz(x, qz.init_state(512))
+    r = float(jnp.max(jnp.abs(x)))
+    step = r / (2 ** 7 - 1)
+    assert float(jnp.max(jnp.abs(res.recon - x))) <= step / 2 + 1e-6
+
+
+def test_aquila_adapts_bits():
+    qz = AquilaQuantizer(b_min=2, b_max=8, tol=0.05)
+    x = rand_vec(0, d=512)
+    res, _ = qz(x)
+    assert 2 <= int(res.aux["b_selected"]) <= 8
+    assert float(res.aux["rel_err"]) <= 0.05 or int(res.aux["b_selected"]) == 8
+
+
+def test_registry():
+    for name in ["mixed-resolution", "classic", "laq", "aquila", "top-q"]:
+        q = make_quantizer(name)
+        assert q.name == name
+    with pytest.raises(KeyError):
+        make_quantizer("nope")
+
+
+# ---------------------------------------------------------------- packing
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 300))
+def test_sign_pack_roundtrip(seed, d):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    signs = unpack_signs(pack_signs(x), d)
+    expect = np.where(np.asarray(x) > 0, 1.0, -1.0)
+    np.testing.assert_array_equal(np.asarray(signs), expect)
+
+
+@pytest.mark.parametrize("b", [2, 4, 8, 16])
+def test_code_pack_roundtrip(b):
+    rng = np.random.default_rng(b)
+    n = 173
+    codes = jnp.asarray(rng.integers(0, 2 ** b, n), jnp.uint32)
+    out = unpack_codes(pack_codes(codes, b), b, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+def test_pack_codes_rejects_bad_b():
+    with pytest.raises(ValueError):
+        pack_codes(jnp.zeros(4, jnp.uint32), 3)
+
+
+# ---------------------------------------------------------------- static
+@pytest.mark.parametrize("b", [2, 4, 8])
+def test_static_budget_matches_dynamic_semantics(b):
+    """Static top-k budget == dynamic threshold when k = realized dbar."""
+    x = rand_vec(0, d=2048)
+    k = 64
+    recon = static_budget_roundtrip(x, k, b)
+    # high-res set: top-k magnitudes are reconstructed on the b-bit grid
+    absx = jnp.abs(x)
+    vals, idx = jax.lax.top_k(absx, k)
+    dw_q, inf = vals[-1], vals[0]
+    step = (inf - dw_q) / (2 ** b - 1)
+    err_hi = jnp.max(jnp.abs(recon[idx] - x[idx]))
+    assert float(err_hi) <= float(step) / 2 + 1e-5
+    # low-res: +- dw_q/2 with correct sign
+    mask = jnp.ones_like(x, bool).at[idx].set(False)
+    lo = recon[mask]
+    np.testing.assert_allclose(jnp.abs(lo), float(dw_q) / 2, rtol=1e-6)
+    assert bool(jnp.all(jnp.sign(lo) == jnp.where(x[mask] > 0, 1.0, -1.0)))
+
+
+def test_static_budget_lemma1_with_realized_lambda():
+    x = rand_vec(5, d=4096)
+    k, b = 128, 4
+    recon = static_budget_roundtrip(x, k, b)
+    vals, _ = jax.lax.top_k(jnp.abs(x), k)
+    lam_eff = float(vals[-1] / vals[0])
+    bound = lemma1_bound(lam_eff, b) * float(vals[0])
+    assert float(jnp.max(jnp.abs(recon - x))) <= bound * (1 + 1e-4)
+
+
+def test_wire_bits_smaller_than_classic():
+    d, k, b = 1_000_000, 10_000, 4
+    assert wire_bits(d, k, b) < 0.05 * (32 * d)  # >95% reduction
+
+
+def test_static_budget_jit():
+    x = rand_vec(2, d=1024)
+    f = jax.jit(lambda v: static_budget_roundtrip(v, 32, 4))
+    np.testing.assert_allclose(f(x), static_budget_roundtrip(x, 32, 4),
+                               rtol=1e-6)

@@ -1,0 +1,96 @@
+"""Optimizer / data-pipeline / checkpoint substrate tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (latest_step, restore_checkpoint,
+                                 save_checkpoint)
+from repro.data import TokenBatcher, make_token_stream, prefetch
+from repro.optim import adagrad, adam, apply_updates, make_optimizer, sgd
+
+
+def quad_problem():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    return params, loss, target
+
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("adagrad", {"alpha": 0.5}),
+    ("adam", {"lr": 0.1}),
+    ("sgd", {"lr": 0.1, "momentum": 0.9}),
+])
+def test_optimizers_converge(name, kwargs):
+    params, loss, target = quad_problem()
+    opt = make_optimizer(name, **kwargs)
+    state = opt.init(params)
+    for _ in range(300):
+        grads = jax.grad(loss)(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    np.testing.assert_allclose(params["w"], target, atol=0.05)
+
+
+def test_adagrad_matches_eq2():
+    """One AdaGrad step == eq. (2) by hand."""
+    opt = adagrad(alpha=0.1, eps=1e-8)
+    params = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([0.5, -1.0])}
+    state = opt.init(params)
+    upd, state = opt.update(g, state, params)
+    expect = -0.1 * g["w"] / jnp.sqrt(g["w"] ** 2 + 1e-8)
+    np.testing.assert_allclose(upd["w"], expect, rtol=1e-6)
+    np.testing.assert_allclose(state["w"], g["w"] ** 2)
+
+
+def test_token_batcher_shapes_and_determinism():
+    stream = make_token_stream(5000, vocab=100, seed=0)
+    assert stream.min() >= 0 and stream.max() < 100
+    b1 = list(TokenBatcher(stream, batch=4, seq=32, seed=1))
+    b2 = list(TokenBatcher(stream, batch=4, seq=32, seed=1))
+    assert len(b1) > 0
+    for a, b in zip(b1, b2):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        assert a["tokens"].shape == (4, 32)
+
+
+def test_prefetch_preserves_order():
+    items = list(range(20))
+    assert list(prefetch(iter(items), depth=3)) == items
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": jnp.arange(5, dtype=jnp.float32),
+            "nested": {"b": jnp.ones((2, 3))}}
+    save_checkpoint(d, 10, tree, metadata={"note": "x"})
+    save_checkpoint(d, 20, tree)
+    assert latest_step(d) == 20
+    out, step, meta = restore_checkpoint(d, tree, step=10)
+    assert step == 10 and meta == {"note": "x"}
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    np.testing.assert_array_equal(out["nested"]["b"], tree["nested"]["b"])
+
+
+def test_checkpoint_retention(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": jnp.zeros(2)}
+    for s in range(6):
+        save_checkpoint(d, s, tree, keep=3)
+    files = [f for f in os.listdir(d) if f.endswith(".npz")]
+    assert len(files) == 3
+    assert latest_step(d) == 5
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": jnp.zeros(3)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, {"a": jnp.zeros(4)})

@@ -16,18 +16,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,table2,table3,overhead")
+                    help="comma list: fig2,table2,table3,overhead,"
+                         "sim_engine")
     args = ap.parse_args()
     quick = not args.full
 
-    from . import fig2_convergence, overhead, table2_accuracy, \
-        table3_latency
+    from . import fig2_convergence, overhead, sim_engine, \
+        table2_accuracy, table3_latency
     benches = {
         "overhead": lambda: overhead.run(quick=quick),
         "fig2": lambda: fig2_convergence.run(T=40 if quick else 100,
                                              quick=quick),
         "table2": lambda: table2_accuracy.run(quick=quick),
         "table3": lambda: table3_latency.run(quick=quick),
+        "sim_engine": lambda: sim_engine.run(quick=quick),
     }
     selected = list(benches) if args.only is None \
         else args.only.split(",")

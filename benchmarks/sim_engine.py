@@ -1,0 +1,92 @@
+"""Vectorized engine vs sequential loop — per-round wall clock.
+
+Times one FL round of the legacy sequential loop (one jit dispatch per
+user + eager per-user quantization; repro.fl.run_fl_sequential) against
+the repro.sim vectorized engine in its fused production mode, at K=20
+and K=40.
+
+Two workload points:
+* ``dispatch`` — small per-user local step (L=1, b=2, tiny CNN): the
+  regime the engine targets, where the sequential loop's per-user
+  dispatch + eager-op overhead dominates; the engine collapses it into
+  one jit step per round (>= 5x at K=20 is the acceptance bar; this
+  box measures ~15-25x).
+* ``paperlike`` — the hw=16 CNN at L=5, b=32: per-user compute (conv
+  grads) dominates on CPU, so the win shrinks toward compute parity;
+  reported for honesty.  On accelerators the vmap batching recovers
+  the gap (local_batching="vmap").
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.configs.paper_cnn import PaperCNNConfig
+from repro.core.quantize import MixedResolutionQuantizer
+from repro.data import make_image_classification, partition_iid
+from repro.fl import FLConfig, run_fl_sequential
+from repro.sim import EngineConfig, VectorizedFLEngine
+
+from .common import csv_row
+
+_DISPATCH_CNN = PaperCNNConfig(input_hw=8, n_classes=4, conv_filters=4,
+                               dense_units=64)
+_PAPERLIKE_CNN = PaperCNNConfig(input_hw=16, n_classes=4)
+
+
+def _time_per_round(fn, T: int) -> float:
+    fn()                                   # warm / compile
+    t0 = time.time()
+    fn()
+    return (time.time() - t0) / T
+
+
+def _bench_point(name: str, cnn_cfg: PaperCNNConfig, K: int, L: int,
+                 b: int, T: int):
+    n = max(1200, K * 60)
+    full = make_image_classification(n_samples=n, hw=cnn_cfg.input_hw,
+                                     n_classes=cnn_cfg.n_classes, seed=0)
+    train = dataclasses.replace(full, x=full.x[:n - 200],
+                                y=full.y[:n - 200])
+    test = dataclasses.replace(full, x=full.x[n - 200:],
+                               y=full.y[n - 200:])
+    shards = partition_iid(train, K)
+    fl = FLConfig(L=L, T=T, batch_size=b, alpha=0.02, eval_every=10_000,
+                  seed=0)
+
+    quant = MixedResolutionQuantizer(lambda_=0.2, b=10)
+    engine = VectorizedFLEngine(train, test, shards, cnn_cfg, quant,
+                                None, None, fl,
+                                engine=EngineConfig(fused=True))
+    t_eng = _time_per_round(lambda: engine.run(), T)
+    t_seq = _time_per_round(
+        lambda: run_fl_sequential(train, test, shards, cnn_cfg, quant,
+                                  None, None, fl), T)
+    speedup = t_seq / t_eng
+    return csv_row(
+        f"sim_engine/{name}", t_eng * 1e6,
+        f"seq_ms={t_seq * 1e3:.1f};eng_ms={t_eng * 1e3:.1f};"
+        f"speedup={speedup:.1f}x;K={K};L={L};b={b};d={engine.d}")
+
+
+def run(quick: bool = True, out="runs/bench"):
+    T = 6 if quick else 10
+    lines = [
+        _bench_point("dispatch-K20", _DISPATCH_CNN, 20, 1, 2, T),
+        _bench_point("dispatch-K40", _DISPATCH_CNN, 40, 1, 2, T),
+    ]
+    # compute-bound reference point (scaled down in quick mode)
+    if quick:
+        lines.append(_bench_point("paperlike-K20", _PAPERLIKE_CNN,
+                                  20, 2, 16, 3))
+    else:
+        lines.append(_bench_point("paperlike-K20", _PAPERLIKE_CNN,
+                                  20, 5, 32, 3))
+        lines.append(_bench_point("paperlike-K40", _PAPERLIKE_CNN,
+                                  40, 5, 32, 3))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

@@ -1,44 +1,60 @@
 """Table II — accuracy of mixed-resolution FL vs classic FL on the
 three datasets, IID and non-IID (K=20, L=5, b=10, lambda=0.2 in the
-paper; reduced K/T in quick mode)."""
+paper; reduced K/T in quick mode).
+
+Runs on the repro.sim sweep runner: each (dataset, partition) cell is a
+Scenario and the ours-vs-classic pair is a quantizer grid executed on
+the vectorized engine.
+"""
 from __future__ import annotations
 
 import csv
 import os
 
-from repro.core.quantize import ClassicQuantizer, MixedResolutionQuantizer
-from repro.fl import FLConfig, run_fl
+from repro.sim import Scenario, run_grid
 
-from .common import Timer, csv_row, make_problem, split
+from .common import Timer, csv_row
 
 
 def run(quick: bool = True, out="runs/bench"):
     os.makedirs(out, exist_ok=True)
-    K = 8 if quick else 20
-    T = 20 if quick else 100
-    fl = FLConfig(L=5, T=T, batch_size=48, alpha=0.01, eval_every=5)
+    K = 6 if quick else 20
+    T = 10 if quick else 100
+    L = 3 if quick else 5
+    batch = 32 if quick else 48
+    n_train = 1200 if quick else 8000
+    datasets = (["cifar10-syn", "fashion-syn"] if quick
+                else ["cifar10-syn", "cifar100-syn", "fashion-syn"])
+
+    quantizers = {
+        "ours": ("mixed-resolution", {"lambda_": 0.2, "b": 10}),
+        "classic": ("classic", {}),
+    }
     lines, rows = [], []
-    for ds in (["cifar10-syn", "fashion-syn"] if quick
-               else ["cifar10-syn", "cifar100-syn", "fashion-syn"]):
-        train, test, cfg = make_problem(ds, n_train=2000 if quick else 8000)
+    for ds in datasets:
         for iid in (True, False):
-            shards = split(train, K, iid=iid)
-            with Timer() as t:
-                ours = run_fl(train, test, shards, cfg,
-                              MixedResolutionQuantizer(lambda_=0.2, b=10),
-                              None, None, fl)
-                classic = run_fl(train, test, shards, cfg,
-                                 ClassicQuantizer(), None, None, fl)
-            b = max(l.test_acc for l in ours.logs if l.test_acc is not None)
-            c = max(l.test_acc for l in classic.logs
-                    if l.test_acc is not None)
-            rbar = 100 * (1 - ours.mean_bits() / classic.mean_bits())
             tag = f"{ds}/{'iid' if iid else 'noniid'}"
-            rows.append([tag, b, c, 100 * ours.mean_s(), rbar])
+            scn = Scenario(
+                name=f"table2-{ds}-{'iid' if iid else 'noniid'}",
+                description="Table II cell", dataset=ds,
+                n_train=n_train, n_test=max(400, n_train // 5),
+                partition="iid" if iid else "dirichlet",
+                K=K, T=T, L=L, batch_size=batch, lr=0.01, M=None,
+                eval_every=5)
+            with Timer() as t:
+                results = run_grid([scn], quantizers, {"none": None},
+                                   quick=False)
+            by = {r.cell.quantizer_label: r.summary for r in results}
+            b = by["ours"]["best_acc"]
+            c = by["classic"]["best_acc"]
+            s_pct = 100 * by["ours"]["mean_s"]
+            rbar = 100 * (1 - by["ours"]["mean_bits_per_user"]
+                          / by["classic"]["mean_bits_per_user"])
+            rows.append([tag, b, c, s_pct, rbar])
             lines.append(csv_row(
                 f"table2/{tag}", t.seconds * 1e6 / (2 * T),
                 f"ours={b:.3f};classic={c:.3f};"
-                f"s={100 * ours.mean_s():.2f}%;rbar={rbar:.1f}%"))
+                f"s={s_pct:.2f}%;rbar={rbar:.1f}%"))
     with open(os.path.join(out, "table2.csv"), "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(["setting", "acc_ours", "acc_classic", "s_pct",

@@ -5,44 +5,43 @@ power control (ours bisection+LP, Dinkelbach, max-sum-rate): run FL
 over the CFmMIMO channel with a total latency budget and report T_max
 (rounds completed) and test accuracy.  Paper: K=40, L=5, b=4,
 lambda=0.4, budget 3s (quick mode scales these down).
+
+Runs as one quantizer x power grid on the repro.sim sweep runner
+(vectorized engine, fused mode).
 """
 from __future__ import annotations
 
 import csv
+import dataclasses
 import os
 
-import numpy as np
-
-from repro.core.channel import CFmMIMOConfig, make_channel
 from repro.core.power import (BisectionLPPowerControl,
                               DinkelbachPowerControl,
                               MaxSumRatePowerControl)
-from repro.core.quantize import (AquilaQuantizer, LAQQuantizer,
-                                 MixedResolutionQuantizer, TopQQuantizer)
-from repro.fl import FLConfig, run_fl
+from repro.core.quantize import LAQQuantizer
+from repro.sim import get_scenario, run_cell
 
-from .common import Timer, csv_row, make_problem, split
+from .common import Timer, csv_row
 
 
 def run(quick: bool = True, out="runs/bench"):
     os.makedirs(out, exist_ok=True)
-    K = 8 if quick else 40
-    T = 12 if quick else 60
-    train, test, cfg = make_problem("cifar10-syn",
-                                    n_train=2000 if quick else 8000)
-    shards = split(train, K, iid=False)
-    chan = make_channel(CFmMIMOConfig(K=K), seed=0)
+    K = 6 if quick else 40
+    T = 8 if quick else 60
+    scn = dataclasses.replace(
+        get_scenario("paper-table3"), K=K, T=T, L=3 if quick else 5,
+        n_train=1200 if quick else 8000,
+        n_test=300 if quick else 1600, batch_size=32, lr=0.01,
+        eval_every=4)   # budget-capped runs still get evaluated
 
-    # calibrate the budget so the best scheme can do ~T rounds and the
-    # worst is clearly capped (the paper uses an absolute 3 s budget)
     lam, b = 0.4, 4
     s_ref = 0.01
     quantizers = {
-        "mixed-resolution": lambda: MixedResolutionQuantizer(lambda_=lam,
-                                                             b=b),
-        "top-q": lambda: TopQQuantizer(q=max(s_ref, 0.005)),
-        "laq": lambda: LAQQuantizer(b=b, xi=0.5),
-        "aquila": lambda: AquilaQuantizer(b_min=2, b_max=8, tol=0.05),
+        "mixed-resolution": ("mixed-resolution",
+                             {"lambda_": lam, "b": b}),
+        "top-q": ("top-q", {"q": max(s_ref, 0.005)}),
+        "laq": ("laq", {"b": b, "xi": 0.5}),
+        "aquila": ("aquila", {"b_min": 2, "b_max": 8, "tol": 0.05}),
     }
     powers = {
         "ours-bisection-lp": BisectionLPPowerControl(),
@@ -51,28 +50,26 @@ def run(quick: bool = True, out="runs/bench"):
     }
 
     # budget: time for ~2/3 T rounds of classic-ish payload under our PC
-    probe = run_fl(train, test, shards, cfg, quantizers["laq"](),
-                   powers["ours-bisection-lp"], chan,
-                   FLConfig(L=5, T=3, batch_size=32, alpha=0.01,
-                            eval_every=3))
-    per_round = probe.logs[-1].cum_latency_s / 3
+    probe = run_cell(dataclasses.replace(scn, T=3),
+                     LAQQuantizer(b=b, xi=0.5),
+                     powers["ours-bisection-lp"], quick=False)
+    per_round = probe.result.logs[-1].cum_latency_s / 3
     budget = per_round * T * 0.6
 
     lines, rows = [], []
-    for qname, qf in quantizers.items():
+    for qname, qspec in quantizers.items():
         for pname, pc in powers.items():
-            fl = FLConfig(L=5, T=T, batch_size=32, alpha=0.01,
-                          eval_every=4, latency_budget_s=budget)
             with Timer() as t:
-                res = run_fl(train, test, shards, cfg, qf(), pc, chan, fl)
-            accs = [l.test_acc for l in res.logs if l.test_acc is not None]
-            acc = max(accs) if accs else float("nan")
-            rows.append([qname, pname, res.rounds_completed, acc,
-                         res.mean_bits()])
+                res = run_cell(scn, qspec, pc, quick=False,
+                               latency_budget_s=budget,
+                               labels=(qname, pname))
+            acc = res.summary["best_acc"]
+            rows.append([qname, pname, res.result.rounds_completed, acc,
+                         res.summary["mean_bits_per_user"]])
             lines.append(csv_row(
                 f"table3/{qname}/{pname}", t.seconds * 1e6,
-                f"Tmax={res.rounds_completed};acc={acc:.3f};"
-                f"bits={res.mean_bits():.2e}"))
+                f"Tmax={res.result.rounds_completed};acc={acc:.3f};"
+                f"bits={res.summary['mean_bits_per_user']:.2e}"))
     with open(os.path.join(out, "table3.csv"), "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(["quantizer", "power_control", "T_max", "best_acc",

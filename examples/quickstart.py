@@ -1,21 +1,27 @@
 """Quickstart: FL with adaptive mixed-resolution quantization + power
-control over a CFmMIMO channel (Algorithm 1), in ~1 minute on CPU.
+control over a CFmMIMO channel (Algorithm 1), on the repro.sim
+vectorized engine, in ~1 minute on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Part 1 runs the paper's ours-vs-classic comparison through the engine
+directly; part 2 shows the scenario/sweep API that the benchmark
+tables are built on.
 """
 import dataclasses
-
-import numpy as np
 
 from repro.configs.paper_cnn import PaperCNNConfig
 from repro.core.channel import CFmMIMOConfig, make_channel
 from repro.core.power import BisectionLPPowerControl
 from repro.core.quantize import ClassicQuantizer, MixedResolutionQuantizer
 from repro.data import make_image_classification, partition_dirichlet
-from repro.fl import FLConfig, run_fl
+from repro.fl import FLConfig
+from repro.sim import (EngineConfig, Scenario, VectorizedFLEngine,
+                       run_grid)
 
 
-def main():
+def engine_demo():
+    """Ours vs classic on one channel realization, engine API."""
     K = 8
     full = make_image_classification(n_samples=2400, hw=16, n_classes=4,
                                      seed=0)
@@ -25,15 +31,19 @@ def main():
     shards = partition_dirichlet(train, K, alpha=0.3)
     chan = make_channel(CFmMIMOConfig(K=K), seed=0)
     fl = FLConfig(L=5, T=12, batch_size=48, alpha=0.01, eval_every=4)
+    fused = EngineConfig(fused=True)   # one jit step per round
 
     print("== mixed-resolution (ours) + bisection-LP power control ==")
-    ours = run_fl(train, test, shards, cfg,
-                  MixedResolutionQuantizer(lambda_=0.05, b=10),
-                  BisectionLPPowerControl(), chan, fl, verbose=True)
+    ours = VectorizedFLEngine(train, test, shards, cfg,
+                              MixedResolutionQuantizer(lambda_=0.05, b=10),
+                              BisectionLPPowerControl(), chan, fl,
+                              engine=fused).run(verbose=True)
 
     print("== classic FL (32-bit), same channel ==")
-    classic = run_fl(train, test, shards, cfg, ClassicQuantizer(),
-                     BisectionLPPowerControl(), chan, fl, verbose=True)
+    classic = VectorizedFLEngine(train, test, shards, cfg,
+                                 ClassicQuantizer(),
+                                 BisectionLPPowerControl(), chan, fl,
+                                 engine=fused).run(verbose=True)
 
     rbar = 100 * (1 - ours.mean_bits() / classic.mean_bits())
     speedup = (classic.logs[-1].cum_latency_s
@@ -45,5 +55,28 @@ def main():
           f"classic={classic.final_acc:.3f}")
 
 
+def sweep_demo():
+    """Scenario x quantizer sweep — the benchmark-table workflow."""
+    scn = Scenario(name="quickstart-churn",
+                   description="small churn scenario",
+                   dataset="fashion-syn", n_train=800, n_test=200,
+                   K=6, T=6, L=2, batch_size=16, participation=0.7)
+    results = run_grid(
+        [scn],
+        quantizers={"ours": ("mixed-resolution",
+                             {"lambda_": 0.2, "b": 10}),
+                    "classic": ("classic", {})},
+        powers={"ours-pc": "bisection-lp"},
+        quick=False, out_csv="runs/quickstart_sweep.csv")
+    print("\n== sweep results (runs/quickstart_sweep.csv) ==")
+    for r in results:
+        row = r.row()
+        print(f"{row['scenario']:>18s} {row['quantizer']:>8s}: "
+              f"acc={row['best_acc']:.3f} "
+              f"bits/user={row['mean_bits_per_user']:.2e} "
+              f"latency={row['total_latency_s']:.2f}s")
+
+
 if __name__ == "__main__":
-    main()
+    engine_demo()
+    sweep_demo()

@@ -18,11 +18,22 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class QuantResult:
-    """Outcome of quantizing one local delta vector."""
+    """Outcome of quantizing one local delta vector.
+
+    Registered as a pytree so quantizer calls compose with jit/vmap —
+    the batched engine (repro.sim) vmaps __call__ over stacked per-user
+    deltas and gets a QuantResult whose fields carry a leading K axis.
+    """
 
     recon: jax.Array        # dequantized vector, same shape as the input
     bits: jax.Array         # scalar — total payload bits for this vector
     aux: Dict[str, Any]     # scheme-specific diagnostics (s fraction, ...)
+
+
+jax.tree_util.register_pytree_node(
+    QuantResult,
+    lambda r: ((r.recon, r.bits, r.aux), None),
+    lambda _, children: QuantResult(*children))
 
 
 class Quantizer:
@@ -41,6 +52,31 @@ class Quantizer:
     def __call__(self, delta: jax.Array, state: Any = None
                  ) -> Tuple[QuantResult, Any]:
         raise NotImplementedError
+
+    # ------------------------------------------------ batched entry point
+    def init_batched_state(self, K: int, dim: int) -> Any:
+        """Stacked per-user state with a leading K axis (None when
+        stateless).  The default replicates init_state(dim) K times."""
+        state = self.init_state(dim)
+        if state is None:
+            return None
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (K,) + x.shape), state)
+
+    def batched(self, deltas: jax.Array, states: Any = None
+                ) -> Tuple[QuantResult, Any]:
+        """Quantize K stacked delta vectors in one vmapped call.
+
+        ``deltas``: [K, d]; ``states``: output of init_batched_state (or
+        None).  Returns a QuantResult with leading-K fields plus the
+        updated stacked state.  Per-row reductions are taken over the
+        same axis as the unbatched path, so results match __call__
+        row-for-row bitwise.
+        """
+        if states is None:
+            res = jax.vmap(lambda x: self(x, None)[0])(deltas)
+            return res, None
+        return jax.vmap(lambda x, s: self(x, s))(deltas, states)
 
 
 def flatten_pytree(tree) -> Tuple[jax.Array, Any]:

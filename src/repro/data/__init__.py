@@ -1,5 +1,5 @@
 from .federated import (minibatches, partition_dirichlet, partition_iid,
-                        user_fractions)
+                        partition_powerlaw, user_fractions)
 from .pipeline import TokenBatcher, prefetch
 from .synthetic import (ImageDataset, make_dataset,
                         make_image_classification, make_token_stream)

@@ -40,6 +40,26 @@ def partition_dirichlet(ds: ImageDataset, K: int, alpha: float = 0.3,
         rng = np.random.default_rng(seed)
 
 
+def partition_powerlaw(ds: ImageDataset, K: int, exponent: float = 1.3,
+                       seed: int = 0, min_per_user: int = 8
+                       ) -> List[np.ndarray]:
+    """Heterogeneous-size IID split: user j's shard size proportional to
+    ``(j+1)^-exponent`` (Zipf-like device heterogeneity, as in the
+    energy/latency FL-over-CFmMIMO literature), floored at
+    ``min_per_user``.  Label distribution stays IID; only |D_j| varies,
+    so rho_j = |D_j|/|D| and the per-user computation loads spread."""
+    rng = np.random.default_rng(seed)
+    raw = (1.0 + np.arange(K)) ** (-float(exponent))
+    sizes = np.maximum((raw / raw.sum() * len(ds)).astype(int),
+                       min_per_user)
+    # trim the largest shards until the sizes fit the dataset again
+    while sizes.sum() > len(ds):
+        sizes[int(np.argmax(sizes))] -= 1
+    idx = rng.permutation(len(ds))
+    cuts = np.cumsum(sizes)[:-1]
+    return [np.sort(s) for s in np.split(idx[:sizes.sum()], cuts)]
+
+
 def user_fractions(shards: List[np.ndarray]) -> np.ndarray:
     """rho_j = |D_j| / |D|."""
     sizes = np.array([len(s) for s in shards], np.float64)

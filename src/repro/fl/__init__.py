@@ -1,2 +1,3 @@
 from .cnn import cnn_accuracy, cnn_forward, cnn_loss, init_cnn
-from .loop import FLConfig, FLResult, RoundLog, run_fl
+from .loop import (FLConfig, FLResult, RoundLog, run_fl,
+                   run_fl_sequential)

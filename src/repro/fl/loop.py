@@ -17,7 +17,6 @@ benchmark tables, plus a total-latency budget -> T_max accounting.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Dict, List, Optional
 
@@ -78,9 +77,13 @@ class FLResult:
         return float(np.mean([l.mean_s for l in self.logs]))
 
 
-@functools.partial(jax.jit, static_argnums=(3, 4))
-def _local_adagrad(params, xs, ys, L: int, alpha: float):
-    """L AdaGrad steps on stacked minibatches xs [L,b,H,W,C], ys [L,b]."""
+def local_adagrad(params, xs, ys, L: int, alpha: float):
+    """L AdaGrad steps on stacked minibatches xs [L,b,H,W,C], ys [L,b].
+
+    Pure function: the sequential path jits it per user below; the
+    vectorized engine (repro.sim.engine) vmaps it over all K users'
+    stacked minibatches inside one jitted round step.
+    """
     g0 = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
 
     def step(carry, batch):
@@ -97,13 +100,49 @@ def _local_adagrad(params, xs, ys, L: int, alpha: float):
     return w
 
 
+_local_adagrad = jax.jit(local_adagrad, static_argnums=(3, 4))
+
+
 def run_fl(dataset: ImageDataset, test: ImageDataset,
            shards: List[np.ndarray], cnn_cfg: PaperCNNConfig,
            quantizer: Quantizer, power: Optional[PowerController],
            chan: Optional[ChannelRealization], fl: FLConfig,
            verbose: bool = False) -> FLResult:
-    """Algorithm 1.  power/chan None => latency not simulated (pure
-    convergence experiments, e.g. Fig. 2 / Table II)."""
+    """Algorithm 1 — compatibility entry point.
+
+    Delegates to the vectorized engine (repro.sim.engine), which runs
+    all K users' local iterations in one jit dispatch per round and
+    reproduces this module's sequential reference bit-for-bit at fixed
+    seed (tests/test_sim_engine.py).  The engine stacks user batches to
+    [K, L, b], which requires a uniform per-user batch size; when some
+    shard is smaller than batch_size (ragged takes), this falls back to
+    the sequential loop so the per-user ``min(batch_size, |D_j|)``
+    semantics — and bit-for-bit reproducibility — are preserved
+    unconditionally.  power/chan None => latency not simulated (pure
+    convergence experiments, e.g. Fig. 2 / Table II).
+    """
+    if min(len(s) for s in shards) < fl.batch_size:
+        return run_fl_sequential(dataset, test, shards, cnn_cfg,
+                                 quantizer, power, chan, fl,
+                                 verbose=verbose)
+    from repro.sim.engine import VectorizedFLEngine
+
+    engine = VectorizedFLEngine(dataset, test, shards, cnn_cfg, quantizer,
+                                power, chan, fl)
+    return engine.run(verbose=verbose)
+
+
+def run_fl_sequential(dataset: ImageDataset, test: ImageDataset,
+                      shards: List[np.ndarray], cnn_cfg: PaperCNNConfig,
+                      quantizer: Quantizer, power: Optional[PowerController],
+                      chan: Optional[ChannelRealization], fl: FLConfig,
+                      verbose: bool = False) -> FLResult:
+    """Algorithm 1, one user at a time — the original seed loop.
+
+    Kept as the numerical reference for the engine equivalence test and
+    the dispatch-overhead baseline in benchmarks/sim_engine.py: per
+    round it pays one jit dispatch per user for the local AdaGrad run
+    plus an eager quantizer call per user."""
     K = len(shards)
     rho = user_fractions(shards)
     rng = np.random.default_rng(fl.seed)

@@ -1,0 +1,16 @@
+"""repro.sim — vectorized multi-user, multi-scenario FL-over-CFmMIMO
+simulation engine.
+
+* :mod:`engine` — all K users' local AdaGrad iterations, quantization
+  and aggregation in ONE jit-compiled step (vs one dispatch per user
+  per round in the legacy sequential loop);
+* :mod:`scenarios` — named workload registry (paper defaults, user
+  churn, Monte-Carlo channel redraws, heterogeneous data, K/M grids);
+* :mod:`sweep` — scenario x quantizer x power-controller grid runner;
+* :mod:`metrics` — round-log aggregation the benchmark tables consume.
+"""
+from .engine import EngineConfig, VectorizedFLEngine
+from .metrics import summarize_logs, write_metrics_csv
+from .scenarios import (SCENARIOS, Scenario, build_problem, get_scenario,
+                        grid_scenarios, list_scenarios, register_scenario)
+from .sweep import SweepCell, SweepResult, run_cell, run_grid

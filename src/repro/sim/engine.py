@@ -1,0 +1,373 @@
+"""Vectorized FL-over-CFmMIMO engine — all K users in one dispatch.
+
+The legacy loop (repro.fl.loop.run_fl_sequential) trains users one at a
+time: per round it pays K jit dispatches for the local AdaGrad runs
+plus K eager op-by-op quantizer calls, so wall-clock at the paper's
+K=20/40 is dominated by dispatch overhead, not compute.  This engine
+stacks the per-user minibatches to [K, L, b, ...] and runs the local
+training of ALL users as one vmapped, jit-compiled step, followed by
+one batched (vmapped) quantizer call on the stacked [K, d] deltas.
+
+Execution modes (EngineConfig):
+
+* exact (``fused=False``, default — what run_fl delegates to): the K
+  local AdaGrad runs + delta flattening are a single jit dispatch;
+  quantization and the rho-weighted aggregation then replay the
+  sequential loop's eager op-for-op arithmetic in the same order.
+  Round logs (params, bits, latency, accuracy) reproduce
+  run_fl_sequential BIT-FOR-BIT at fixed seed (asserted by
+  tests/test_sim_engine.py).  Fusing quantization into the same XLA
+  graph would contract mul+add chains into FMAs and drift from the
+  eager reference by 1 ulp per op — measured, and why this mode keeps
+  quantize/aggregate eager.
+* fused (``fused=True`` — what the scenario sweeps run): train,
+  batched quantize, aggregation and the model update compile into ONE
+  jit step per round.  Fastest path; equals the exact mode to float32
+  roundoff (cross-op FMA contraction), not bit-for-bit.
+* ``aggregation="signplane"`` (implies fused) — the fused step routes
+  the low-resolution plane of the mixed-resolution scheme through the
+  Pallas wire-format kernels: every user's delta sign plane is
+  bit-packed with ``signpack`` ([W,128] f32 -> [W,4] uint32) and the
+  rho*dw_q/2-weighted multi-user reduction runs in
+  ``sign_dequant_reduce`` — the packed uint32 planes a real multi-peer
+  aggregation would move — plus a dense correction on the (sparse)
+  high-resolution support.  Exercises the wire format end-to-end
+  instead of only in unit tests.
+
+Beyond the paper's fixed setting the engine simulates per-round user
+churn (partial participation with re-normalized aggregation weights and
+frozen quantizer state for absent users) and Monte-Carlo channel
+redraws (fresh large-scale realization every ``redraw_channel_every``
+rounds) — see repro.sim.scenarios for the named workloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import PaperCNNConfig
+from repro.core.channel import (ChannelRealization, computation_latency,
+                                make_channel)
+from repro.core.power.base import PowerController
+from repro.core.quantize import Quantizer
+from repro.core.quantize.base import flatten_pytree, unflatten_pytree
+from repro.data.federated import user_fractions
+from repro.data.synthetic import ImageDataset
+from repro.kernels.quant_pack import sign_dequant_reduce, signpack
+
+# signpack tiles the flat vector as [W, 128] rows and blocks W by
+# min(256, W); padding d to a multiple of 128*256 keeps every W a
+# multiple of the block size.
+_SIGN_TILE = 128 * 256
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine-level knobs beyond the paper's Algorithm 1."""
+    aggregation: str = "dense"       # "dense" | "signplane" (Pallas wire)
+    # fused=False (exact mode): only the K local AdaGrad runs share one
+    # jit dispatch; quantization and aggregation replay the sequential
+    # loop's eager per-op arithmetic — BIT-FOR-BIT equal to
+    # run_fl_sequential.  fused=True (production mode): train, batched
+    # quantize, aggregate and model update compile into ONE jit step
+    # per round; XLA's cross-op fusion (FMA contraction etc.) makes it
+    # equal to the exact mode only to float32 roundoff.
+    # aggregation="signplane" always runs fused.
+    fused: bool = False
+    # How the K users' local AdaGrad runs are batched inside the single
+    # jitted step.  "map" (lax.map) compiles the per-user graph once and
+    # loops it on-device — on CPU the per-user convs hit the fast
+    # unbatched lowering (vmap turns them into grouped convs, measured
+    # ~3x slower there).  "vmap" batches all users' convs into one
+    # grouped launch — the right choice on TPU/GPU.  Both are bitwise
+    # identical to the sequential per-user jit.
+    local_batching: str = "map"      # "map" | "vmap"
+    participation: float = 1.0       # P(user active in a round) — churn
+    redraw_channel_every: int = 0    # 0 = fixed realization (paper)
+    channel_seed: int = 0            # base seed for Monte-Carlo redraws
+
+    @property
+    def effective_fused(self) -> bool:
+        return self.fused or self.aggregation == "signplane"
+
+
+def _subchannel(chan: ChannelRealization, idx: np.ndarray
+                ) -> ChannelRealization:
+    """Restrict a realization to the active-user subset: inactive users
+    neither transmit (no power allocated, no interference) nor count
+    toward the straggler latency."""
+    cfg = dataclasses.replace(chan.cfg, K=len(idx))
+    return dataclasses.replace(
+        chan, cfg=cfg, beta=chan.beta[:, idx], pilot=chan.pilot[idx],
+        gamma=chan.gamma[:, idx], A_bar=chan.A_bar[idx],
+        B_bar=chan.B_bar[idx], B_tilde=chan.B_tilde[np.ix_(idx, idx)],
+        I_M=chan.I_M[idx])
+
+
+def _signplane_aggregate(flat: jnp.ndarray, recons: jnp.ndarray,
+                         dw_q: jnp.ndarray, weights: jnp.ndarray,
+                         d: int) -> jnp.ndarray:
+    """Mixed-resolution aggregation through the Pallas wire format.
+
+    The low-resolution plane of every user is exactly
+    ``sign(delta) * dw_q/2``, so its rho-weighted sum is a packed
+    1-bit-per-element reduce: signpack each user's sign plane, then
+    sign_dequant_reduce with per-user scales ``rho_j * dw_q_j / 2``.
+    High-resolution elements (where recon differs from the sign plane)
+    are corrected densely; the correction is exactly zero elsewhere.
+    """
+    K = flat.shape[0]
+    d_pad = -(-d // _SIGN_TILE) * _SIGN_TILE
+    padded = jnp.pad(flat, ((0, 0), (0, d_pad - d)))
+    # one kernel launch packs all K sign planes: [K*W, 128] -> [K*W, 4]
+    words = signpack(padded.reshape(-1, 128), interpret=_interpret())
+    words = words.reshape(K, d_pad // 128, 4)
+    scales = (weights * dw_q * 0.5).astype(jnp.float32)
+    low = sign_dequant_reduce(words, scales, interpret=_interpret())
+    low = low.reshape(-1)[:d]
+    lo_plane = jnp.where(flat > 0, dw_q[:, None] * 0.5,
+                         -dw_q[:, None] * 0.5)
+    corr = jnp.einsum("k,kd->d", weights, recons - lo_plane)
+    return low + corr
+
+
+class VectorizedFLEngine:
+    """Algorithm 1 with all K users vectorized into one step per round.
+
+    Drop-in engine behind :func:`repro.fl.run_fl`; also the substrate
+    for the scenario sweeps in repro.sim.sweep.  The wireless part
+    (power control, closed-form rates) stays on the host exactly as in
+    the sequential loop.
+    """
+
+    def __init__(self, dataset: ImageDataset, test: ImageDataset,
+                 shards: List[np.ndarray], cnn_cfg: PaperCNNConfig,
+                 quantizer: Quantizer, power: Optional[PowerController],
+                 chan: Optional[ChannelRealization], fl,
+                 engine: Optional[EngineConfig] = None):
+        from repro.fl.cnn import init_cnn  # local: repro.fl imports us
+
+        self.engine_cfg = engine or EngineConfig()
+        if self.engine_cfg.aggregation not in ("dense", "signplane"):
+            raise ValueError(
+                f"unknown aggregation {self.engine_cfg.aggregation!r}")
+        if self.engine_cfg.local_batching not in ("map", "vmap"):
+            raise ValueError(
+                f"unknown local_batching {self.engine_cfg.local_batching!r}")
+        if (self.engine_cfg.aggregation == "signplane"
+                and quantizer.name != "mixed-resolution"):
+            raise ValueError(
+                "signplane aggregation packs the mixed-resolution "
+                f"low-res plane; quantizer {quantizer.name!r} has none")
+
+        self.dataset, self.test = dataset, test
+        self.shards, self.cnn_cfg = shards, cnn_cfg
+        self.quantizer, self.power, self.chan, self.fl = \
+            quantizer, power, chan, fl
+        self.K = len(shards)
+        # uniform minibatch size so user batches stack to [K, L, b];
+        # identical to the sequential loop whenever every shard holds at
+        # least batch_size samples (the benchmarks' regime)
+        self.take = min(fl.batch_size, min(len(s) for s in shards))
+        if self.take < fl.batch_size:
+            warnings.warn(
+                f"smallest shard ({self.take} samples) < batch_size "
+                f"({fl.batch_size}): the engine's uniform [K, L, b] "
+                f"stacking trains EVERY user with batch {self.take} "
+                "(the sequential loop clamps per user; run_fl falls "
+                "back to it in this case)", stacklevel=2)
+        self.rho = user_fractions(shards)
+
+        self.params = init_cnn(jax.random.PRNGKey(fl.seed), cnn_cfg)
+        flat0, self.spec = flatten_pytree(self.params)
+        self.d = int(flat0.size)
+        self.qstate = quantizer.init_batched_state(self.K, self.d)
+        self.comp_lat = computation_latency(fl.L, fl.dataset_size_for_comp,
+                                            self.K)
+        if self.engine_cfg.effective_fused:
+            self._train_flat = None
+            self._fused_step = self._build_fused_step()
+        else:
+            self._train_flat = self._build_train_flat()
+            self._fused_step = None
+
+    # ------------------------------------------------------------ build
+    def _batched_local(self, params, xs, ys):
+        """All K users' local AdaGrad runs -> stacked [K, d] deltas.
+        Traced inside the jitted step; batching per EngineConfig."""
+        from repro.fl.loop import local_adagrad  # local: avoids cycle
+
+        fl, K = self.fl, self.K
+        if self.engine_cfg.local_batching == "vmap":
+            local = jax.vmap(
+                lambda x, y: local_adagrad(params, x, y, fl.L, fl.alpha)
+            )(xs, ys)
+        else:
+            local = jax.lax.map(
+                lambda xy: local_adagrad(params, xy[0], xy[1], fl.L,
+                                         fl.alpha),
+                (xs, ys))
+        delta = jax.tree_util.tree_map(lambda w, p: w - p, local, params)
+        leaves = jax.tree_util.tree_flatten(delta)[0]
+        return jnp.concatenate(
+            [jnp.reshape(l, (K, -1)).astype(jnp.float32)
+             for l in leaves], axis=1)                        # [K, d]
+
+    def _build_train_flat(self):
+        """One jit dispatch: all K users' local AdaGrad runs + stacked
+        delta flattening -> [K, d].  Quantization/aggregation stay
+        eager so the dense path replays the sequential loop's per-op
+        rounding exactly (see module docstring)."""
+        return jax.jit(lambda params, xs, ys:
+                       self._batched_local(params, xs, ys))
+
+    def _build_fused_step(self):
+        """One fully fused jit step per round: train + batched quantize
+        + aggregation + model update in a single dispatch."""
+        q, spec, d, K = self.quantizer, self.spec, self.d, self.K
+        signplane = self.engine_cfg.aggregation == "signplane"
+
+        def step(params, qstate, xs, ys, weights, active):
+            flat = self._batched_local(params, xs, ys)
+            res, new_qstate = q.batched(flat, qstate)
+            if new_qstate is not None:
+                # absent users did not transmit: freeze their state
+                new_qstate = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(
+                        jnp.reshape(active, (K,) + (1,) * (n.ndim - 1))
+                        > 0, n, o),
+                    new_qstate, qstate)
+            if signplane:
+                agg = _signplane_aggregate(flat, res.recon,
+                                           res.aux["dw_q"], weights, d)
+            else:
+                agg = jnp.einsum("k,kd->d", weights, res.recon)
+            params = jax.tree_util.tree_map(
+                lambda p, u: p + u, params, unflatten_pytree(agg, spec))
+            return params, new_qstate, res.bits, res.aux
+
+        return jax.jit(step)
+
+    # ----------------------------------------------------------- rounds
+    def _dense_round(self, params, qstate, xs, ys, weights, active_np):
+        """Eager quantize + user-ordered weighted aggregation: replays
+        the sequential loop's arithmetic op for op."""
+        flat = self._train_flat(params, xs, ys)
+        res, new_qstate = self.quantizer.batched(flat, qstate)
+        if new_qstate is not None:
+            if self.engine_cfg.participation >= 1.0:
+                qstate = new_qstate
+            else:
+                act = jnp.asarray(active_np, jnp.float32)
+                qstate = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(
+                        jnp.reshape(act, (self.K,) + (1,) * (n.ndim - 1))
+                        > 0, n, o),
+                    new_qstate, qstate)
+        # same left-to-right summation as the sequential Python sum
+        agg = None
+        for j in range(self.K):
+            term = res.recon[j] * weights[j]
+            agg = term if agg is None else agg + term
+        params = jax.tree_util.tree_map(
+            lambda p, u: p + u, params, unflatten_pytree(agg, self.spec))
+        return params, qstate, res.bits, res.aux
+
+    # ------------------------------------------------------------- run
+    def _draw_active(self, part_rng: np.random.Generator) -> np.ndarray:
+        p = self.engine_cfg.participation
+        if p >= 1.0:
+            return np.ones(self.K)
+        mask = part_rng.random(self.K) < p
+        if not mask.any():                      # never an empty round
+            mask[int(part_rng.integers(self.K))] = True
+        return mask.astype(np.float64)
+
+    def _round_weights(self, active: np.ndarray) -> np.ndarray:
+        if self.engine_cfg.participation >= 1.0:
+            return self.rho                     # exactly the paper's rho
+        w = self.rho * active
+        return w / w.sum()
+
+    def run(self, verbose: bool = False):
+        from repro.fl.cnn import cnn_accuracy
+        from repro.fl.loop import FLResult, RoundLog
+
+        fl, ecfg = self.fl, self.engine_cfg
+        rng = np.random.default_rng(fl.seed)    # sequential-loop stream
+        part_rng = np.random.default_rng((fl.seed, 0x5EED))  # independent
+        chan = self.chan
+        params, qstate = self.params, self.qstate
+        test_x, test_y = jnp.asarray(self.test.x), jnp.asarray(self.test.y)
+
+        logs: List[RoundLog] = []
+        cum_latency, rounds_done = 0.0, 0
+        for t in range(1, fl.T + 1):
+            if (ecfg.redraw_channel_every > 0 and chan is not None
+                    and t > 1
+                    and (t - 1) % ecfg.redraw_channel_every == 0):
+                chan = make_channel(chan.cfg, seed=ecfg.channel_seed + t)
+            # same nested draw order as the sequential loop
+            sel = np.stack([
+                np.stack([rng.choice(shard, self.take, replace=False)
+                          for _ in range(fl.L)])
+                for shard in self.shards])               # [K, L, b]
+            xs = jnp.asarray(self.dataset.x[sel])
+            ys = jnp.asarray(self.dataset.y[sel])
+            active = self._draw_active(part_rng)
+            weights = self._round_weights(active)
+            if not ecfg.effective_fused:
+                params, qstate, bits, aux = self._dense_round(
+                    params, qstate, xs, ys, weights, active)
+            else:
+                params, qstate, bits, aux = self._fused_step(
+                    params, qstate, xs, ys,
+                    jnp.asarray(weights, jnp.float32),
+                    jnp.asarray(active, jnp.float32))
+            bits_np = np.asarray(bits, np.float64) * active
+            s_np = np.asarray(aux["s"], np.float64) if "s" in aux \
+                else np.ones(self.K)
+            mean_s = float(np.mean(s_np[active.astype(bool)]))
+
+            if self.power is not None and chan is not None:
+                act_idx = np.flatnonzero(active)
+                if len(act_idx) == self.K:
+                    sol = self.power.solve(chan,
+                                           np.maximum(bits_np, 1.0))
+                else:
+                    # churn: only active users transmit — solve the
+                    # power-control problem on the sub-channel so
+                    # absent users neither get power nor interfere
+                    sol = self.power.solve(
+                        _subchannel(chan, act_idx),
+                        np.maximum(bits_np[act_idx], 1.0))
+                uplink = sol.straggler_latency
+            else:
+                uplink = 0.0
+            cum_latency += uplink + self.comp_lat
+
+            acc = None
+            if t % fl.eval_every == 0 or t == fl.T:
+                acc = cnn_accuracy(params, test_x, test_y)
+            logs.append(RoundLog(t, bits_np, uplink, self.comp_lat,
+                                 cum_latency, mean_s, acc))
+            rounds_done = t
+            if verbose and acc is not None:
+                print(f"[round {t:4d}] acc={acc:.4f} "
+                      f"bits/user={bits_np.mean():.3e} "
+                      f"cum_lat={cum_latency:.2f}s")
+            if (fl.latency_budget_s is not None
+                    and cum_latency >= fl.latency_budget_s):
+                break
+
+        return FLResult(params=params, logs=logs,
+                        rounds_completed=rounds_done)

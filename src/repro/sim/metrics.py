@@ -1,0 +1,54 @@
+"""Round-log aggregation — the numbers the benchmark tables consume.
+
+``summarize_logs`` reduces a list of per-round RoundLog records (from
+either the vectorized engine or the sequential reference loop) to the
+scalar metrics reported in the paper's tables: best/final accuracy,
+rounds completed (T_max under a budget), mean payload bits, mean
+high-resolution fraction s, cumulative latency and straggler
+percentiles.
+"""
+from __future__ import annotations
+
+import csv
+import os
+from typing import Dict, Iterable, List
+
+
+def summarize_logs(logs: List) -> Dict[str, float]:
+    """Aggregate a FLResult.logs list into one metrics row."""
+    import numpy as np
+
+    accs = [l.test_acc for l in logs if l.test_acc is not None]
+    uplinks = np.array([l.uplink_latency_s for l in logs])
+    bits = np.array([np.mean(l.bits_per_user) for l in logs])
+    return {
+        "rounds": float(logs[-1].round) if logs else 0.0,
+        "best_acc": float(max(accs)) if accs else float("nan"),
+        "final_acc": float(accs[-1]) if accs else float("nan"),
+        "mean_bits_per_user": float(bits.mean()) if logs else float("nan"),
+        "mean_s": float(np.mean([l.mean_s for l in logs]))
+        if logs else float("nan"),
+        "total_latency_s": float(logs[-1].cum_latency_s)
+        if logs else 0.0,
+        "mean_uplink_s": float(uplinks.mean()) if logs else 0.0,
+        "p95_uplink_s": float(np.percentile(uplinks, 95))
+        if logs else 0.0,
+    }
+
+
+METRIC_FIELDS = ["rounds", "best_acc", "final_acc", "mean_bits_per_user",
+                 "mean_s", "total_latency_s", "mean_uplink_s",
+                 "p95_uplink_s"]
+
+
+def write_metrics_csv(rows: Iterable[Dict], path: str) -> None:
+    """Write sweep rows (scenario/quantizer/power + metrics) to CSV."""
+    rows = list(rows)
+    if not rows:
+        return
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fields = ["scenario", "quantizer", "power"] + METRIC_FIELDS
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fields, extrasaction="ignore")
+        w.writeheader()
+        w.writerows(rows)

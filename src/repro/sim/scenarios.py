@@ -1,0 +1,206 @@
+"""Named simulation scenarios for the vectorized engine.
+
+A Scenario is a declarative bundle of (dataset, partition, FL
+hyper-parameters, CFmMIMO network shape, engine behaviour) that
+``build_problem`` turns into concrete engine inputs.  The registry
+covers the paper's operating points (Tables II-III) plus workloads the
+sequential seed loop could not reach at useful speed:
+
+* ``churn-*``        — per-round partial participation (user churn);
+* ``monte-carlo-*``  — fresh large-scale channel realization per round
+  (Monte-Carlo averaging over fading geometry, as in Vu et al.);
+* ``hetero-data``    — Zipf-distributed shard sizes (device
+  heterogeneity, as in Mahmoudi et al.);
+* ``grid-*``         — K x M network-shape sweep points.
+
+Every scenario carries paper-scale parameters; sweep/quick mode scales
+K, T and the dataset down uniformly so the full grid runs on a laptop
+CPU in minutes (`Scenario.scaled(quick=True)`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.paper_cnn import CIFAR10, CIFAR100, FASHION, PaperCNNConfig
+from repro.core.channel import CFmMIMOConfig, make_channel
+from repro.data import (make_image_classification, partition_dirichlet,
+                        partition_iid, partition_powerlaw)
+
+from .engine import EngineConfig
+
+_DATASETS: Dict[str, Tuple[PaperCNNConfig, int]] = {
+    "cifar10-syn": (CIFAR10, 10),
+    "cifar100-syn": (CIFAR100, 100),
+    "fashion-syn": (FASHION, 10),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    # data
+    dataset: str = "cifar10-syn"
+    n_train: int = 8000
+    n_test: int = 1600
+    partition: str = "iid"               # iid | dirichlet | powerlaw
+    dirichlet_alpha: float = 0.3
+    powerlaw_exp: float = 1.3
+    # FL (paper Table I / §IV defaults)
+    K: int = 20
+    T: int = 100
+    L: int = 5
+    batch_size: int = 48
+    lr: float = 0.01
+    eval_every: Optional[int] = None     # None => max(1, T // 5)
+    latency_budget_s: Optional[float] = None
+    # CFmMIMO network (None M => no channel/power simulation)
+    M: Optional[int] = 16
+    N: int = 4
+    # engine behaviour
+    participation: float = 1.0
+    redraw_channel_every: int = 0
+    aggregation: str = "dense"
+    fused: bool = True               # production sweeps run fully fused
+    seed: int = 0
+
+    def scaled(self, quick: bool = True) -> "Scenario":
+        """Quick-mode variant: reduced K/T/data for CPU CI runs."""
+        if not quick:
+            return self
+        return dataclasses.replace(
+            self, K=min(self.K, 8), T=min(self.T, 10),
+            n_train=min(self.n_train, 2000), n_test=min(self.n_test, 400),
+            batch_size=min(self.batch_size, 32))
+
+    @property
+    def effective_eval_every(self) -> int:
+        return self.eval_every if self.eval_every is not None \
+            else max(1, self.T // 5)
+
+    def engine_config(self) -> EngineConfig:
+        return EngineConfig(aggregation=self.aggregation,
+                            fused=self.fused,
+                            participation=self.participation,
+                            redraw_channel_every=self.redraw_channel_every,
+                            channel_seed=self.seed)
+
+
+def build_problem(scn: Scenario):
+    """(train, test, shards, cnn_cfg, chan) for a scenario."""
+    if scn.dataset not in _DATASETS:
+        raise KeyError(f"unknown dataset {scn.dataset!r}; "
+                       f"have {list(_DATASETS)}")
+    cnn_cfg, n_classes = _DATASETS[scn.dataset]
+    full = make_image_classification(
+        n_samples=scn.n_train + scn.n_test, hw=cnn_cfg.input_hw,
+        channels=cnn_cfg.channels, n_classes=n_classes, seed=scn.seed)
+    train = dataclasses.replace(full, x=full.x[:scn.n_train],
+                                y=full.y[:scn.n_train])
+    test = dataclasses.replace(full, x=full.x[scn.n_train:],
+                               y=full.y[scn.n_train:])
+
+    if scn.partition == "iid":
+        shards = partition_iid(train, scn.K, seed=scn.seed)
+    elif scn.partition == "dirichlet":
+        shards = partition_dirichlet(train, scn.K,
+                                     alpha=scn.dirichlet_alpha,
+                                     seed=scn.seed)
+    elif scn.partition == "powerlaw":
+        shards = partition_powerlaw(train, scn.K, exponent=scn.powerlaw_exp,
+                                    seed=scn.seed)
+    else:
+        raise KeyError(f"unknown partition {scn.partition!r}")
+
+    chan = None
+    if scn.M is not None:
+        chan = make_channel(CFmMIMOConfig(M=scn.M, N=scn.N, K=scn.K),
+                            seed=scn.seed)
+    return train, test, shards, cnn_cfg, chan
+
+
+# ----------------------------------------------------------- registry
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(scn: Scenario) -> Scenario:
+    if scn.name in SCENARIOS:
+        raise KeyError(f"scenario {scn.name!r} already registered")
+    SCENARIOS[scn.name] = scn
+    return scn
+
+
+def get_scenario(name: str) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"have {sorted(SCENARIOS)}")
+    return SCENARIOS[name]
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+def grid_scenarios(Ks=(10, 20, 40), Ms=(16, 36, 64),
+                   base: Optional[Scenario] = None) -> List[Scenario]:
+    """K x M network-shape sweep points (registered on first call with
+    default arguments via the module-level loop below)."""
+    base = base or Scenario(
+        name="grid-base", description="K x M sweep point",
+        partition="dirichlet", T=20)
+    out = []
+    for K in Ks:
+        for M in Ms:
+            out.append(dataclasses.replace(
+                base, name=f"grid-K{K}-M{M}",
+                description=f"network-shape sweep point K={K}, M={M}",
+                K=K, M=M))
+    return out
+
+
+register_scenario(Scenario(
+    name="paper-table2",
+    description="Table II operating point: K=20, L=5, IID/convergence "
+                "(no latency simulation)",
+    M=None, T=100, K=20, batch_size=48))
+
+register_scenario(Scenario(
+    name="paper-table2-noniid",
+    description="Table II non-IID: Dirichlet(0.3) label skew",
+    M=None, T=100, K=20, partition="dirichlet", batch_size=48))
+
+register_scenario(Scenario(
+    name="paper-table3",
+    description="Table III operating point: K=40 non-IID over the "
+                "CFmMIMO uplink with a total-latency budget",
+    K=40, T=60, partition="dirichlet", batch_size=32))
+
+register_scenario(Scenario(
+    name="churn-0.7",
+    description="user churn: every user independently participates in "
+                "a round w.p. 0.7; aggregation weights renormalized",
+    K=20, T=40, partition="dirichlet", participation=0.7))
+
+register_scenario(Scenario(
+    name="monte-carlo-channel",
+    description="Monte-Carlo fading geometry: fresh large-scale "
+                "realization every round (Vu et al. style averaging)",
+    K=20, T=40, redraw_channel_every=1))
+
+register_scenario(Scenario(
+    name="hetero-data",
+    description="Zipf(1.3) shard sizes: heterogeneous per-user data "
+                "loads (Mahmoudi et al. style device heterogeneity)",
+    K=20, T=40, partition="powerlaw"))
+
+register_scenario(Scenario(
+    name="signplane-wire",
+    description="paper default but aggregating through the Pallas "
+                "signpack/sign_dequant_reduce wire format",
+    M=None, K=20, T=40, aggregation="signplane"))
+
+for _scn in grid_scenarios():
+    register_scenario(_scn)

@@ -1,0 +1,148 @@
+"""Scenario x quantizer x power-controller sweep runner.
+
+Executes a grid of simulation cells on the vectorized engine and emits
+the aggregated round metrics the benchmark tables consume:
+
+    from repro.sim import run_grid
+    results = run_grid(["paper-table2", "churn-0.7"],
+                       quantizers={"mixed": ("mixed-resolution",
+                                             {"lambda_": 0.2, "b": 10}),
+                                   "classic": ("classic", {})},
+                       powers={"ours": "bisection-lp", "none": None},
+                       quick=True, out_csv="runs/sweep.csv")
+
+Each cell builds its problem once, runs the engine, and summarizes the
+round logs via repro.sim.metrics.  Quantizer/power specs are either
+registry names (with optional kwargs) or ready instances, so the
+benchmarks can pass their calibrated objects straight through.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
+
+from repro.core.power import PowerController, make_power_controller
+from repro.core.quantize import Quantizer, make_quantizer
+
+from .engine import VectorizedFLEngine
+from .metrics import summarize_logs, write_metrics_csv
+from .scenarios import Scenario, build_problem, get_scenario
+
+QuantSpec = Union[str, Tuple[str, Mapping[str, Any]], Quantizer]
+PowerSpec = Union[None, str, Tuple[str, Mapping[str, Any]], PowerController]
+
+
+def _make_quant(spec: QuantSpec) -> Quantizer:
+    if isinstance(spec, Quantizer):
+        return spec
+    if isinstance(spec, str):
+        return make_quantizer(spec)
+    name, kwargs = spec
+    return make_quantizer(name, **dict(kwargs))
+
+
+def _make_power(spec: PowerSpec) -> Optional[PowerController]:
+    if spec is None or isinstance(spec, PowerController):
+        return spec
+    if isinstance(spec, str):
+        return make_power_controller(spec)
+    name, kwargs = spec
+    return make_power_controller(name, **dict(kwargs))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    scenario: Scenario
+    quantizer_label: str
+    power_label: str
+
+
+@dataclasses.dataclass
+class SweepResult:
+    cell: SweepCell
+    result: Any                    # FLResult
+    summary: Dict[str, float]
+
+    def row(self) -> Dict[str, Any]:
+        return {"scenario": self.cell.scenario.name,
+                "quantizer": self.cell.quantizer_label,
+                "power": self.cell.power_label, **self.summary}
+
+
+def _resolve_scenario(scenario: Union[str, Scenario], quick: bool,
+                      latency_budget_s: Optional[float]) -> Scenario:
+    scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    scn = scn.scaled(quick)
+    if latency_budget_s is not None:
+        scn = dataclasses.replace(scn, latency_budget_s=latency_budget_s)
+    return scn
+
+
+def _make_engine(scn: Scenario, problem, quantizer: QuantSpec,
+                 power: PowerSpec) -> VectorizedFLEngine:
+    from repro.fl.loop import FLConfig
+
+    train, test, shards, cnn_cfg, chan = problem
+    q = _make_quant(quantizer)
+    pc = _make_power(power)
+    fl = FLConfig(L=scn.L, T=scn.T, batch_size=scn.batch_size,
+                  alpha=scn.lr, eval_every=scn.effective_eval_every,
+                  latency_budget_s=scn.latency_budget_s, seed=scn.seed)
+    return VectorizedFLEngine(train, test, shards, cnn_cfg, q,
+                              pc if chan is not None else None, chan,
+                              fl, engine=scn.engine_config())
+
+
+def _to_result(scn: Scenario, engine: VectorizedFLEngine, res,
+               labels: Tuple[str, str]) -> SweepResult:
+    qlabel = labels[0] or engine.quantizer.name
+    plabel = labels[1] or (engine.power.name if engine.power is not None
+                           else "none")
+    return SweepResult(cell=SweepCell(scn, qlabel, plabel), result=res,
+                       summary=summarize_logs(res.logs))
+
+
+def run_cell(scenario: Union[str, Scenario], quantizer: QuantSpec,
+             power: PowerSpec = None, quick: bool = True,
+             latency_budget_s: Optional[float] = None,
+             verbose: bool = False,
+             labels: Tuple[str, str] = ("", "")) -> SweepResult:
+    """Run one (scenario, quantizer, power) simulation cell."""
+    scn = _resolve_scenario(scenario, quick, latency_budget_s)
+    engine = _make_engine(scn, build_problem(scn), quantizer, power)
+    return _to_result(scn, engine, engine.run(verbose=verbose), labels)
+
+
+def run_grid(scenarios: List[Union[str, Scenario]],
+             quantizers: Mapping[str, QuantSpec],
+             powers: Optional[Mapping[str, PowerSpec]] = None,
+             quick: bool = True, out_csv: Optional[str] = None,
+             latency_budget_s: Optional[float] = None,
+             verbose: bool = False) -> List[SweepResult]:
+    """Run the full scenario x quantizer x power grid.
+
+    Within a scenario the problem (dataset, partition, channel) is
+    built once and each quantizer's compiled engine step is reused
+    across the power-controller axis (power control is host-side, so
+    swapping it does not retrace the jitted step).
+    """
+    powers = powers if powers is not None else {"none": None}
+    results: List[SweepResult] = []
+    for scenario in scenarios:
+        scn = _resolve_scenario(scenario, quick, latency_budget_s)
+        problem = build_problem(scn)
+        chan = problem[4]
+        for qlabel, qspec in quantizers.items():
+            engine = None
+            for plabel, pspec in powers.items():
+                if engine is None:
+                    engine = _make_engine(scn, problem, qspec, pspec)
+                else:
+                    pc = _make_power(pspec)
+                    engine.power = pc if chan is not None else None
+                results.append(_to_result(
+                    scn, engine, engine.run(verbose=verbose),
+                    (qlabel, plabel)))
+    if out_csv:
+        write_metrics_csv([r.row() for r in results], out_csv)
+    return results

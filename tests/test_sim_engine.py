@@ -1,0 +1,268 @@
+"""repro.sim engine tests: bit-for-bit equivalence with the sequential
+reference loop, fused/signplane consistency, scenario registry smoke."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import PaperCNNConfig
+from repro.core.channel import CFmMIMOConfig, make_channel
+from repro.core.power import BisectionLPPowerControl
+from repro.core.quantize import (ClassicQuantizer, LAQQuantizer,
+                                 MixedResolutionQuantizer, TopQQuantizer)
+from repro.data import (make_image_classification, partition_iid,
+                        partition_powerlaw)
+from repro.fl import FLConfig, run_fl, run_fl_sequential
+from repro.sim import (SCENARIOS, EngineConfig, Scenario,
+                       VectorizedFLEngine, build_problem, get_scenario,
+                       list_scenarios, run_cell, summarize_logs)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    full = make_image_classification(n_samples=900, hw=16, n_classes=4,
+                                     noise=0.25, seed=0)
+    train = dataclasses.replace(full, x=full.x[:700], y=full.y[:700])
+    test = dataclasses.replace(full, x=full.x[700:], y=full.y[700:])
+    cfg = PaperCNNConfig(input_hw=16, n_classes=4)
+    return train, test, cfg
+
+
+def _leaves(params):
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(params)]
+
+
+# ------------------------------------------------- engine == sequential
+@pytest.mark.parametrize("quantizer_factory", [
+    lambda: MixedResolutionQuantizer(lambda_=0.2, b=10),
+    lambda: LAQQuantizer(b=4, xi=0.5),          # stateful
+    lambda: TopQQuantizer(q=0.01),
+], ids=["mixed-resolution", "laq", "top-q"])
+def test_engine_matches_sequential_bit_for_bit(problem, quantizer_factory):
+    """run_fl (vectorized engine, exact mode) must reproduce the seed's
+    sequential loop bit-for-bit: params, bits, latency, accuracy."""
+    train, test, cfg = problem
+    K = 6
+    shards = partition_iid(train, K)
+    chan = make_channel(CFmMIMOConfig(K=K), seed=0)
+    fl = FLConfig(L=3, T=4, batch_size=24, alpha=0.02, eval_every=2,
+                  seed=0)
+    power = BisectionLPPowerControl()
+    seq = run_fl_sequential(train, test, shards, cfg, quantizer_factory(),
+                            power, chan, fl)
+    eng = run_fl(train, test, shards, cfg, quantizer_factory(),
+                 power, chan, fl)
+
+    assert len(seq.logs) == len(eng.logs)
+    for ls, le in zip(seq.logs, eng.logs):
+        np.testing.assert_array_equal(ls.bits_per_user, le.bits_per_user)
+        assert ls.uplink_latency_s == le.uplink_latency_s
+        assert ls.cum_latency_s == le.cum_latency_s
+        assert ls.mean_s == le.mean_s
+        assert ls.test_acc == le.test_acc
+    for a, b in zip(_leaves(seq.params), _leaves(eng.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_vmap_batching_matches_sequential_bit_for_bit(problem):
+    """The accelerator-oriented vmap local-batching path is also
+    bitwise identical to the sequential per-user jit."""
+    train, test, cfg = problem
+    K = 4
+    shards = partition_iid(train, K)
+    fl = FLConfig(L=2, T=3, batch_size=16, alpha=0.02, eval_every=3,
+                  seed=0)
+    q = MixedResolutionQuantizer(lambda_=0.2, b=10)
+    seq = run_fl_sequential(train, test, shards, cfg, q, None, None, fl)
+    eng = VectorizedFLEngine(
+        train, test, shards, cfg, q, None, None, fl,
+        engine=EngineConfig(local_batching="vmap")).run()
+    for ls, le in zip(seq.logs, eng.logs):
+        np.testing.assert_array_equal(ls.bits_per_user, le.bits_per_user)
+        assert ls.test_acc == le.test_acc
+    for a, b in zip(_leaves(seq.params), _leaves(eng.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ragged_shards_fall_back_to_sequential(problem):
+    """When a shard is smaller than batch_size the engine's uniform
+    [K, L, b] stacking cannot replay the per-user batch clamp, so
+    run_fl must fall back to the sequential loop bit-for-bit."""
+    train, test, cfg = problem
+    shards = partition_iid(train, 4)
+    shards[2] = shards[2][:10]              # smaller than batch_size
+    fl = FLConfig(L=2, T=2, batch_size=16, alpha=0.02, eval_every=2,
+                  seed=0)
+    q = MixedResolutionQuantizer(lambda_=0.2, b=10)
+    seq = run_fl_sequential(train, test, shards, cfg, q, None, None, fl)
+    via_run_fl = run_fl(train, test, shards, cfg, q, None, None, fl)
+    for ls, le in zip(seq.logs, via_run_fl.logs):
+        np.testing.assert_array_equal(ls.bits_per_user, le.bits_per_user)
+    for a, b in zip(_leaves(seq.params), _leaves(via_run_fl.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fused_step_matches_exact_to_roundoff(problem):
+    """The single-jit fused step equals the exact path up to XLA's
+    cross-op fusion (FMA contraction): float32 roundoff, not drift."""
+    train, test, cfg = problem
+    K = 6
+    shards = partition_iid(train, K)
+    fl = FLConfig(L=2, T=3, batch_size=16, alpha=0.02, eval_every=3,
+                  seed=0)
+    q = MixedResolutionQuantizer(lambda_=0.2, b=10)
+    exact = VectorizedFLEngine(train, test, shards, cfg, q, None, None,
+                               fl).run()
+    fused = VectorizedFLEngine(train, test, shards, cfg, q, None, None,
+                               fl, engine=EngineConfig(fused=True)).run()
+    # round-1 payloads agree to float32 roundoff of the s fraction
+    np.testing.assert_allclose(exact.logs[0].bits_per_user,
+                               fused.logs[0].bits_per_user, rtol=1e-5)
+    for a, b in zip(_leaves(exact.params), _leaves(fused.params)):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
+
+
+def test_signplane_aggregation_matches_dense(problem):
+    """The Pallas wire-format path (signpack -> sign_dequant_reduce +
+    high-res correction) reconstructs the same aggregate as the dense
+    weighted sum, up to float32 roundoff."""
+    train, test, cfg = problem
+    K = 6
+    shards = partition_iid(train, K)
+    fl = FLConfig(L=2, T=2, batch_size=16, alpha=0.02, eval_every=2,
+                  seed=0)
+    q = MixedResolutionQuantizer(lambda_=0.2, b=10)
+    dense = VectorizedFLEngine(
+        train, test, shards, cfg, q, None, None, fl,
+        engine=EngineConfig(fused=True)).run()
+    wire = VectorizedFLEngine(
+        train, test, shards, cfg, q, None, None, fl,
+        engine=EngineConfig(aggregation="signplane")).run()
+    np.testing.assert_allclose(dense.logs[0].bits_per_user,
+                               wire.logs[0].bits_per_user, rtol=1e-5)
+    for a, b in zip(_leaves(dense.params), _leaves(wire.params)):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
+
+
+def test_signplane_rejects_non_mixed_quantizer(problem):
+    train, test, cfg = problem
+    shards = partition_iid(train, 4)
+    fl = FLConfig(L=1, T=1, batch_size=8, seed=0)
+    with pytest.raises(ValueError, match="signplane"):
+        VectorizedFLEngine(train, test, shards, cfg, ClassicQuantizer(),
+                           None, None, fl,
+                           engine=EngineConfig(aggregation="signplane"))
+
+
+# ----------------------------------------------------------- scenarios
+def _shrink(scn: Scenario) -> Scenario:
+    """Tiny test-speed variant of a scenario (smaller than quick)."""
+    return dataclasses.replace(
+        scn, K=min(scn.K, 4), T=2, n_train=240, n_test=60, batch_size=8,
+        L=1)
+
+
+def test_scenario_registry_contents():
+    names = list_scenarios()
+    # paper operating points + the new workloads + the K/M grid
+    for expected in ["paper-table2", "paper-table3", "churn-0.7",
+                     "monte-carlo-channel", "hetero-data",
+                     "signplane-wire", "grid-K20-M16"]:
+        assert expected in names, expected
+    with pytest.raises(KeyError):
+        get_scenario("does-not-exist")
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_smoke(name):
+    """Every registered scenario builds and completes rounds end-to-end
+    on the engine (shrunk to test size)."""
+    scn = _shrink(get_scenario(name))
+    res = run_cell(scn, ("mixed-resolution", {"lambda_": 0.2, "b": 4}),
+                   power=None, quick=False)
+    assert res.result.rounds_completed == scn.T
+    summary = res.summary
+    assert np.isfinite(summary["mean_bits_per_user"])
+    assert summary["rounds"] == scn.T
+    assert 0.0 <= summary["best_acc"] <= 1.0
+
+
+def test_churn_masks_inactive_users(problem):
+    """Partial participation: inactive users transmit 0 bits and the
+    model still trains on the active subset."""
+    train, test, cfg = problem
+    K = 8
+    shards = partition_iid(train, K)
+    fl = FLConfig(L=1, T=6, batch_size=8, alpha=0.02, eval_every=6,
+                  seed=0)
+    q = MixedResolutionQuantizer(lambda_=0.2, b=8)
+    res = VectorizedFLEngine(
+        train, test, shards, cfg, q, None, None, fl,
+        engine=EngineConfig(fused=True, participation=0.5)).run()
+    zero_rounds = sum(1 for l in res.logs if (l.bits_per_user == 0).any())
+    assert zero_rounds > 0                 # churn actually happened
+    assert all((l.bits_per_user > 0).any() for l in res.logs)  # never empty
+
+
+def test_churn_power_control_excludes_inactive(problem):
+    """With churn + power control, absent users must not enter the
+    power-control problem: fewer co-scheduled users => each active
+    user's rate is no worse than in the full-participation round with
+    identical payloads, so the straggler latency stays bounded by the
+    full-K solve."""
+    train, test, cfg = problem
+    K = 8
+    shards = partition_iid(train, K)
+    chan = make_channel(CFmMIMOConfig(K=K), seed=0)
+    fl = FLConfig(L=1, T=5, batch_size=8, alpha=0.02, eval_every=5,
+                  seed=0)
+    res = VectorizedFLEngine(
+        train, test, shards, cfg, ClassicQuantizer(),
+        BisectionLPPowerControl(), chan, fl,
+        engine=EngineConfig(fused=True, participation=0.5)).run()
+    full = VectorizedFLEngine(
+        train, test, shards, cfg, ClassicQuantizer(),
+        BisectionLPPowerControl(), chan, fl,
+        engine=EngineConfig(fused=True)).run()
+    # classic quantizer => identical payload per transmitting user, so
+    # a churned round (fewer interferers) is never slower than full
+    for lc, lf in zip(res.logs, full.logs):
+        if (lc.bits_per_user == 0).any():
+            assert lc.uplink_latency_s <= lf.uplink_latency_s * (1 + 1e-9)
+
+
+def test_monte_carlo_channel_redraw_changes_latency(problem):
+    """Per-round channel redraws produce varying uplink latencies at
+    constant payload (classic quantizer => bits constant)."""
+    train, test, cfg = problem
+    K = 4
+    shards = partition_iid(train, K)
+    chan = make_channel(CFmMIMOConfig(K=K), seed=0)
+    fl = FLConfig(L=1, T=4, batch_size=8, alpha=0.02, eval_every=4,
+                  seed=0)
+    res = VectorizedFLEngine(
+        train, test, shards, cfg, ClassicQuantizer(),
+        BisectionLPPowerControl(), chan, fl,
+        engine=EngineConfig(fused=True, redraw_channel_every=1)).run()
+    uplinks = [l.uplink_latency_s for l in res.logs]
+    assert len(set(uplinks)) > 1
+
+
+def test_partition_powerlaw_sizes():
+    full = make_image_classification(n_samples=800, hw=8, n_classes=4,
+                                     seed=0)
+    shards = partition_powerlaw(full, 8, exponent=1.3, seed=0)
+    sizes = [len(s) for s in shards]
+    assert sizes[0] > sizes[-1]            # heterogeneous
+    cat = np.concatenate(shards)
+    assert len(np.unique(cat)) == len(cat)  # disjoint
+    assert len(cat) <= len(full)
+
+
+def test_build_problem_shapes():
+    scn = _shrink(get_scenario("paper-table3"))
+    train, test, shards, cnn_cfg, chan = build_problem(scn)
+    assert len(shards) == scn.K
+    assert chan is not None and chan.beta.shape == (scn.M, scn.K)
+    assert train.x.shape[1] == cnn_cfg.input_hw

@@ -1,0 +1,93 @@
+"""Benchmark regression gate for CI.
+
+Compares a fresh ``benchmarks.run --json`` output against the committed
+baseline (BENCH_baseline.json) and fails when
+
+* any bench group crashed (``status: "error"`` — reported separately
+  from slowness), or
+* a timed bench (us_per_call > 0 in the baseline) got slower than
+  ``factor`` x its baseline (default 2.0; override with --factor or
+  the BENCH_GATE_FACTOR env var — CI runners and this container are
+  different hardware, so the gate is a coarse smoke bound, not a
+  microbenchmark).
+
+Derived-only rows (us_per_call == 0) and the per-group ``_wall`` rows
+are compared for presence only, so the structural contract of the
+bench suite is also pinned.
+
+    python -m benchmarks.check_regression current.json BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: r for r in data["benches"]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--factor", type=float,
+                    default=float(os.environ.get("BENCH_GATE_FACTOR",
+                                                 "2.0")))
+    args = ap.parse_args()
+
+    cur = _load(args.current)
+    base = _load(args.baseline)
+    crashed, regressed, missing = [], [], []
+
+    for name, rec in cur.items():
+        if rec.get("status") == "error":
+            crashed.append((name, rec.get("error", "")[-300:]))
+
+    for name, brec in base.items():
+        if brec.get("status") != "ok":
+            continue
+        crec = cur.get(name)
+        if crec is None:
+            missing.append(name)
+            continue
+        if name.endswith("/_wall"):
+            continue                      # presence-checked only
+        if crec.get("status") != "ok":
+            continue                      # already counted as crashed
+        b_us, c_us = brec.get("us_per_call"), crec.get("us_per_call")
+        if not b_us or b_us <= 0 or c_us is None:
+            continue                      # derived-only row
+        ratio = c_us / b_us
+        flag = "REGRESSED" if ratio > args.factor else "ok"
+        print(f"{name}: {b_us:.1f}us -> {c_us:.1f}us "
+              f"({ratio:.2f}x) {flag}")
+        if ratio > args.factor:
+            regressed.append((name, ratio))
+
+    ok = True
+    if crashed:
+        ok = False
+        print(f"\nCRASHED ({len(crashed)}):")
+        for name, err in crashed:
+            print(f"  {name}: {err.splitlines()[-1] if err else '?'}")
+    if missing:
+        ok = False
+        print(f"\nMISSING vs baseline ({len(missing)}): {missing}")
+    if regressed:
+        ok = False
+        print(f"\nSLOW (> {args.factor:.1f}x baseline):")
+        for name, ratio in regressed:
+            print(f"  {name}: {ratio:.2f}x")
+    if not ok:
+        sys.exit(1)
+    print(f"\nbenchmark gate OK ({len(base)} baseline records, "
+          f"factor {args.factor:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

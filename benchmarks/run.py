@@ -4,12 +4,34 @@ Prints ``name,us_per_call,derived`` CSV rows.  Quick mode (default)
 uses reduced K/T so the whole harness finishes on this CPU container;
 pass --full for paper-scale settings.  The roofline/dry-run tables are
 produced by launch/roofline.py from the dry-run sweep, not here.
+
+``--json out.json`` additionally writes structured records
+``{name, us_per_call, derived, status}`` — one per CSV row, plus one
+``status: "error"`` record (with the traceback) per bench group that
+crashed, so the CI regression gate (benchmarks/check_regression.py)
+can distinguish "slow" from "crashed".  In JSON mode the exit code is
+0 even when a bench group fails: the per-bench statuses are the
+contract and the gate enforces them; without --json a failure still
+exits 1 (and prints the legacy ``name,nan,ERROR`` row) for direct
+shell use.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 import traceback
+
+
+def _parse_row(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    return {"name": name, "us_per_call": us_val, "derived": derived,
+            "status": "ok"}
 
 
 def main() -> None:
@@ -18,6 +40,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,table2,table3,overhead,"
                          "sim_engine")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write structured per-bench records to OUT")
     args = ap.parse_args()
     quick = not args.full
 
@@ -35,15 +59,35 @@ def main() -> None:
         else args.only.split(",")
 
     print("name,us_per_call,derived")
+    records = []
     failed = False
     for name in selected:
+        t0 = time.time()
+        # consume row-by-row so a generator bench crashing mid-group
+        # still surfaces (and records) every row it produced first
+        ok = True
         try:
             for line in benches[name]():
                 print(line, flush=True)
+                records.append(_parse_row(line))
         except Exception:
+            ok = False
             failed = True
             traceback.print_exc()
             print(f"{name},nan,ERROR", flush=True)
+            records.append({"name": name, "us_per_call": None,
+                            "derived": "ERROR", "status": "error",
+                            "error": traceback.format_exc()[-2000:]})
+        if ok:
+            records.append({"name": f"{name}/_wall", "us_per_call":
+                            (time.time() - t0) * 1e6, "derived":
+                            "group_wall_time", "status": "ok"})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benches": records,
+                       "meta": {"quick": quick,
+                                "groups": selected}}, f, indent=2)
+        return   # statuses recorded; the gate owns pass/fail
     if failed:
         sys.exit(1)
 

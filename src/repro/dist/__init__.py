@@ -1,0 +1,36 @@
+"""repro.dist — sharded distributed runtime with compressed-aggregation
+collectives.
+
+Lays the LM zoo and the FL aggregation state over a ``("data",
+"model")`` mesh (``"pod"`` optional in front): the model axis carries
+tensor parallelism via GSPMD constraint propagation, the data(+pod)
+axes enumerate FL replicas ("users") whose local deltas meet at
+:func:`aggregate_delta` — the paper's quantized aggregation (§II-C)
+realized as a packed-sign-plane collective through the Pallas
+``signpack`` / ``sign_dequant_reduce`` kernels.
+
+See DESIGN.md §6 for the mesh layout, sharding rules and wire format;
+tests/dist_checks.py exercises the whole surface on an 8-fake-device
+mesh.
+"""
+from repro.models.sharding_ctx import shard_map  # version-portable
+
+from .compressor import (CompressorConfig, aggregate_delta,
+                         aggregate_flat_manual, aggregate_flat_stacked,
+                         budget_k, mixed_recon, payload_bits,
+                         signplane_weighted_aggregate)
+from .sharding import (batch_shardings, decode_cache_shape,
+                       decode_shardings, param_shardings, param_specs,
+                       replica_axes, replica_count, train_input_shardings)
+from .steps import (TrainHParams, build_decode_step, build_prefill_step,
+                    build_train_step, microbatch)
+
+__all__ = [
+    "CompressorConfig", "TrainHParams", "aggregate_delta",
+    "aggregate_flat_manual", "aggregate_flat_stacked", "batch_shardings",
+    "budget_k", "build_decode_step", "build_prefill_step",
+    "build_train_step", "decode_cache_shape", "decode_shardings",
+    "microbatch", "mixed_recon", "param_shardings", "param_specs",
+    "payload_bits", "replica_axes", "replica_count", "shard_map",
+    "signplane_weighted_aggregate", "train_input_shardings",
+]

@@ -1,0 +1,239 @@
+"""Compressed cross-replica delta aggregation — the paper's §II-C
+mixed-resolution scheme as a datacenter collective.
+
+Every data-parallel replica plays the role of one FL user: it holds a
+local model delta and the aggregation point is the cross-replica mean
+(eq. 3 with uniform rho).  ``aggregate_delta`` compresses that exchange
+with the static-budget wire format (core/quantize/static_budget.py):
+
+* ``kind="none"``   — fp32 all-reduce mean, bit-exact (the baseline and
+  the correctness oracle);
+* ``kind="mixed"``  — per replica, the k = ceil(s_budget * d) largest-
+  magnitude elements are sent on a ``bits``-wide uniform grid anchored
+  at the rank-k magnitude ``dw_q`` (high resolution); every element
+  additionally contributes one sign bit, reconstructed as
+  ``± dw_q / 2`` outside the top-k support (low resolution).  The sign
+  plane is bit-packed through the Pallas ``signpack`` kernel and the
+  multi-peer weighted reduction runs in ``sign_dequant_reduce`` — the
+  packed uint32 words are the arrays the wire actually moves; the
+  sparse high-resolution correction rides a dense fp32 reduce whose
+  payload is *accounted* at the packed idx+code size (see DESIGN.md
+  §6 for the wire-format layout).
+
+Two calling conventions, one semantics:
+
+* **stacked** (``axis_names`` empty) — leaves carry a leading replica
+  axis ``[G, ...]`` laid over the data mesh axis by GSPMD; used by
+  ``build_train_step`` (vmap over replicas).
+* **manual** (``axis_names`` non-empty) — called inside a fully-manual
+  ``shard_map`` region; leaves are the replica-local shards and the
+  exchange uses ``all_gather``/``pmean`` over the named axes.  Each
+  model shard quantizes independently (per-shard top-k), which is the
+  TPU-native layout: no cross-shard sort, and Lemma 1 holds per shard
+  with the per-shard realized threshold.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize.static_budget import wire_bits
+from repro.kernels.ops import packed_sign_weighted_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorConfig:
+    """Wire-format selection for ``aggregate_delta``."""
+    kind: str = "mixed"          # "none" | "mixed"
+    s_budget: float = 0.01       # high-resolution fraction (k = ceil(s*d))
+    bits: int = 8                # grid width b; must divide 32
+    exact_topk: bool = False     # False may use approx_max_k on TPU
+
+    def validate(self) -> None:
+        if self.kind not in ("none", "mixed"):
+            raise ValueError(f"unknown compressor kind {self.kind!r}")
+        if self.kind == "mixed":
+            if not (0.0 < self.s_budget <= 1.0):
+                raise ValueError(f"s_budget must be in (0, 1], got "
+                                 f"{self.s_budget}")
+            if self.bits < 2 or 32 % self.bits != 0:
+                raise ValueError(f"bits must divide 32 and be >= 2, got "
+                                 f"{self.bits}")
+
+
+def budget_k(d: int, s_budget: float) -> int:
+    """Static high-resolution budget for a d-element shard."""
+    return max(1, min(d, math.ceil(s_budget * d)))
+
+
+def payload_bits(d: int, comp: CompressorConfig) -> int:
+    """Exact per-replica wire payload for one d-element shard."""
+    if comp.kind == "none":
+        return 32 * d
+    return wire_bits(d, budget_k(d, comp.s_budget), comp.bits)
+
+
+def _rank_k_values(absx: jnp.ndarray, k: int, exact: bool
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(inf-norm, rank-k magnitude) along the last axis."""
+    if not exact and jax.default_backend() == "tpu":
+        vals, _ = jax.lax.approx_max_k(absx, k)
+    else:
+        vals, _ = jax.lax.top_k(absx, k)
+    return vals[..., 0], vals[..., -1]
+
+
+def mixed_recon(flat: jnp.ndarray, comp: CompressorConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Element-wise mixed-resolution roundtrip of ``flat`` ([..., d]).
+
+    Returns (recon, dw_q) where dw_q is the per-row grid anchor (the
+    rank-k magnitude).  Equivalent to static_budget_encode+decode but
+    threshold-based, so it is batchable and never materializes the
+    index plane in the compute graph (ties at rank k land in the
+    high-resolution branch for every tied element).
+    """
+    x = flat.astype(jnp.float32)
+    d = x.shape[-1]
+    k = budget_k(d, comp.s_budget)
+    absx = jnp.abs(x)
+    inf, dw_q = _rank_k_values(absx, k, comp.exact_topk)
+    levels = 2 ** comp.bits - 1
+    step = (inf - dw_q) / levels
+    safe_step = jnp.where(step > 0, step, 1.0)
+    code = jnp.round((absx - dw_q[..., None]) / safe_step[..., None])
+    mags = dw_q[..., None] + code * step[..., None]
+    hi = jnp.sign(x) * mags
+    lo = jnp.where(x > 0, dw_q[..., None] * 0.5, -dw_q[..., None] * 0.5)
+    recon = jnp.where(absx >= dw_q[..., None], hi, lo)
+    return recon, dw_q
+
+
+def _sign_scales(dw_q: jnp.ndarray, G: int) -> jnp.ndarray:
+    """Per-peer sign-plane weights for the uniform mean: dw_q_g / (2G)."""
+    return (dw_q * (0.5 / G)).astype(jnp.float32)
+
+
+def lo_plane(flat: jnp.ndarray, dw_q: jnp.ndarray) -> jnp.ndarray:
+    """The low-resolution reconstruction plane ``sign(x) * dw_q/2``
+    (sign(0) = -1, matching the packed sign-bit convention)."""
+    half = dw_q[..., None] * 0.5
+    return jnp.where(flat > 0, half, -half)
+
+
+def signplane_weighted_aggregate(flat: jnp.ndarray, recons: jnp.ndarray,
+                                 dw_q: jnp.ndarray,
+                                 weights: jnp.ndarray) -> jnp.ndarray:
+    """``sum_g weights_g * recons_g`` through the packed wire format.
+
+    The single definition of the mixed-resolution aggregation identity
+    (shared by the sim engine's rho-weighted user aggregation and the
+    uniform cross-replica mean below): the 1-bit plane reduces inside
+    the Pallas kernels with per-peer scales ``w_g * dw_q_g / 2``; the
+    high-resolution correction ``recons - lo_plane`` — nonzero only on
+    each peer's top-k support — rides a dense weighted reduce.
+    """
+    low = packed_sign_weighted_sum(
+        flat, (weights * dw_q * 0.5).astype(jnp.float32))
+    corr = jnp.einsum("g,gd->d", weights, recons - lo_plane(flat, dw_q))
+    return low + corr
+
+
+def aggregate_flat_stacked(flat: jnp.ndarray, comp: CompressorConfig
+                           ) -> jnp.ndarray:
+    """[G, d] per-replica flat deltas -> [d] compressed mean (GSPMD)."""
+    flat = flat.astype(jnp.float32)
+    G = flat.shape[0]
+    if comp.kind == "none":
+        return jnp.mean(flat, axis=0)
+    recon, dw_q = mixed_recon(flat, comp)
+    weights = jnp.full((G,), 1.0 / G, jnp.float32)
+    return signplane_weighted_aggregate(flat, recon, dw_q, weights)
+
+
+def aggregate_flat_manual(flat: jnp.ndarray, comp: CompressorConfig,
+                          axis_names: Sequence[str]) -> jnp.ndarray:
+    """[d_local] replica-local flat delta -> [d_local] compressed mean
+    over the named (manual) mesh axes.  Call inside shard_map."""
+    flat = flat.astype(jnp.float32)
+    axes = tuple(axis_names)
+    if comp.kind == "none":
+        return jax.lax.pmean(flat, axes)
+    d = flat.shape[0]
+    recon, dw_q = mixed_recon(flat, comp)
+    from repro.kernels.ops import _default_interpret, sign_pad_len
+    from repro.kernels.quant_pack import sign_dequant_reduce, signpack
+    interp = _default_interpret()
+    d_pad = sign_pad_len(d)
+    padded = jnp.pad(flat, (0, d_pad - d)) if d_pad != d else flat
+    words = signpack(padded.reshape(-1, 128), interpret=interp)  # [W, 4]
+    g_words = jax.lax.all_gather(words, axes)                    # [G, W, 4]
+    g_dwq = jax.lax.all_gather(dw_q, axes)                       # [G]
+    G = g_words.shape[0]
+    low = sign_dequant_reduce(g_words, _sign_scales(g_dwq, G),
+                              interpret=interp)
+    low = low.reshape(-1)[:d]
+    corr = jax.lax.pmean(recon - lo_plane(flat, dw_q), axes)
+    return low + corr
+
+
+def aggregate_delta(deltas: Any, specs: Any, axis_names: Sequence[str],
+                    comp: CompressorConfig
+                    ) -> Tuple[Any, Dict[str, Any]]:
+    """Compressed cross-replica mean of a delta pytree.
+
+    deltas:     pytree of per-replica deltas.  With ``axis_names``
+                empty, every leaf carries a leading replica axis
+                ``[G, ...]`` (stacked/GSPMD mode); with ``axis_names``
+                given, leaves are replica-local shards and the call
+                must be inside a shard_map manual over those axes.
+    specs:      pytree of PartitionSpecs matching ``deltas`` (leaf
+                layout over the non-replica mesh axes).  Kept for the
+                wire-format record and future re-constraint; the
+                arithmetic does not depend on it.
+    axis_names: mesh axes to aggregate over (manual mode), or () / None.
+    comp:       CompressorConfig.
+
+    Returns ``(aggregated, info)`` where ``aggregated`` mirrors
+    ``deltas`` without the replica axis (stacked mode) / shard-local
+    (manual mode), in float32, and ``info`` carries the static payload
+    accounting: ``wire_bits_per_replica`` is the exact number of bits
+    one replica puts on the wire per round (fp32 everything for
+    ``none``; packed sign+idx+code planes for ``mixed``).
+    ``kind="none"`` reproduces the fp32 mean bit-exactly.
+    """
+    comp.validate()
+    del specs  # layout record only — see docstring
+    leaves, treedef = jax.tree_util.tree_flatten(deltas)
+    if not leaves:
+        return deltas, {"wire_bits_per_replica": 0, "d": 0, "k": 0}
+    manual = bool(axis_names)
+    if manual:
+        sizes = [int(leaf.size) for leaf in leaves]
+        flat = jnp.concatenate(
+            [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
+        agg = aggregate_flat_manual(flat, comp, axis_names)
+    else:
+        G = leaves[0].shape[0]
+        sizes = [int(leaf.size) // G for leaf in leaves]
+        flat = jnp.concatenate(
+            [leaf.reshape(G, -1).astype(jnp.float32) for leaf in leaves],
+            axis=1)
+        agg = aggregate_flat_stacked(flat, comp)
+    d = int(sum(sizes))
+    out_leaves = []
+    off = 0
+    for leaf, n in zip(leaves, sizes):
+        shape = leaf.shape[1:] if not manual else leaf.shape
+        out_leaves.append(agg[off:off + n].reshape(shape))
+        off += n
+    info = {
+        "wire_bits_per_replica": payload_bits(d, comp),
+        "d": d,
+        "k": budget_k(d, comp.s_budget) if comp.kind == "mixed" else 0,
+    }
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), info

@@ -1,0 +1,186 @@
+"""Mesh layout: parameter / batch / cache sharding specs.
+
+The production mesh is ``("data", "model")`` (multi-pod adds a leading
+``"pod"`` axis — see launch/mesh.py).  Replica placement follows the
+FL-over-CFmMIMO reading of data parallelism: each data(-and-pod) slice
+is one "user" whose local delta meets the others only at the
+compressed aggregation point (repro.dist.compressor).
+
+Parameter specs use one uniform rule instead of a per-leaf table: for
+every leaf of rank >= 2 the largest dim divisible by the model-axis
+size is sharded over ``"model"`` (ties resolve to the later dim, which
+prefers the output/vocab/ffn dims the activations are annotated with);
+``cfg.fsdp`` additionally lays the largest remaining divisible dim over
+``"data"``.  1-D leaves (norms, biases, decay vectors) stay replicated.
+Divisibility is checked here so every sharding handed to ``jax.jit``'s
+``in_shardings`` is exact; uneven intermediate layouts are left to
+GSPMD's constraint propagation inside the step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.inputs import serving_window
+from repro.models.config import InputShape, ModelConfig
+from repro.models.transformer import init_cache
+
+# logical-name -> mesh-axis rules handed to models.sharding_ctx.
+# Training runs the replica (user) axis through vmap's spmd_axis_name,
+# so "batch" must stay unmapped there; serving shards it directly.
+MODEL_AXIS_RULES: Dict[str, Any] = {
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "ffn": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+}
+
+
+def replica_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that enumerate FL replicas ("users")."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def replica_count(mesh: Mesh) -> int:
+    n = 1
+    for a in replica_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def train_rules(mesh: Mesh) -> Dict[str, Any]:
+    return {**MODEL_AXIS_RULES, "batch": None, "seq": None,
+            "res_seq": "model"}
+
+
+def serve_rules(mesh: Mesh, kind: str) -> Dict[str, Any]:
+    axes = replica_axes(mesh)
+    batch = axes if len(axes) > 1 else (axes[0] if axes else None)
+    rules = {**MODEL_AXIS_RULES, "batch": batch, "seq": None,
+             "res_seq": "model" if kind == "prefill" else None}
+    if kind in ("prefill", "decode"):
+        rules["expert"] = "model"
+    return rules
+
+
+# ------------------------------------------------------------- params
+def _leaf_spec(shape: Tuple[int, ...], mesh: Mesh, fsdp: bool) -> P:
+    entries = [None] * len(shape)
+    if len(shape) >= 2:
+        model = mesh.shape.get("model", 1)
+        best = None
+        if model > 1:
+            for i, s in enumerate(shape):
+                if s > 1 and s % model == 0 and \
+                        (best is None or s >= shape[best]):
+                    best = i
+            if best is not None:
+                entries[best] = "model"
+        if fsdp:
+            data = mesh.shape.get("data", 1)
+            if data > 1:
+                bestd = None
+                for i, s in enumerate(shape):
+                    if i != best and s > 1 and s % data == 0 and \
+                            (bestd is None or s >= shape[bestd]):
+                        bestd = i
+                if bestd is not None:
+                    entries[bestd] = "data"
+    return P(*entries)
+
+
+def param_specs(params: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """PartitionSpec pytree for a parameter (Shape)pytree."""
+    return jax.tree_util.tree_map(
+        lambda leaf: _leaf_spec(tuple(leaf.shape), mesh, cfg.fsdp), params)
+
+
+def param_shardings(params: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """NamedSharding pytree for ``jax.jit`` in_shardings."""
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(
+            mesh, _leaf_spec(tuple(leaf.shape), mesh, cfg.fsdp)), params)
+
+
+# ------------------------------------------------------------ batches
+def _batch_dim_spec(size: int, mesh: Mesh) -> Any:
+    axes = replica_axes(mesh)
+    if not axes or size % replica_count(mesh) != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def batch_shardings(batch: Any, mesh: Mesh, shape: InputShape) -> Any:
+    """Shardings for a train/prefill batch dict: the global batch dim
+    (dim 0) is laid over the replica axes when divisible."""
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        spec[0] = _batch_dim_spec(leaf.shape[0], mesh)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(one, batch)
+
+
+def train_input_shardings(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                          params: Any, batch: Any) -> Tuple[Any, Any]:
+    """(param, microbatched-batch) shardings for build_train_step.
+
+    ``batch`` is the output of :func:`repro.dist.microbatch`: leaves are
+    ``[L, B, ...]`` and the global batch dim (dim 1) goes over the
+    replica axes.
+    """
+    ps = param_shardings(params, cfg, mesh)
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            spec[1] = _batch_dim_spec(leaf.shape[1], mesh)
+        return NamedSharding(mesh, P(*spec))
+    return ps, jax.tree_util.tree_map(one, batch)
+
+
+# ------------------------------------------------------------- decode
+def decode_cache_shape(cfg: ModelConfig, shape: InputShape) -> Any:
+    """ShapeDtypeStruct pytree of the static decode cache."""
+    window = serving_window(cfg, shape)
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                           jnp.dtype(cfg.dtype), window))
+
+
+def _batch_at(dim: int, ndim: int, axes) -> P:
+    entries = [None] * ndim
+    if axes is not None:
+        entries[dim] = axes
+    return P(*entries)
+
+
+def decode_shardings(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                     params: Any
+                     ) -> Tuple[Any, Any, Any, Any]:
+    """(params, cache, tokens, cache_index) shardings for the decode
+    step: params over the model axis, cache batch over the replica
+    axes, tokens over the replica axes, scalar index replicated.
+
+    The batch dim is located by cache STRUCTURE, not by size matching:
+    the per-block-kind entries are layer-stacked states ``[n, B, ...]``
+    (batch at dim 1) while the top-level ``enc_out`` is ``[B, S, d]``
+    (batch at dim 0) — see models.transformer.init_cache.
+    """
+    ps = param_shardings(params, cfg, mesh)
+    B = shape.global_batch
+    axes = _batch_dim_spec(B, mesh)
+    cache_shape = decode_cache_shape(cfg, shape)
+    cs = {}
+    for key, sub in cache_shape.items():
+        batch_dim = 0 if key == "enc_out" else 1
+        cs[key] = jax.tree_util.tree_map(
+            lambda leaf, bd=batch_dim: NamedSharding(
+                mesh, _batch_at(bd, leaf.ndim, axes)), sub)
+    ts = NamedSharding(mesh, P(axes, None))
+    isd = NamedSharding(mesh, P())
+    return ps, cs, ts, isd

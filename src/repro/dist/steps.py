@@ -1,0 +1,165 @@
+"""Compiled distributed train / prefill / decode steps.
+
+``build_train_step`` realizes Algorithm 1 on the LM zoo at datacenter
+scale: every replica group along the data(-and-pod) mesh axes is one
+FL "user".  The step
+
+1. splits the microbatch stack ``[L, B, ...]`` into per-replica slabs
+   ``[G, L, B/G, ...]`` laid over the replica axes,
+2. runs L local SGD iterations per replica via
+   ``jax.vmap(..., spmd_axis_name=...)`` — pure GSPMD, so the model-
+   parallel einsum partitioning inside ``loss_fn`` is untouched,
+3. aggregates the per-replica deltas with
+   :func:`repro.dist.aggregate_delta` (compressed wire format; the
+   paper's eq. 3 with uniform weights), and
+4. applies the aggregated delta to the replicated parameters.
+
+The replica axis deliberately goes through ``vmap`` rather than a
+manual ``shard_map`` over the whole step: per-replica semantics are
+identical (local batches never mix), while XLA remains free to
+partition attention/MoE/SSM internals over the model axis — and the
+sort/top-k ops inside the compressor stay on the well-tested GSPMD
+batched path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.inputs import serving_window
+from repro.models.config import InputShape, ModelConfig
+from repro.models.sharding_ctx import logical_axis_rules
+from repro.models.transformer import decode_step, forward, loss_fn
+
+from .compressor import CompressorConfig, aggregate_delta
+from .sharding import (param_shardings, replica_axes, replica_count,
+                       serve_rules, train_rules)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    """Per-round local-training hyperparameters (paper Table I names)."""
+    L_local: int = 1             # local iterations per replica per round
+    alpha: float = 0.01          # local SGD step size
+    compressor: CompressorConfig = CompressorConfig()
+    remat: bool = True
+
+
+def microbatch(batch: Any, L: int) -> Any:
+    """Split a global batch into L gradient-accumulation microbatches:
+    every leaf ``[B, ...]`` becomes ``[L, B // L, ...]``."""
+    if L < 1:
+        raise ValueError(f"L must be >= 1, got {L}")
+
+    def one(leaf):
+        B = leaf.shape[0]
+        if B % L != 0:
+            raise ValueError(
+                f"global batch {B} not divisible by L_local={L}")
+        return leaf.reshape((L, B // L) + leaf.shape[1:])
+    return jax.tree_util.tree_map(one, batch)
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                     hp: TrainHParams) -> Callable:
+    """step(params, microbatches) -> (new_params, metrics).
+
+    ``microbatches`` is the output of :func:`microbatch`; metrics carry
+    the mean local loss and the static per-replica wire payload of the
+    aggregation (``wire_bits_per_replica``).
+    """
+    hp.compressor.validate()
+    window = serving_window(cfg, shape)
+    axes = replica_axes(mesh)
+    if not axes:
+        raise ValueError(
+            "build_train_step needs a mesh with a 'data' (and "
+            f"optionally 'pod') axis to place replicas on; got axes "
+            f"{tuple(mesh.shape)}")
+    G = replica_count(mesh)
+    spmd_axis = axes if len(axes) > 1 else axes[0]
+    rules = train_rules(mesh)
+
+    def step(params: Any, batches: Any) -> Tuple[Any, Dict[str, Any]]:
+        with logical_axis_rules(mesh, rules):
+            def to_replicas(x):
+                # [L, B, ...] -> [G, L, B/G, ...]; replica g owns the
+                # contiguous batch rows GSPMD placed on its devices
+                L, B = x.shape[0], x.shape[1]
+                if B % G != 0:
+                    raise ValueError(
+                        f"global batch {B} not divisible by the "
+                        f"{G} replicas of mesh axes {axes}")
+                y = x.reshape((L, G, B // G) + x.shape[2:])
+                y = jnp.moveaxis(y, 1, 0)
+                return jax.lax.with_sharding_constraint(
+                    y, NamedSharding(mesh, P(spmd_axis)))
+
+            batches_g = jax.tree_util.tree_map(to_replicas, batches)
+
+            def local_train(mb):
+                def sgd(w, b):
+                    loss, grads = jax.value_and_grad(loss_fn)(
+                        w, b, cfg, window, hp.remat)
+                    w = jax.tree_util.tree_map(
+                        lambda p, g: (p - hp.alpha * g).astype(p.dtype),
+                        w, grads)
+                    return w, loss
+                w, losses = jax.lax.scan(sgd, params, mb)
+                delta = jax.tree_util.tree_map(
+                    lambda a, b: (a - b).astype(jnp.float32), w, params)
+                return delta, losses.mean()
+
+            deltas, losses = jax.vmap(
+                local_train, spmd_axis_name=spmd_axis)(batches_g)
+            agg, info = aggregate_delta(deltas, None, (), hp.compressor)
+            # pin the updated params to the canonical layout so the
+            # step's output feeds straight back as its input
+            shardings = param_shardings(params, cfg, mesh)
+            new_params = jax.tree_util.tree_map(
+                lambda p, u, s: jax.lax.with_sharding_constraint(
+                    (p + u).astype(p.dtype), s),
+                params, agg, shardings)
+            metrics = {
+                "loss": jnp.mean(losses),
+                "wire_bits_per_replica": info["wire_bits_per_replica"],
+                "delta_dim": info["d"],
+            }
+            return new_params, metrics
+
+    return step
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh,
+                       shape: InputShape) -> Callable:
+    """step(params, batch) -> logits, batch sharded over the replica
+    axes and activations over the model axis (no remat: inference)."""
+    window = serving_window(cfg, shape)
+    rules = serve_rules(mesh, "prefill")
+
+    def step(params: Any, batch: Any) -> jnp.ndarray:
+        with logical_axis_rules(mesh, rules):
+            logits, _, _ = forward(params, batch, cfg, window,
+                                   remat=False)
+            return logits
+
+    return step
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh,
+                      shape: InputShape) -> Callable:
+    """serve(params, cache, tokens, cache_index) -> (logits, new_cache)."""
+    window = serving_window(cfg, shape)
+    rules = serve_rules(mesh, "decode")
+
+    def serve(params: Any, cache: Any, tokens: jnp.ndarray,
+              cache_index: jnp.ndarray) -> Tuple[jnp.ndarray, Any]:
+        with logical_axis_rules(mesh, rules):
+            return decode_step(params, cache, tokens, cache_index, cfg,
+                               window)
+
+    return serve

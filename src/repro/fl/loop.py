@@ -107,7 +107,8 @@ def run_fl(dataset: ImageDataset, test: ImageDataset,
            shards: List[np.ndarray], cnn_cfg: PaperCNNConfig,
            quantizer: Quantizer, power: Optional[PowerController],
            chan: Optional[ChannelRealization], fl: FLConfig,
-           verbose: bool = False) -> FLResult:
+           verbose: bool = False, engine: Optional[Any] = None
+           ) -> FLResult:
     """Algorithm 1 — compatibility entry point.
 
     Delegates to the vectorized engine (repro.sim.engine), which runs
@@ -119,7 +120,9 @@ def run_fl(dataset: ImageDataset, test: ImageDataset,
     the sequential loop so the per-user ``min(batch_size, |D_j|)``
     semantics — and bit-for-bit reproducibility — are preserved
     unconditionally.  power/chan None => latency not simulated (pure
-    convergence experiments, e.g. Fig. 2 / Table II).
+    convergence experiments, e.g. Fig. 2 / Table II).  ``engine`` is an
+    optional repro.sim.EngineConfig (e.g. with a mesh to shard the
+    user axis across devices); the ragged-shard fallback ignores it.
     """
     if min(len(s) for s in shards) < fl.batch_size:
         return run_fl_sequential(dataset, test, shards, cnn_cfg,
@@ -127,9 +130,9 @@ def run_fl(dataset: ImageDataset, test: ImageDataset,
                                  verbose=verbose)
     from repro.sim.engine import VectorizedFLEngine
 
-    engine = VectorizedFLEngine(dataset, test, shards, cnn_cfg, quantizer,
-                                power, chan, fl)
-    return engine.run(verbose=verbose)
+    eng = VectorizedFLEngine(dataset, test, shards, cnn_cfg, quantizer,
+                             power, chan, fl, engine=engine)
+    return eng.run(verbose=verbose)
 
 
 def run_fl_sequential(dataset: ImageDataset, test: ImageDataset,

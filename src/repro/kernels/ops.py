@@ -40,6 +40,46 @@ def sign_dequant_reduce_op(words: jnp.ndarray, scales: jnp.ndarray,
     return out.reshape(-1)
 
 
+def sign_pad_len(d: int) -> int:
+    """Padded length for viewing a flat d-vector as signpack's [W, 128]
+    rows with a valid block partition: W = ceil(d/128), padded up to a
+    multiple of 256 rows once W exceeds one block."""
+    rows = -(-d // 128)
+    if rows > 256 and rows % 256:
+        rows = -(-rows // 256) * 256
+    return rows * 128
+
+
+def packed_sign_weighted_sum(flat: jnp.ndarray, scales: jnp.ndarray,
+                             interpret: bool | None = None) -> jnp.ndarray:
+    """flat: [G, d] f32, scales: [G] f32 -> [d] f32 equal to
+    ``sum_g scales_g * sign(flat_g)`` with sign(x) = +1 iff x > 0.
+
+    Routes through the packed wire format: one signpack launch bit-packs
+    all G sign planes ([G*W, 128] f32 -> uint32 words, the arrays a
+    multi-peer aggregation actually moves), then sign_dequant_reduce
+    fuses per-peer unpacking with the scale-weighted reduction.  Not
+    jitted here — call sites trace it into their own jitted steps.
+    """
+    interp = _default_interpret() if interpret is None else interpret
+    G, d = flat.shape
+    d_pad = sign_pad_len(d)
+    if d_pad != d:
+        flat = jnp.pad(flat, ((0, 0), (0, d_pad - d)))
+    rows = d_pad // 128
+    # the G planes are stacked into one [G*rows, 128] launch, so the
+    # block size must divide the per-plane row count (rows <= 256 after
+    # sign_pad_len only when it IS the whole plane) — G*rows alone need
+    # not be a multiple of the default 256-row block
+    bm = rows if rows <= 256 else 256
+    words = _signpack(flat.reshape(-1, 128), interpret=interp,
+                      block_rows=bm)
+    words = words.reshape(G, rows, 4)
+    out = _sdr(words, scales.astype(jnp.float32), interpret=interp,
+               block_rows=bm)
+    return out.reshape(-1)[:d]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "kv_block"))
 def flash_decode_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     length: jnp.ndarray, kv_block: int = 512,

@@ -29,7 +29,8 @@ from jax.sharding import PartitionSpec as P
 
 from .config import ModelConfig
 from .layers import dense_init, init_mlp, mlp_apply
-from .sharding_ctx import _manual_axes, current_mesh, current_rules, shard
+from .sharding_ctx import (_manual_axes, current_mesh, current_rules,
+                           shard, shard_map)
 
 
 def _inner_mesh(mesh):
@@ -201,7 +202,7 @@ def _moe_shard_map(params, x, top_idx, top_w, cfg: ModelConfig, mesh, rules):
             y = jax.lax.psum(y, expert_axis)
             return y.reshape(xl.shape)
 
-        return jax.shard_map(
+        return shard_map(
             repl_fn, mesh=_inner_mesh(mesh),
             in_specs=(P(expert_axis), P(expert_axis), P(expert_axis),
                       P(), P(), P()),
@@ -242,7 +243,7 @@ def _moe_shard_map(params, x, top_idx, top_w, cfg: ModelConfig, mesh, rules):
         batuple = None
     seq_ax = expert_axis if seq_sharded else None
     bspec = P(batuple, seq_ax)
-    return jax.shard_map(
+    return shard_map(
         a2a_fn, mesh=_inner_mesh(mesh),
         in_specs=(P(expert_axis), P(expert_axis), P(expert_axis),
                   bspec, bspec, bspec),

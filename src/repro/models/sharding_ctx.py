@@ -57,7 +57,43 @@ def _manual_axes() -> frozenset:
             n for n, t in zip(am.axis_names, am.axis_types)
             if t == jax.sharding.AxisType.Manual)
     except Exception:
+        pass
+    # jax 0.4.x has no abstract-mesh query; axis names bound by an
+    # enclosing shard_map/pmap live in the trace axis env instead
+    # (vmap's spmd_axis_name deliberately does NOT appear — those
+    # constraints are extended by the vmap machinery itself).
+    try:
+        names = jax.core.unsafe_get_axis_names_DO_NOT_USE()
+        return frozenset(n for n in names if isinstance(n, str))
+    except Exception:
         return frozenset()
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """Version-portable ``shard_map`` front-end.
+
+    Newer jax exposes ``jax.shard_map(..., axis_names=, check_vma=)``
+    where ``axis_names`` lists the MANUAL mesh axes (the rest stay
+    GSPMD-auto).  jax 0.4.x instead has
+    ``jax.experimental.shard_map.shard_map(..., auto=, check_rep=)``
+    where ``auto`` lists the NON-manual axes.  Both the repro.dist
+    runtime and tests/dist_checks.py go through this wrapper so the
+    same source runs on either API.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=bool(check_vma),
+                      auto=auto)
 
 
 def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
@@ -83,4 +119,7 @@ def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
                 kept = tuple(a for a in e if a not in manual)
                 entries.append(kept if kept else None)
         spec = P(*entries)
+    if all(e is None for e in spec):
+        # nothing left to constrain (e.g. fully-manual shard_map body)
+        return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

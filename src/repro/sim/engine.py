@@ -58,16 +58,11 @@ from repro.core.quantize import Quantizer
 from repro.core.quantize.base import flatten_pytree, unflatten_pytree
 from repro.data.federated import user_fractions
 from repro.data.synthetic import ImageDataset
-from repro.kernels.quant_pack import sign_dequant_reduce, signpack
-
-# signpack tiles the flat vector as [W, 128] rows and blocks W by
-# min(256, W); padding d to a multiple of 128*256 keeps every W a
-# multiple of the block size.
-_SIGN_TILE = 128 * 256
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+# the mixed-resolution signplane aggregation identity (packed 1-bit
+# reduce + dense correction on the top-k support) has ONE definition,
+# shared with repro.dist's cross-replica aggregation
+from repro.dist.compressor import \
+    signplane_weighted_aggregate as _signplane_aggregate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +89,13 @@ class EngineConfig:
     participation: float = 1.0       # P(user active in a round) — churn
     redraw_channel_every: int = 0    # 0 = fixed realization (paper)
     channel_seed: int = 0            # base seed for Monte-Carlo redraws
+    # Optional jax Mesh with a "data" axis: the user axis K of every
+    # stacked array (minibatches, deltas, quantizer state) is laid over
+    # it, so one engine step scales the K users across devices — the
+    # sweep-layer counterpart of repro.dist's replica sharding.  None =
+    # single-device (default); ignored with a warning unless the
+    # data-axis size divides K evenly.
+    mesh: Optional[object] = None
 
     @property
     def effective_fused(self) -> bool:
@@ -113,31 +115,6 @@ def _subchannel(chan: ChannelRealization, idx: np.ndarray
         I_M=chan.I_M[idx])
 
 
-def _signplane_aggregate(flat: jnp.ndarray, recons: jnp.ndarray,
-                         dw_q: jnp.ndarray, weights: jnp.ndarray,
-                         d: int) -> jnp.ndarray:
-    """Mixed-resolution aggregation through the Pallas wire format.
-
-    The low-resolution plane of every user is exactly
-    ``sign(delta) * dw_q/2``, so its rho-weighted sum is a packed
-    1-bit-per-element reduce: signpack each user's sign plane, then
-    sign_dequant_reduce with per-user scales ``rho_j * dw_q_j / 2``.
-    High-resolution elements (where recon differs from the sign plane)
-    are corrected densely; the correction is exactly zero elsewhere.
-    """
-    K = flat.shape[0]
-    d_pad = -(-d // _SIGN_TILE) * _SIGN_TILE
-    padded = jnp.pad(flat, ((0, 0), (0, d_pad - d)))
-    # one kernel launch packs all K sign planes: [K*W, 128] -> [K*W, 4]
-    words = signpack(padded.reshape(-1, 128), interpret=_interpret())
-    words = words.reshape(K, d_pad // 128, 4)
-    scales = (weights * dw_q * 0.5).astype(jnp.float32)
-    low = sign_dequant_reduce(words, scales, interpret=_interpret())
-    low = low.reshape(-1)[:d]
-    lo_plane = jnp.where(flat > 0, dw_q[:, None] * 0.5,
-                         -dw_q[:, None] * 0.5)
-    corr = jnp.einsum("k,kd->d", weights, recons - lo_plane)
-    return low + corr
 
 
 class VectorizedFLEngine:
@@ -193,6 +170,7 @@ class VectorizedFLEngine:
         self.qstate = quantizer.init_batched_state(self.K, self.d)
         self.comp_lat = computation_latency(fl.L, fl.dataset_size_for_comp,
                                             self.K)
+        self._user_sharding, self._repl_sharding = self._user_shardings()
         if self.engine_cfg.effective_fused:
             self._train_flat = None
             self._fused_step = self._build_fused_step()
@@ -201,6 +179,27 @@ class VectorizedFLEngine:
             self._fused_step = None
 
     # ------------------------------------------------------------ build
+    def _user_shardings(self):
+        """(user-axis, replicated) NamedShardings when an engine mesh
+        is configured — the K axis of stacked arrays goes over the
+        mesh's data axis so one step runs the users device-parallel."""
+        mesh = self.engine_cfg.mesh
+        if mesh is None:
+            return None, None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if "data" not in getattr(mesh, "shape", {}):
+            warnings.warn("engine mesh has no 'data' axis; user-axis "
+                          "sharding disabled", stacklevel=2)
+            return None, None
+        nd = mesh.shape["data"]
+        if self.K % nd != 0:
+            warnings.warn(
+                f"data axis ({nd}) does not divide K={self.K} users "
+                "evenly; user-axis sharding disabled", stacklevel=2)
+            return None, None
+        return (NamedSharding(mesh, P("data")),
+                NamedSharding(mesh, P()))
+
     def _batched_local(self, params, xs, ys):
         """All K users' local AdaGrad runs -> stacked [K, d] deltas.
         Traced inside the jitted step; batching per EngineConfig."""
@@ -227,13 +226,17 @@ class VectorizedFLEngine:
         delta flattening -> [K, d].  Quantization/aggregation stay
         eager so the dense path replays the sequential loop's per-op
         rounding exactly (see module docstring)."""
-        return jax.jit(lambda params, xs, ys:
-                       self._batched_local(params, xs, ys))
+        fn = lambda params, xs, ys: self._batched_local(params, xs, ys)
+        if self._user_sharding is not None:
+            return jax.jit(fn, in_shardings=(
+                self._repl_sharding, self._user_sharding,
+                self._user_sharding))
+        return jax.jit(fn)
 
     def _build_fused_step(self):
         """One fully fused jit step per round: train + batched quantize
         + aggregation + model update in a single dispatch."""
-        q, spec, d, K = self.quantizer, self.spec, self.d, self.K
+        q, spec, K = self.quantizer, self.spec, self.K
         signplane = self.engine_cfg.aggregation == "signplane"
 
         def step(params, qstate, xs, ys, weights, active):
@@ -248,13 +251,18 @@ class VectorizedFLEngine:
                     new_qstate, qstate)
             if signplane:
                 agg = _signplane_aggregate(flat, res.recon,
-                                           res.aux["dw_q"], weights, d)
+                                           res.aux["dw_q"], weights)
             else:
                 agg = jnp.einsum("k,kd->d", weights, res.recon)
             params = jax.tree_util.tree_map(
                 lambda p, u: p + u, params, unflatten_pytree(agg, spec))
             return params, new_qstate, res.bits, res.aux
 
+        if self._user_sharding is not None:
+            us, rs = self._user_sharding, self._repl_sharding
+            # params replicated; every stacked [K, ...] arg (quantizer
+            # state, minibatches, weights, activity mask) user-sharded
+            return jax.jit(step, in_shardings=(rs, us, us, us, us, us))
         return jax.jit(step)
 
     # ----------------------------------------------------------- rounds

@@ -79,7 +79,7 @@ def _resolve_scenario(scenario: Union[str, Scenario], quick: bool,
 
 
 def _make_engine(scn: Scenario, problem, quantizer: QuantSpec,
-                 power: PowerSpec) -> VectorizedFLEngine:
+                 power: PowerSpec, mesh=None) -> VectorizedFLEngine:
     from repro.fl.loop import FLConfig
 
     train, test, shards, cnn_cfg, chan = problem
@@ -88,9 +88,12 @@ def _make_engine(scn: Scenario, problem, quantizer: QuantSpec,
     fl = FLConfig(L=scn.L, T=scn.T, batch_size=scn.batch_size,
                   alpha=scn.lr, eval_every=scn.effective_eval_every,
                   latency_budget_s=scn.latency_budget_s, seed=scn.seed)
+    ecfg = scn.engine_config()
+    if mesh is not None:
+        ecfg = dataclasses.replace(ecfg, mesh=mesh)
     return VectorizedFLEngine(train, test, shards, cnn_cfg, q,
                               pc if chan is not None else None, chan,
-                              fl, engine=scn.engine_config())
+                              fl, engine=ecfg)
 
 
 def _to_result(scn: Scenario, engine: VectorizedFLEngine, res,
@@ -106,10 +109,14 @@ def run_cell(scenario: Union[str, Scenario], quantizer: QuantSpec,
              power: PowerSpec = None, quick: bool = True,
              latency_budget_s: Optional[float] = None,
              verbose: bool = False,
-             labels: Tuple[str, str] = ("", "")) -> SweepResult:
-    """Run one (scenario, quantizer, power) simulation cell."""
+             labels: Tuple[str, str] = ("", ""),
+             mesh=None) -> SweepResult:
+    """Run one (scenario, quantizer, power) simulation cell.  ``mesh``
+    (a jax Mesh with a "data" axis) shards the user axis across
+    devices — see EngineConfig.mesh."""
     scn = _resolve_scenario(scenario, quick, latency_budget_s)
-    engine = _make_engine(scn, build_problem(scn), quantizer, power)
+    engine = _make_engine(scn, build_problem(scn), quantizer, power,
+                          mesh=mesh)
     return _to_result(scn, engine, engine.run(verbose=verbose), labels)
 
 
@@ -118,7 +125,7 @@ def run_grid(scenarios: List[Union[str, Scenario]],
              powers: Optional[Mapping[str, PowerSpec]] = None,
              quick: bool = True, out_csv: Optional[str] = None,
              latency_budget_s: Optional[float] = None,
-             verbose: bool = False) -> List[SweepResult]:
+             verbose: bool = False, mesh=None) -> List[SweepResult]:
     """Run the full scenario x quantizer x power grid.
 
     Within a scenario the problem (dataset, partition, channel) is
@@ -136,7 +143,8 @@ def run_grid(scenarios: List[Union[str, Scenario]],
             engine = None
             for plabel, pspec in powers.items():
                 if engine is None:
-                    engine = _make_engine(scn, problem, qspec, pspec)
+                    engine = _make_engine(scn, problem, qspec, pspec,
+                                          mesh=mesh)
                 else:
                     pc = _make_power(pspec)
                     engine.power = pc if chan is not None else None

@@ -19,11 +19,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
 from repro.dist import (CompressorConfig, TrainHParams,  # noqa: E402
-                        aggregate_delta, build_decode_step,
-                        build_prefill_step, build_train_step,
-                        decode_cache_shape, decode_shardings, microbatch,
-                        param_shardings, param_specs,
-                        train_input_shardings)
+                        aggregate_delta, batch_shardings,
+                        build_decode_step, build_prefill_step,
+                        build_train_step, decode_cache_shape,
+                        decode_shardings, microbatch, param_shardings,
+                        param_specs, shard_map, train_input_shardings)
 from repro.launch.inputs import input_specs  # noqa: E402
 from repro.models import init_model  # noqa: E402
 from repro.models.config import InputShape  # noqa: E402
@@ -40,7 +40,7 @@ def check_aggregation_exact_mean():
     spec = P("data", "model")
 
     def agg(v):
-        return jax.shard_map(
+        return shard_map(
             lambda vl: jax.lax.pmean(vl, ("data",)),
             mesh=mesh, in_specs=spec, out_specs=spec,
             check_vma=False)(v)
@@ -53,7 +53,10 @@ def check_aggregation_exact_mean():
 
 def check_quantized_aggregation():
     """Quantized aggregate ~ true mean; error within the static-budget
-    Lemma-1 bound per replica contribution."""
+    Lemma-1 bound per replica contribution.  Fully manual over both
+    mesh axes: every model shard quantizes its local slice (per-shard
+    top-k + packed sign plane + all_gather over data) independently —
+    the TPU-native layout of the wire format."""
     mesh = small_mesh()
     rng = np.random.default_rng(0)
     G = 2                                     # data axis = replicas
@@ -64,20 +67,18 @@ def check_quantized_aggregation():
     deltas[:, spikes] *= 30.0
     x = jnp.asarray(deltas)
     spec_full = P("data", "model")            # replica dim x sharded dim
-    spec_manual = P("data", None)             # manual part only
     comp = CompressorConfig(kind="mixed", s_budget=0.02, bits=8,
                             exact_topk=True)
 
     def run(v):
         def body(vl):
-            # vl: [1, d] with d still GSPMD-sharded over model
+            # vl: [1, d / model] — this model shard's local slice
             leaf = vl[0]
             out, _ = aggregate_delta(
                 {"w": leaf}, {"w": P("model")}, ("data",), comp)
             return out["w"][None]
-        return jax.shard_map(body, mesh=mesh, in_specs=spec_manual,
-                             out_specs=spec_manual, axis_names={"data"},
-                             check_vma=False)(v)
+        return shard_map(body, mesh=mesh, in_specs=spec_full,
+                         out_specs=spec_full, check_vma=False)(v)
 
     out = jax.jit(run, in_shardings=NamedSharding(mesh, spec_full))(x)
     out = np.asarray(out)
@@ -159,6 +160,31 @@ def check_moe_train_step():
     print(f"ok: MoE train step (loss {float(m1['loss']):.3f})")
 
 
+def check_prefill_step():
+    """Prefill forward on the 2x4 mesh: dense (sequence-parallel
+    residual over the model axis) and MoE (expert-parallel all_to_all
+    dispatch — serve rules map the expert axis onto 'model')."""
+    mesh = small_mesh()
+    for arch in ("granite-3-8b", "qwen2-moe-a2.7b"):
+        cfg = dataclasses.replace(get_config(arch).reduced(),
+                                  ssm_chunk=16)
+        shape = InputShape("p", seq_len=64, global_batch=4,
+                           kind="prefill")
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        specs = param_specs(params, cfg, mesh)
+        flat_specs = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda s: isinstance(s, P))
+        assert any("model" in s for s in flat_specs)
+        step = build_prefill_step(cfg, mesh, shape)
+        batch = input_specs(cfg, shape, abstract=False, seed=0)
+        ps = param_shardings(params, cfg, mesh)
+        bs = batch_shardings(batch, mesh, shape)
+        logits = jax.jit(step, in_shardings=(ps, bs))(params, batch)
+        assert logits.shape == (4, 64, cfg.vocab_padded), logits.shape
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+        print(f"ok: prefill step {arch}")
+
+
 def check_decode_step():
     mesh = small_mesh()
     for arch in ("granite-3-8b", "rwkv6-7b", "zamba2-7b"):
@@ -187,5 +213,6 @@ if __name__ == "__main__":
     check_train_step_runs()
     check_classic_vs_quantized_bits()
     check_moe_train_step()
+    check_prefill_step()
     check_decode_step()
     print("ALL DIST CHECKS PASSED")

@@ -9,11 +9,9 @@ import sys
 
 import pytest
 
-# The checks exercise the repro.dist distributed runtime, which the
-# seed references but does not ship yet; skip (not fail) until it lands.
-pytest.importorskip(
-    "repro.dist",
-    reason="repro.dist distributed runtime not implemented in this repo yet")
+# an import failure here must FAIL the suite, not skip it: the checks
+# below are the correctness gate of the repro.dist runtime
+import repro.dist  # noqa: F401
 
 
 @pytest.mark.timeout(900)

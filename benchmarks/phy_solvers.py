@@ -1,0 +1,77 @@
+"""Batched phy solvers vs per-realization numpy solve wall-time.
+
+The repro.phy acceptance bar: at batch >= 64 the jitted batched solve
+must be >= 10x faster than looping the numpy reference controller over
+the realizations (the control-plane bottleneck run_grid paid before
+the batched driver).  Compile time is excluded (one warm call), the
+batched timing is min-of-3, and the numpy loop is timed once (it is
+the slow side by an order of magnitude).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.channel import CFmMIMOConfig, make_channel
+from repro.core.power import (BisectionLPPowerControl,
+                              DinkelbachPowerControl,
+                              MaxSumRatePowerControl)
+from repro.phy import (bisection_solve, bundle_from_realizations,
+                       dinkelbach_solve, maxsum_solve)
+
+from .common import csv_row
+
+
+def _time_batched(fn, reps: int = 3) -> float:
+    fn()                                   # warm / compile
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.time()
+        sol = fn()
+        _ = np.asarray(sol.latencies)      # block on device results
+        best = min(best, time.time() - t0)
+    return best
+
+
+def _bench_solver(name: str, batched_fn, host_ctrl, chans, bits):
+    t_batched = _time_batched(batched_fn)
+    t0 = time.time()
+    for i, c in enumerate(chans):
+        host_ctrl.solve(c, bits[i])
+    t_host = time.time() - t0
+    speedup = t_host / t_batched
+    B = len(chans)
+    return csv_row(
+        f"phy_solvers/{name}_b{B}", t_batched * 1e6,
+        f"np_ms={t_host * 1e3:.1f};jax_ms={t_batched * 1e3:.1f};"
+        f"speedup={speedup:.1f}x;B={B};K={chans[0].cfg.K}")
+
+
+def run(quick: bool = True):
+    B = 64 if quick else 256
+    cfg = CFmMIMOConfig(K=20, M=16)
+    chans = [make_channel(cfg, seed=s) for s in range(B)]
+    cb = bundle_from_realizations(chans)
+    rng = np.random.default_rng(0)
+    bits = rng.uniform(1e5, 2e6, (B, cfg.K))
+
+    lines = [_bench_solver(
+        "bisection", lambda: bisection_solve(cb, bits),
+        BisectionLPPowerControl(), chans, bits)]
+    # reduced iteration counts keep the numpy side's FD loops within a
+    # CI budget; both sides use the same counts
+    lines.append(_bench_solver(
+        "dinkelbach",
+        lambda: dinkelbach_solve(cb, bits, outer=4, inner=10),
+        DinkelbachPowerControl(outer=4, inner=10), chans, bits))
+    lines.append(_bench_solver(
+        "maxsum",
+        lambda: maxsum_solve(cb, bits, iters=40, restarts=1),
+        MaxSumRatePowerControl(iters=40, restarts=1), chans, bits))
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

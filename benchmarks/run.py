@@ -39,13 +39,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,table2,table3,overhead,"
-                         "sim_engine")
+                         "sim_engine,phy_solvers")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write structured per-bench records to OUT")
     args = ap.parse_args()
     quick = not args.full
 
-    from . import fig2_convergence, overhead, sim_engine, \
+    from . import fig2_convergence, overhead, phy_solvers, sim_engine, \
         table2_accuracy, table3_latency
     benches = {
         "overhead": lambda: overhead.run(quick=quick),
@@ -54,6 +54,7 @@ def main() -> None:
         "table2": lambda: table2_accuracy.run(quick=quick),
         "table3": lambda: table3_latency.run(quick=quick),
         "sim_engine": lambda: sim_engine.run(quick=quick),
+        "phy_solvers": lambda: phy_solvers.run(quick=quick),
     }
     selected = list(benches) if args.only is None \
         else args.only.split(",")

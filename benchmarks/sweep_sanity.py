@@ -1,0 +1,57 @@
+"""Sanity gate for the scheduled Monte-Carlo sweep artifact.
+
+Asserts, across every cell of the metrics CSV written by
+``benchmarks.mc_sweep``:
+
+* all latency metrics are finite and non-negative, and every cell
+  completed at least one round;
+* power stayed physical: ``max_p <= 1`` (power-control coefficients,
+  i.e. transmit power <= p_max) — populated by the batched phy driver.
+
+    PYTHONPATH=src python -m benchmarks.sweep_sanity runs/mc_sweep.csv
+"""
+from __future__ import annotations
+
+import csv
+import math
+import sys
+
+LATENCY_FIELDS = ("total_latency_s", "mean_uplink_s", "p95_uplink_s")
+
+
+def check(path: str) -> int:
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    if not rows:
+        print(f"FAIL: {path} has no sweep rows")
+        return 1
+    failures = []
+    for row in rows:
+        cell = f"{row['scenario']}/{row['quantizer']}/{row['power']}"
+        if float(row["rounds"]) < 1:
+            failures.append(f"{cell}: completed no rounds")
+        for field in LATENCY_FIELDS:
+            v = float(row[field])
+            if not math.isfinite(v) or v < 0:
+                failures.append(f"{cell}: {field}={v} not finite/>=0")
+        if row.get("max_p", ""):
+            v = float(row["max_p"])
+            if not math.isfinite(v) or not 0.0 <= v <= 1.0:
+                failures.append(
+                    f"{cell}: max_p={v} outside [0, 1] (power > p_max)")
+        else:
+            failures.append(f"{cell}: max_p missing — sweep did not run "
+                            "on the batched phy path")
+    if failures:
+        print(f"FAIL ({len(failures)}):")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print(f"sweep sanity OK: {len(rows)} cells, finite latencies, "
+          "power <= p_max")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1
+                   else "runs/mc_sweep.csv"))

@@ -1,2 +1,3 @@
 from .cfmmimo import (CFmMIMOConfig, ChannelRealization, computation_latency,
-                      make_channel, uplink_latency)
+                      draw_positions, large_scale_fading, make_channel,
+                      uplink_latency)

@@ -19,7 +19,7 @@ scipy's LP; K <= 40, M <= 64 — negligible compute.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -98,27 +98,56 @@ def _greedy_pilot_assignment(beta: np.ndarray, tau_p: int) -> np.ndarray:
     return pilot
 
 
+def _draw_ap_positions(cfg: CFmMIMOConfig, rng: np.random.Generator
+                       ) -> np.ndarray:
+    """Regular grid of APs (common CFmMIMO deployment), jittered."""
+    side = cfg.area_m
+    g = int(np.ceil(np.sqrt(cfg.M)))
+    xs, ys = np.meshgrid(np.arange(g), np.arange(g))
+    pts = (np.stack([xs.ravel(), ys.ravel()], -1)[: cfg.M] + 0.5)
+    ap_positions = pts * (side / g) + rng.uniform(-20, 20, (cfg.M, 2))
+    return np.mod(ap_positions, side)
+
+
+def draw_positions(cfg: CFmMIMOConfig, seed: int = 0
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """(ap_positions [M,2], user_positions [K,2]) — the exact RNG stream
+    ``make_channel`` consumes when drawing both, factored out so the
+    batched phy layer (repro.phy) can draw identical geometry per
+    seed."""
+    rng = np.random.default_rng(seed)
+    ap_positions = _draw_ap_positions(cfg, rng)
+    user_positions = rng.uniform(0, cfg.area_m, (cfg.K, 2))
+    return ap_positions, user_positions
+
+
+def large_scale_fading(cfg: CFmMIMOConfig, ap_positions: np.ndarray,
+                       user_positions: np.ndarray) -> np.ndarray:
+    """beta [M, K] from the log-distance pathloss model on the torus."""
+    dist = np.maximum(_wrap_dist(ap_positions, user_positions, cfg.area_m),
+                      1.0)
+    pl_db = cfg.ref_pathloss_db - 10.0 * cfg.pathloss_exp * np.log10(dist)
+    return 10 ** (pl_db / 10)                      # [M, K]
+
+
 def make_channel(cfg: CFmMIMOConfig, seed: int = 0,
                  ap_positions: Optional[np.ndarray] = None,
                  user_positions: Optional[np.ndarray] = None
                  ) -> ChannelRealization:
-    """Draw positions, compute beta, assign pilots, build eq. (5) terms."""
+    """Draw positions, compute beta, assign pilots, build eq. (5) terms.
+
+    RNG-stream contract: one default_rng(seed) stream, consumed only
+    for the positions NOT supplied — passing ap_positions explicitly
+    leaves the user draw as the stream's first consumption, exactly as
+    before draw_positions was factored out.
+    """
     rng = np.random.default_rng(seed)
-    side = cfg.area_m
     if ap_positions is None:
-        # regular grid of APs (common CFmMIMO deployment), jittered
-        g = int(np.ceil(np.sqrt(cfg.M)))
-        xs, ys = np.meshgrid(np.arange(g), np.arange(g))
-        pts = (np.stack([xs.ravel(), ys.ravel()], -1)[: cfg.M] + 0.5)
-        ap_positions = pts * (side / g) + rng.uniform(-20, 20, (cfg.M, 2))
-        ap_positions = np.mod(ap_positions, side)
+        ap_positions = _draw_ap_positions(cfg, rng)
     if user_positions is None:
-        user_positions = rng.uniform(0, side, (cfg.K, 2))
+        user_positions = rng.uniform(0, cfg.area_m, (cfg.K, 2))
 
-    dist = np.maximum(_wrap_dist(ap_positions, user_positions, side), 1.0)
-    pl_db = cfg.ref_pathloss_db - 10.0 * cfg.pathloss_exp * np.log10(dist)
-    beta = 10 ** (pl_db / 10)                      # [M, K]
-
+    beta = large_scale_fading(cfg, ap_positions, user_positions)
     pilot = _greedy_pilot_assignment(beta, cfg.tau_p)
     copilot = (pilot[:, None] == pilot[None, :]).astype(np.float64)  # [K,K]
 

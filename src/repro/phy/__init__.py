@@ -1,0 +1,34 @@
+"""repro.phy — batched JAX physical layer for the sweep engine.
+
+JAX port of the CFmMIMO channel + power-control stack, vmapped over a
+leading batch axis of (realization x sweep-cell x round):
+
+* :mod:`channel` — eq. (5) coefficient bundle as a jit-friendly
+  ``ChannelBatch`` pytree; batched realization drawing;
+* :mod:`solvers` — bisection (projected linear-solve feasibility
+  instead of scipy's LP), Dinkelbach and max-sum-rate as
+  fixed-iteration lax loops, all mask-aware for user churn;
+* :mod:`bitalloc` — batched rate-aware bit allocation.
+
+The numpy implementations in ``core/channel`` and ``core/power`` are
+untouched and remain the golden references; parity and tolerances are
+pinned by tests/test_phy_parity.py and documented in DESIGN.md
+section 7.
+"""
+from .bitalloc import (equalizing_target_latency_batch,
+                       rate_aware_fractions_batch)
+from .channel import (ChannelBatch, bundle_from_realizations,
+                      compute_bundle, make_channel_batch,
+                      uplink_latency_batch)
+from .solvers import (BatchedPowerSolution, batched_solver,
+                      bisection_solve, dinkelbach_solve,
+                      eta_upper_bound_batch, maxsum_solve, maxsum_starts)
+
+__all__ = [
+    "BatchedPowerSolution", "ChannelBatch", "batched_solver",
+    "bisection_solve", "bundle_from_realizations", "compute_bundle",
+    "dinkelbach_solve", "equalizing_target_latency_batch",
+    "eta_upper_bound_batch", "make_channel_batch", "maxsum_solve",
+    "maxsum_starts", "rate_aware_fractions_batch",
+    "uplink_latency_batch",
+]

@@ -1,0 +1,32 @@
+"""Batched rate-aware bit allocation (jnp port of core.power.bitalloc).
+
+Same closed forms, vmapped over arbitrary leading axes so a whole sweep
+grid's per-user high-resolution budgets come out of one device call.
+The numpy originals stay the golden reference.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rate_aware_fractions_batch(rates: jnp.ndarray, d: int, b: int,
+                               target_latency_s,
+                               s_min: float = 0.0, s_max: float = 1.0
+                               ) -> jnp.ndarray:
+    """s_j = clip((ell* R_j - 32 - d) / (d (b - 1)), s_min, s_max);
+    ``target_latency_s`` may be scalar or [..., 1] for per-cell
+    targets."""
+    rates = jnp.asarray(rates)
+    s = (target_latency_s * rates - 32.0 - d) / (d * (b - 1.0))
+    return jnp.clip(s, s_min, s_max)
+
+
+def equalizing_target_latency_batch(rates: jnp.ndarray, d: int, b: int,
+                                    s_floor: float) -> jnp.ndarray:
+    """Smallest round latency at which every user of each cell can
+    afford s >= s_floor; reduces the trailing user axis."""
+    bits_floor = d * (b * s_floor + 1.0 - s_floor) + 32.0
+    return jnp.max(bits_floor / jnp.asarray(rates), axis=-1)
+
+
+__all__ = ["equalizing_target_latency_batch", "rate_aware_fractions_batch"]

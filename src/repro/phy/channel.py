@@ -1,0 +1,176 @@
+"""Batched JAX port of the CFmMIMO channel layer (eq. 4-5).
+
+``ChannelBatch`` carries the eq. (5) coefficient bundle
+(A_bar, B_bar, B_tilde, I_M) with an arbitrary set of leading batch
+axes, registered as a jax pytree so it flows straight into jitted
+solvers.  Three ways to build one:
+
+* :func:`bundle_from_realizations` — stack numpy
+  ``ChannelRealization`` objects (the golden reference path; exact,
+  no re-derivation);
+* :func:`compute_bundle` — the eq. (5) math in jnp given
+  (beta, pilot), vmappable over leading axes;
+* :func:`make_channel_batch` — draw B realizations device-side in one
+  vmapped call: positions and the (sequential, data-dependent) greedy
+  pilot assignment stay on the host exactly as in
+  ``core.channel.make_channel``, the O(M K^2) bundle math runs batched
+  on device.
+
+The numpy layer in ``core/channel`` remains the golden reference; this
+module is the production batched path (see DESIGN.md section 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel.cfmmimo import (CFmMIMOConfig, ChannelRealization,
+                                        _greedy_pilot_assignment,
+                                        draw_positions, large_scale_fading,
+                                        make_channel)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelBatch:
+    """eq. (5) coefficient bundle with leading batch axes.
+
+    Array fields are pytree children; the scalar network constants
+    (identical across the batch by construction — one sweep scenario,
+    one Table-I parameterization) ride as static aux data so jitted
+    solvers specialize on them.
+    """
+    A_bar: jnp.ndarray        # [..., K]
+    B_bar: jnp.ndarray        # [..., K]
+    B_tilde: jnp.ndarray      # [..., K, K], zero diagonal
+    I_M: jnp.ndarray          # [..., K]
+    pre_log: float            # B_tau = B (1 - tau_p / tau_c)
+    p_max_w: float            # p^u
+
+    @property
+    def K(self) -> int:
+        return self.A_bar.shape[-1]
+
+    @property
+    def batch_shape(self):
+        return self.A_bar.shape[:-1]
+
+    def sinr(self, p: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+             ) -> jnp.ndarray:
+        """eq. (5): SINR per user for power vectors p [..., K].
+
+        ``mask`` (0/1 per user) implements the engine's sub-channel
+        semantics device-side: inactive users neither transmit
+        (their p is forced to 0 — no interference contributed) nor
+        report a SINR (masked rows return 0).
+        """
+        if mask is not None:
+            p = p * mask
+        num = self.A_bar * p
+        # B_tilde has a zero diagonal, so the matvec IS the j' != j sum
+        cross = jnp.einsum("...jk,...k->...j", self.B_tilde, p)
+        den = self.B_bar * p + cross + self.I_M
+        out = num / den
+        if mask is not None:
+            out = out * mask
+        return out
+
+    def rates(self, p: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+              ) -> jnp.ndarray:
+        """eq. (4): achievable uplink rate (bit/s) per user."""
+        return self.pre_log * jnp.log2(1.0 + self.sinr(p, mask))
+
+
+def _register():
+    def flatten(cb):
+        return ((cb.A_bar, cb.B_bar, cb.B_tilde, cb.I_M),
+                (cb.pre_log, cb.p_max_w))
+
+    def unflatten(aux, children):
+        return ChannelBatch(*children, pre_log=aux[0], p_max_w=aux[1])
+
+    jax.tree_util.register_pytree_node(ChannelBatch, flatten, unflatten)
+
+
+_register()
+
+
+def bundle_from_realizations(chans: Sequence[ChannelRealization]
+                             ) -> ChannelBatch:
+    """Stack numpy realizations into one [B, ...] device bundle."""
+    if not chans:
+        raise ValueError("need at least one realization")
+    cfg = chans[0].cfg
+    for c in chans[1:]:
+        if (c.cfg.pre_log != cfg.pre_log
+                or c.cfg.p_max_w != cfg.p_max_w or c.cfg.K != cfg.K):
+            raise ValueError("realizations in a batch must share the "
+                             "network constants (pre_log, p_max, K)")
+    stack = {f: jnp.asarray(np.stack([getattr(c, f) for c in chans]))
+             for f in ("A_bar", "B_bar", "B_tilde", "I_M")}
+    return ChannelBatch(pre_log=cfg.pre_log, p_max_w=cfg.p_max_w, **stack)
+
+
+def compute_bundle(cfg: CFmMIMOConfig, beta: jnp.ndarray,
+                   pilot: jnp.ndarray) -> ChannelBatch:
+    """eq. (5) coefficient bundle in jnp from (beta [..., M, K],
+    pilot [..., K]); mirrors ``make_channel``'s numpy math exactly
+    (including the squared coherent-gain numerator — DESIGN.md
+    section 3) and vmaps over any leading batch axes."""
+    copilot = (pilot[..., :, None] == pilot[..., None, :]).astype(
+        beta.dtype)                                       # [..., K, K]
+    sigma2 = cfg.noise_w
+    p_p = cfg.tau_p * cfg.p_max_w
+
+    denom = p_p * jnp.einsum("...mj,...jk->...mk", beta, copilot) + sigma2
+    gamma = p_p * beta ** 2 / denom                       # [..., M, K]
+
+    N = float(cfg.N)
+    A_bar = (N * gamma.sum(axis=-2)) ** 2                 # [..., K]
+    B_bar = N * (gamma * beta).sum(axis=-2)
+    I_M = N * sigma2 * gamma.sum(axis=-2) / cfg.p_max_w
+
+    first = N * jnp.einsum("...mj,...mk->...jk", gamma, beta)
+    ratio = N * jnp.einsum("...mj,...mj,...mk->...jk",
+                           gamma, 1.0 / beta, beta)
+    B_tilde = first + copilot * ratio ** 2
+    K = beta.shape[-1]
+    eye = jnp.eye(K, dtype=beta.dtype)
+    B_tilde = B_tilde * (1.0 - eye)                       # j' != j sum only
+    return ChannelBatch(A_bar=A_bar, B_bar=B_bar, B_tilde=B_tilde,
+                        I_M=I_M, pre_log=cfg.pre_log, p_max_w=cfg.p_max_w)
+
+
+def make_channel_batch(cfg: CFmMIMOConfig, seeds: Sequence[int]
+                       ) -> ChannelBatch:
+    """Draw B large-scale realizations as ONE batched bundle.
+
+    Per seed this reproduces ``make_channel``'s geometry and pilot
+    assignment exactly (same host RNG stream, same greedy loop); the
+    coefficient math then runs as a single jitted vmap on device.
+    """
+    betas, pilots = [], []
+    for seed in seeds:
+        ap, users = draw_positions(cfg, int(seed))
+        beta = large_scale_fading(cfg, ap, users)
+        betas.append(beta)
+        pilots.append(_greedy_pilot_assignment(beta, cfg.tau_p))
+    beta_b = jnp.asarray(np.stack(betas))                 # [B, M, K]
+    pilot_b = jnp.asarray(np.stack(pilots))               # [B, K]
+    return jax.jit(lambda b, p: compute_bundle(cfg, b, p))(beta_b, pilot_b)
+
+
+def uplink_latency_batch(bits: jnp.ndarray, rates: jnp.ndarray,
+                         mask: Optional[jnp.ndarray] = None
+                         ) -> jnp.ndarray:
+    """eq. (12) batched; masked (absent) users contribute 0 latency so
+    they never become the straggler."""
+    lat = bits / jnp.maximum(rates, 1e-9)
+    return lat if mask is None else lat * mask
+
+
+__all__ = ["ChannelBatch", "bundle_from_realizations", "compute_bundle",
+           "make_channel", "make_channel_batch", "uplink_latency_batch"]

@@ -1,0 +1,393 @@
+"""Batched, jit-compiled power-control solvers (paper section III-IV).
+
+JAX ports of the three ``core/power`` controllers, vmapped over a
+leading batch of (realization x sweep-cell x round) problems so a whole
+grid's power control runs as ONE device call per round instead of one
+host scipy/numpy solve per cell:
+
+* :func:`bisection_solve` — Algorithm 1 (min-max latency).  scipy's LP
+  feasibility program is replaced by a direct linear solve: for fixed
+  theta the constraint set ``p >= M p + c`` (M >= 0, c > 0) is feasible
+  iff the least fixed point ``p* = (I - M)^{-1} c`` exists with
+  ``0 <= p* <= 1`` (a nonnegative solution certifies the spectral
+  radius of M is < 1, Perron-Frobenius), and p* is exactly the LP's
+  min-sum-power optimum — so the batched path reproduces the reference
+  bisection trajectory decision for decision.
+* :func:`dinkelbach_solve` — energy-efficiency maximizer; the outer
+  Dinkelbach update and the early-exit ``|f| < tol`` break are
+  replayed with a per-cell done mask inside fixed-iteration loops.
+* :func:`maxsum_solve` — projected gradient ascent with restarts.
+
+Gradient modes: ``grad_mode="fd"`` replays the numpy references'
+forward-difference gradients step for step (exact-trajectory parity in
+x64 — tests/test_phy_parity.py); ``"auto"`` uses jax.grad, which is the
+float32 default because a 1e-6 forward difference is below f32 ulp of
+the objective and would be pure noise.  ``None`` picks by the active
+x64 flag.  See DESIGN.md section 7 for the tolerance contract.
+
+Absent-user masking (``mask`` of 0/1 per user) implements the
+engine's sub-channel semantics (sim/engine.py churn path): masked
+users get no power, contribute no interference, are excluded from the
+eta bound / objectives, and never become the straggler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .channel import ChannelBatch, uplink_latency_batch
+
+
+def _x64_enabled() -> bool:
+    return bool(jax.config.jax_enable_x64)
+
+
+def _resolve_grad_mode(grad_mode: Optional[str]) -> str:
+    if grad_mode is None:
+        return "fd" if _x64_enabled() else "auto"
+    if grad_mode not in ("fd", "auto"):
+        raise ValueError(f"unknown grad_mode {grad_mode!r}")
+    return grad_mode
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedPowerSolution:
+    """Batched counterpart of ``core.power.base.PowerSolution``."""
+    p: jnp.ndarray              # [B, K] power coefficients in [0, 1]
+    rates: jnp.ndarray          # [B, K] achieved rates (bit/s); 0 if masked
+    latencies: jnp.ndarray      # [B, K] uplink latency (s); 0 if masked
+    info: Dict[str, jnp.ndarray]  # per-cell solver diagnostics [B]
+
+    @property
+    def straggler_latency(self) -> jnp.ndarray:
+        return jnp.max(self.latencies, axis=-1)       # [B]
+
+
+def _ones_mask(cb: ChannelBatch, bits: jnp.ndarray) -> jnp.ndarray:
+    shape = jnp.broadcast_shapes(cb.A_bar.shape, bits.shape)
+    return jnp.ones(shape, dtype=cb.A_bar.dtype)
+
+
+def _finish(cb: ChannelBatch, bits: jnp.ndarray, mask: jnp.ndarray,
+            p: jnp.ndarray, info: Dict[str, jnp.ndarray]
+            ) -> BatchedPowerSolution:
+    p = jnp.clip(p, 0.0, 1.0) * mask
+    rates = cb.rates(p, mask)
+    lat = uplink_latency_batch(bits, rates, mask)
+    return BatchedPowerSolution(p=p, rates=rates * mask, latencies=lat,
+                                info=info)
+
+
+def _normalize(cb: ChannelBatch) -> ChannelBatch:
+    """Scale each user's coefficient row by 1 / I_M_j.
+
+    SINR_j is invariant under a common scaling of
+    (A_bar_j, B_bar_j, B_tilde[j, :], I_M_j), and the raw Table-I
+    coefficients sit at ~1e-19: fine in f64, but the f32 autodiff
+    backward pass squares the SINR denominator (~1e-20 -> underflows to
+    0 -> NaN).  Normalized rows are O(1)-O(100) and f32-safe; the
+    numpy LP reference applies the same row normalization for the same
+    reason (bisection_lp.py).
+    """
+    s = 1.0 / cb.I_M
+    return ChannelBatch(A_bar=cb.A_bar * s, B_bar=cb.B_bar * s,
+                        B_tilde=cb.B_tilde * s[..., :, None],
+                        I_M=jnp.ones_like(cb.I_M),
+                        pre_log=cb.pre_log, p_max_w=cb.p_max_w)
+
+
+def _sum_rate_obj(cb: ChannelBatch, mask: jnp.ndarray
+                  ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """sum_j log2(1 + SINR_j) over active users; p [..., K] -> [...]."""
+    def obj(p):
+        return jnp.sum(mask * jnp.log2(1.0 + cb.sinr(p, mask)), axis=-1)
+    return obj
+
+
+def _fd_grad(obj: Callable, p: jnp.ndarray, mask: jnp.ndarray,
+             h: float = 1e-6) -> jnp.ndarray:
+    """The numpy references' forward difference, replayed exactly:
+    q_j = min(1, p_j + h), g_j = (obj(q) - obj(p)) / max(q_j - p_j,
+    1e-12), one shared base evaluation per call.
+
+    The base point rides through the SAME vmapped evaluation as the
+    perturbations (extra row 0): when a coordinate is clipped
+    (q_j == p_j bitwise) the difference must be exactly 0, as it is in
+    the scalar numpy path — evaluating the base through a separately
+    compiled graph can differ by an ulp, and the 1e-12 denominator
+    floor would amplify that into a phantom 1e-3 gradient.
+    """
+    K = p.shape[-1]
+    eye = jnp.eye(K, dtype=bool)
+    q = jnp.where(eye, jnp.minimum(1.0, p[..., None, :] + h),
+                  p[..., None, :])                   # [..., Kpert, K]
+    q_aug = jnp.concatenate([p[..., None, :], q], axis=-2)
+    vals_aug = jax.vmap(obj, in_axes=-2, out_axes=-1)(q_aug)
+    base, vals = vals_aug[..., 0], vals_aug[..., 1:]  # [...], [..., Kpert]
+    qdiag = jnp.minimum(1.0, p + h)
+    g = (vals - base[..., None]) / jnp.maximum(qdiag - p, 1e-12)
+    # a clipped coordinate (q_j == p_j, i.e. p_j == 1) has difference
+    # EXACTLY 0 in the scalar reference; batched gemm rounding is
+    # positional, so enforce the zero structurally instead of trusting
+    # val == base bitwise across rows
+    g = jnp.where(qdiag > p, g, 0.0)
+    return g * mask
+
+
+def _auto_grad(obj: Callable, p: jnp.ndarray, mask: jnp.ndarray
+               ) -> jnp.ndarray:
+    return jax.grad(lambda q: jnp.sum(obj(q)))(p) * mask
+
+
+def _grad_fn(grad_mode: str) -> Callable:
+    return _fd_grad if grad_mode == "fd" else _auto_grad
+
+
+# ------------------------------------------------------------ eta bound
+def eta_upper_bound_batch(cb: ChannelBatch, bits: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None
+                          ) -> jnp.ndarray:
+    """Batched ``core.power.eta_upper_bound``: per-cell upper bound on
+    the min rate-per-bit (full power, zero interference)."""
+    if mask is None:
+        mask = _ones_mask(cb, bits)
+    sinr_max = cb.A_bar / (cb.B_bar + cb.I_M)
+    rates = cb.pre_log * jnp.log2(1.0 + sinr_max)
+    per_user = jnp.where(mask > 0, rates / bits, jnp.inf)
+    return jnp.min(per_user, axis=-1)                # [B]
+
+
+# --------------------------------------------------------- bisection-LP
+@partial(jax.jit, static_argnames=("max_iters",))
+def _bisection_core(cb: ChannelBatch, bits, mask, eps_rel, max_iters):
+    B_tau = cb.pre_log
+    K = cb.K
+    hi0 = eta_upper_bound_batch(cb, bits, mask)      # [B]
+    eps = eps_rel * hi0
+    lo0 = jnp.zeros_like(hi0)
+    eye = jnp.eye(K, dtype=cb.A_bar.dtype)
+
+    def feasible_point(theta):
+        """Least fixed point of p = M p + c on the active sub-channel;
+        (p*, feasible) — feasible iff p* is finite and inside the box
+        (and every active user's SINR target is attainable at all:
+        A_bar_j - theta_j B_bar_j > 0)."""
+        denom = cb.A_bar - theta * cb.B_bar          # [B, K]
+        bad = jnp.any((mask > 0) & (denom <= 0), axis=-1)
+        safe = jnp.where(denom > 0, denom, 1.0)
+        row = theta / safe * mask                    # [B, K]
+        M = row[..., :, None] * cb.B_tilde * mask[..., None, :]
+        c = row * cb.I_M                             # [B, K]
+        p_star = jnp.linalg.solve(eye - M, c[..., None])[..., 0]
+        finite = jnp.all(jnp.isfinite(p_star), axis=-1)
+        inbox = jnp.all((p_star >= 0.0) & (p_star <= 1.0), axis=-1)
+        return p_star, finite & inbox & ~bad
+
+    def cond(state):
+        lo, hi, best_p, best_eta, iters = state
+        return jnp.any((hi - lo > eps) & (iters < max_iters))
+
+    def body(state):
+        lo, hi, best_p, best_eta, iters = state
+        run = (hi - lo > eps) & (iters < max_iters)  # [B]
+        iters = iters + run.astype(iters.dtype)
+        mid = 0.5 * (lo + hi)
+        expo = mid[..., None] * bits / B_tau         # [B, K]
+        expo_max = jnp.max(jnp.where(mask > 0, expo, -jnp.inf), axis=-1)
+        skip = expo_max > 500.0                      # 2^500: infeasible
+        theta = jnp.exp2(jnp.minimum(expo, 500.0)) - 1.0
+        p_star, ok = feasible_point(theta)
+        feas = run & ok & ~skip
+        infeas = run & ~(ok & ~skip)
+        lo = jnp.where(feas, mid, lo)
+        best_eta = jnp.where(feas, mid, best_eta)
+        best_p = jnp.where(feas[..., None], p_star, best_p)
+        hi = jnp.where(infeas, mid, hi)
+        return lo, hi, best_p, best_eta, iters
+
+    state0 = (lo0, hi0, jnp.broadcast_to(mask, bits.shape),
+              jnp.zeros_like(hi0), jnp.zeros_like(hi0, dtype=jnp.int32))
+    lo, hi, best_p, best_eta, iters = jax.lax.while_loop(cond, body,
+                                                         state0)
+    return best_p, {"eta": best_eta,
+                    "bisection_iters": iters.astype(bits.dtype)}
+
+
+def bisection_solve(cb: ChannelBatch, bits: jnp.ndarray,
+                    mask: Optional[jnp.ndarray] = None,
+                    eps_rel: float = 1e-4, max_iters: int = 60
+                    ) -> BatchedPowerSolution:
+    """Batched Algorithm 1: bisection over eta with a projected
+    linear-solve feasibility oracle (replaces the reference's scipy
+    LP; same decisions, same returned min-sum-power vector)."""
+    bits = jnp.asarray(bits)
+    mask = _ones_mask(cb, bits) if mask is None else jnp.asarray(mask)
+    bits = jnp.broadcast_to(bits, mask.shape)
+    p, info = _bisection_core(cb, bits, mask, jnp.asarray(eps_rel),
+                              int(max_iters))
+    return _finish(cb, bits, mask, p, info)
+
+
+# ----------------------------------------------------------- dinkelbach
+@partial(jax.jit, static_argnames=("outer", "inner", "grad_mode"))
+def _dinkelbach_core(cb: ChannelBatch, bits, mask, p_circuit_w, lr, tol,
+                     outer, inner, grad_mode):
+    grad = _grad_fn(grad_mode)
+    numer = _sum_rate_obj(_normalize(cb), mask)
+
+    def denom(p):
+        return p_circuit_w + cb.p_max_w * jnp.sum(p * mask, axis=-1)
+
+    p0 = mask * 1.0
+    lam0 = numer(p0) / denom(p0)
+
+    def outer_step(carry, _):
+        p, lam, p_best, lam_best, done, used = carry
+
+        # inner: max_p numer(p) - lam * denom(p) by projected ascent
+        # (lam is [B]; the FD perturbation axis is vmapped out, so q
+        # arrives here with the same rank as p and lam broadcasts)
+        def obj(q):
+            return numer(q) - lam * denom(q)
+
+        def ascent(_, pp):
+            g = grad(obj, pp, mask)
+            return jnp.clip(pp + lr * g, 0.0, 1.0)
+
+        p_new = jax.lax.fori_loop(0, inner, ascent, p)
+        p = jnp.where(done[..., None], p, p_new)
+        f = numer(p) - lam * denom(p)
+        lam_new = numer(p) / denom(p)
+        used = used + jnp.where(done, 0.0, 1.0)
+        lam = jnp.where(done, lam, lam_new)
+        # safeguard: track the best-EE iterate.  The projected-ascent
+        # inner solve is inexact, so the raw lambda sequence need not be
+        # monotone (it is frozen in fd parity mode, where the reference
+        # never escapes the all-ones clip); reporting the running best
+        # keeps Dinkelbach's monotone-EE contract without touching the
+        # reference trajectory.
+        improved = ~done & (lam_new > lam_best)
+        p_best = jnp.where(improved[..., None], p, p_best)
+        lam_best = jnp.where(improved, lam_new, lam_best)
+        done = done | (~done & (jnp.abs(f) < tol))
+        return (p, lam, p_best, lam_best, done, used), lam_best
+
+    carry0 = (p0, lam0, p0, lam0, jnp.zeros(lam0.shape, dtype=bool),
+              jnp.zeros_like(lam0))
+    (_, _, p_best, lam_best, _, used), trace = jax.lax.scan(
+        outer_step, carry0, None, length=outer)
+    info = {"energy_efficiency": lam_best, "dinkelbach_iters": used,
+            "ee_trace": jnp.moveaxis(trace, 0, -1)}  # [B, outer]
+    return p_best, info
+
+
+def dinkelbach_solve(cb: ChannelBatch, bits: jnp.ndarray,
+                     mask: Optional[jnp.ndarray] = None,
+                     p_circuit_w: float = 0.2, outer: int = 12,
+                     inner: int = 60, lr: float = 0.1, tol: float = 1e-6,
+                     grad_mode: Optional[str] = None
+                     ) -> BatchedPowerSolution:
+    """Batched Dinkelbach energy-efficiency maximizer; replays the
+    reference's outer update and early-exit break with a per-cell done
+    mask.  ``info["ee_trace"]`` holds the per-outer-iteration lambda
+    (frozen after convergence) for the monotonicity property test."""
+    bits = jnp.asarray(bits)
+    mask = _ones_mask(cb, bits) if mask is None else jnp.asarray(mask)
+    bits = jnp.broadcast_to(bits, mask.shape)
+    p, info = _dinkelbach_core(cb, bits, mask, jnp.asarray(p_circuit_w),
+                               jnp.asarray(lr), jnp.asarray(tol),
+                               int(outer), int(inner),
+                               _resolve_grad_mode(grad_mode))
+    return _finish(cb, bits, mask, p, info)
+
+
+# -------------------------------------------------------- max-sum-rate
+def maxsum_starts(mask_np: np.ndarray, restarts: int) -> np.ndarray:
+    """Reference start points per cell: full power + ``restarts`` draws
+    of default_rng(0).uniform(0.3, 1, K_active) scattered onto the
+    active coordinates — matching MaxSumRatePowerControl.solve on the
+    corresponding sub-channel."""
+    mask_np = np.asarray(mask_np, np.float64)
+    B, K = mask_np.shape
+    out = np.zeros((B, restarts + 1, K))
+    for i in range(B):
+        idx = np.flatnonzero(mask_np[i])
+        rng = np.random.default_rng(0)
+        out[i, 0, idx] = 1.0
+        for r in range(restarts):
+            out[i, 1 + r, idx] = rng.uniform(0.3, 1.0, len(idx))
+    return out
+
+
+def _expand(cb: ChannelBatch, mask: jnp.ndarray):
+    """Insert a restart axis after the batch axis."""
+    e = ChannelBatch(A_bar=cb.A_bar[..., None, :],
+                     B_bar=cb.B_bar[..., None, :],
+                     B_tilde=cb.B_tilde[..., None, :, :],
+                     I_M=cb.I_M[..., None, :],
+                     pre_log=cb.pre_log, p_max_w=cb.p_max_w)
+    return e, mask[..., None, :]
+
+
+@partial(jax.jit, static_argnames=("iters", "grad_mode"))
+def _maxsum_core(cb: ChannelBatch, mask, starts, lr, iters, grad_mode):
+    grad = _grad_fn(grad_mode)
+    cb_e, mask_e = _expand(_normalize(cb), mask)
+    obj = _sum_rate_obj(cb_e, mask_e)
+
+    def ascent(_, p):
+        return jnp.clip(p + lr * grad(obj, p, mask_e), 0.0, 1.0)
+
+    p_fin = jax.lax.fori_loop(0, iters, ascent, starts)  # [B, R, K]
+    v = obj(p_fin)                                       # [B, R]
+    best = jnp.argmax(v, axis=-1)                        # first max wins
+    p_best = jnp.take_along_axis(p_fin, best[..., None, None],
+                                 axis=-2)[..., 0, :]
+    return p_best, {"sum_rate": jnp.max(v, axis=-1)}
+
+
+def maxsum_solve(cb: ChannelBatch, bits: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None, iters: int = 80,
+                 lr: float = 0.1, restarts: int = 2,
+                 starts: Optional[np.ndarray] = None,
+                 grad_mode: Optional[str] = None) -> BatchedPowerSolution:
+    """Batched max-sum-rate projected gradient ascent with restarts."""
+    bits = jnp.asarray(bits)
+    mask = _ones_mask(cb, bits) if mask is None else jnp.asarray(mask)
+    bits = jnp.broadcast_to(bits, mask.shape)
+    if starts is None:
+        starts = maxsum_starts(np.asarray(mask), restarts)
+    p, info = _maxsum_core(cb, mask, jnp.asarray(starts),
+                           jnp.asarray(lr), int(iters),
+                           _resolve_grad_mode(grad_mode))
+    return _finish(cb, bits, mask, p, info)
+
+
+# ------------------------------------------------------------- registry
+def batched_solver(controller) -> Callable:
+    """Map a numpy PowerController instance to its batched counterpart,
+    honoring the instance's hyper-parameters.  Returns
+    ``solve(cb, bits, mask=None) -> BatchedPowerSolution``."""
+    name = controller.name
+    if name == "bisection-lp":
+        return partial(bisection_solve, eps_rel=controller.eps_rel,
+                       max_iters=controller.max_iters)
+    if name == "dinkelbach":
+        return partial(dinkelbach_solve,
+                       p_circuit_w=controller.p_circuit_w,
+                       outer=controller.outer, inner=controller.inner,
+                       lr=controller.lr, tol=controller.tol)
+    if name == "max-sum-rate":
+        return partial(maxsum_solve, iters=controller.iters,
+                       lr=controller.lr, restarts=controller.restarts)
+    raise KeyError(f"no batched solver for power controller {name!r}")
+
+
+__all__ = ["BatchedPowerSolution", "batched_solver", "bisection_solve",
+           "dinkelbach_solve", "eta_upper_bound_batch", "maxsum_solve",
+           "maxsum_starts"]

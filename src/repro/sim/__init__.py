@@ -7,10 +7,13 @@ simulation engine.
 * :mod:`scenarios` — named workload registry (paper defaults, user
   churn, Monte-Carlo channel redraws, heterogeneous data, K/M grids);
 * :mod:`sweep` — scenario x quantizer x power-controller grid runner;
+* :mod:`phy_driver` — the batched-phy grid driver: lockstep rounds,
+  ONE jitted power solve per power spec per round (repro.phy);
 * :mod:`metrics` — round-log aggregation the benchmark tables consume.
 """
-from .engine import EngineConfig, VectorizedFLEngine
+from .engine import EngineConfig, RoundWork, RunState, VectorizedFLEngine
 from .metrics import summarize_logs, write_metrics_csv
+from .phy_driver import run_grid_batched
 from .scenarios import (SCENARIOS, Scenario, build_problem, get_scenario,
                         grid_scenarios, list_scenarios, register_scenario)
 from .sweep import SweepCell, SweepResult, run_cell, run_grid

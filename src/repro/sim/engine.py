@@ -106,13 +106,48 @@ def _subchannel(chan: ChannelRealization, idx: np.ndarray
                 ) -> ChannelRealization:
     """Restrict a realization to the active-user subset: inactive users
     neither transmit (no power allocated, no interference) nor count
-    toward the straggler latency."""
+    toward the straggler latency.
+
+    The batched phy path (repro.phy solvers with a 0/1 ``mask``)
+    implements these same semantics device-side; equivalence is pinned
+    by tests/test_phy_parity.py and tests/test_phy_driver.py.
+    """
     cfg = dataclasses.replace(chan.cfg, K=len(idx))
     return dataclasses.replace(
         chan, cfg=cfg, beta=chan.beta[:, idx], pilot=chan.pilot[idx],
         gamma=chan.gamma[:, idx], A_bar=chan.A_bar[idx],
         B_bar=chan.B_bar[idx], B_tilde=chan.B_tilde[np.ix_(idx, idx)],
         I_M=chan.I_M[idx])
+
+
+@dataclasses.dataclass
+class RoundWork:
+    """What one training round hands to the power-control stage."""
+    t: int
+    bits_np: np.ndarray            # [K] payload bits; 0 for absent users
+    active: np.ndarray             # [K] 0/1 participation mask
+    mean_s: float                  # mean high-res fraction (active users)
+
+
+@dataclasses.dataclass
+class RunState:
+    """Mutable per-run state for the round-stepping API.
+
+    ``run()`` drives it with the host power solve; the batched grid
+    driver (repro.sim.phy_driver) steps many engines' states in
+    lockstep and supplies uplink latencies from ONE batched phy solve
+    per round.
+    """
+    params: object
+    qstate: object
+    chan: Optional[ChannelRealization]
+    rng: np.random.Generator
+    part_rng: np.random.Generator
+    test_x: object
+    test_y: object
+    logs: List
+    cum_latency: float = 0.0
+    rounds_done: int = 0
 
 
 
@@ -306,76 +341,106 @@ class VectorizedFLEngine:
         w = self.rho * active
         return w / w.sum()
 
-    def run(self, verbose: bool = False):
-        from repro.fl.cnn import cnn_accuracy
-        from repro.fl.loop import FLResult, RoundLog
+    # ----------------------------------------------- round-stepping API
+    # run() composes these four stages; repro.sim.phy_driver drives the
+    # same stages for a whole grid of cells, replacing the per-cell
+    # host solve of stage 3 with one batched device solve per round.
+    def start_run(self) -> RunState:
+        fl = self.fl
+        return RunState(
+            params=self.params, qstate=self.qstate, chan=self.chan,
+            rng=np.random.default_rng(fl.seed),   # sequential-loop stream
+            part_rng=np.random.default_rng((fl.seed, 0x5EED)),
+            test_x=jnp.asarray(self.test.x),
+            test_y=jnp.asarray(self.test.y), logs=[])
 
+    def train_round(self, state: RunState, t: int) -> RoundWork:
+        """Stage 1-2: channel redraw, minibatch draw, the jitted local
+        training + quantization + aggregation step.  Updates ``state``
+        in place and returns the payload the power stage needs."""
         fl, ecfg = self.fl, self.engine_cfg
-        rng = np.random.default_rng(fl.seed)    # sequential-loop stream
-        part_rng = np.random.default_rng((fl.seed, 0x5EED))  # independent
-        chan = self.chan
-        params, qstate = self.params, self.qstate
-        test_x, test_y = jnp.asarray(self.test.x), jnp.asarray(self.test.y)
+        if (ecfg.redraw_channel_every > 0 and state.chan is not None
+                and t > 1
+                and (t - 1) % ecfg.redraw_channel_every == 0):
+            state.chan = make_channel(state.chan.cfg,
+                                      seed=ecfg.channel_seed + t)
+        # same nested draw order as the sequential loop
+        sel = np.stack([
+            np.stack([state.rng.choice(shard, self.take, replace=False)
+                      for _ in range(fl.L)])
+            for shard in self.shards])               # [K, L, b]
+        xs = jnp.asarray(self.dataset.x[sel])
+        ys = jnp.asarray(self.dataset.y[sel])
+        active = self._draw_active(state.part_rng)
+        weights = self._round_weights(active)
+        if not ecfg.effective_fused:
+            state.params, state.qstate, bits, aux = self._dense_round(
+                state.params, state.qstate, xs, ys, weights, active)
+        else:
+            state.params, state.qstate, bits, aux = self._fused_step(
+                state.params, state.qstate, xs, ys,
+                jnp.asarray(weights, jnp.float32),
+                jnp.asarray(active, jnp.float32))
+        bits_np = np.asarray(bits, np.float64) * active
+        s_np = np.asarray(aux["s"], np.float64) if "s" in aux \
+            else np.ones(self.K)
+        mean_s = float(np.mean(s_np[active.astype(bool)]))
+        return RoundWork(t=t, bits_np=bits_np, active=active,
+                         mean_s=mean_s)
 
-        logs: List[RoundLog] = []
-        cum_latency, rounds_done = 0.0, 0
-        for t in range(1, fl.T + 1):
-            if (ecfg.redraw_channel_every > 0 and chan is not None
-                    and t > 1
-                    and (t - 1) % ecfg.redraw_channel_every == 0):
-                chan = make_channel(chan.cfg, seed=ecfg.channel_seed + t)
-            # same nested draw order as the sequential loop
-            sel = np.stack([
-                np.stack([rng.choice(shard, self.take, replace=False)
-                          for _ in range(fl.L)])
-                for shard in self.shards])               # [K, L, b]
-            xs = jnp.asarray(self.dataset.x[sel])
-            ys = jnp.asarray(self.dataset.y[sel])
-            active = self._draw_active(part_rng)
-            weights = self._round_weights(active)
-            if not ecfg.effective_fused:
-                params, qstate, bits, aux = self._dense_round(
-                    params, qstate, xs, ys, weights, active)
-            else:
-                params, qstate, bits, aux = self._fused_step(
-                    params, qstate, xs, ys,
-                    jnp.asarray(weights, jnp.float32),
-                    jnp.asarray(active, jnp.float32))
-            bits_np = np.asarray(bits, np.float64) * active
-            s_np = np.asarray(aux["s"], np.float64) if "s" in aux \
-                else np.ones(self.K)
-            mean_s = float(np.mean(s_np[active.astype(bool)]))
+    def solve_uplink_host(self, chan: Optional[ChannelRealization],
+                          bits_np: np.ndarray, active: np.ndarray
+                          ) -> float:
+        """Stage 3 (host reference path): per-cell numpy power solve."""
+        if self.power is None or chan is None:
+            return 0.0
+        act_idx = np.flatnonzero(active)
+        if len(act_idx) == self.K:
+            sol = self.power.solve(chan, np.maximum(bits_np, 1.0))
+        else:
+            # churn: only active users transmit — solve the
+            # power-control problem on the sub-channel so
+            # absent users neither get power nor interfere
+            sol = self.power.solve(
+                _subchannel(chan, act_idx),
+                np.maximum(bits_np[act_idx], 1.0))
+        return sol.straggler_latency
 
-            if self.power is not None and chan is not None:
-                act_idx = np.flatnonzero(active)
-                if len(act_idx) == self.K:
-                    sol = self.power.solve(chan,
-                                           np.maximum(bits_np, 1.0))
-                else:
-                    # churn: only active users transmit — solve the
-                    # power-control problem on the sub-channel so
-                    # absent users neither get power nor interfere
-                    sol = self.power.solve(
-                        _subchannel(chan, act_idx),
-                        np.maximum(bits_np[act_idx], 1.0))
-                uplink = sol.straggler_latency
-            else:
-                uplink = 0.0
-            cum_latency += uplink + self.comp_lat
+    def finish_round(self, state: RunState, work: RoundWork,
+                     uplink: float, verbose: bool = False) -> bool:
+        """Stage 4: latency accounting, eval, logging.  Returns False
+        once the latency budget is exhausted (stop stepping)."""
+        from repro.fl.cnn import cnn_accuracy
+        from repro.fl.loop import RoundLog
 
-            acc = None
-            if t % fl.eval_every == 0 or t == fl.T:
-                acc = cnn_accuracy(params, test_x, test_y)
-            logs.append(RoundLog(t, bits_np, uplink, self.comp_lat,
-                                 cum_latency, mean_s, acc))
-            rounds_done = t
-            if verbose and acc is not None:
-                print(f"[round {t:4d}] acc={acc:.4f} "
-                      f"bits/user={bits_np.mean():.3e} "
-                      f"cum_lat={cum_latency:.2f}s")
-            if (fl.latency_budget_s is not None
-                    and cum_latency >= fl.latency_budget_s):
+        fl, t = self.fl, work.t
+        state.cum_latency += uplink + self.comp_lat
+        acc = None
+        if t % fl.eval_every == 0 or t == fl.T:
+            acc = cnn_accuracy(state.params, state.test_x, state.test_y)
+        state.logs.append(RoundLog(t, work.bits_np, uplink,
+                                   self.comp_lat, state.cum_latency,
+                                   work.mean_s, acc))
+        state.rounds_done = t
+        if verbose and acc is not None:
+            print(f"[round {t:4d}] acc={acc:.4f} "
+                  f"bits/user={work.bits_np.mean():.3e} "
+                  f"cum_lat={state.cum_latency:.2f}s")
+        return not (fl.latency_budget_s is not None
+                    and state.cum_latency >= fl.latency_budget_s)
+
+    def result(self, state: RunState):
+        from repro.fl.loop import FLResult
+        return FLResult(params=state.params, logs=state.logs,
+                        rounds_completed=state.rounds_done)
+
+    def run(self, verbose: bool = False):
+        state = self.start_run()
+        for t in range(1, self.fl.T + 1):
+            work = self.train_round(state, t)
+            uplink = self.solve_uplink_host(state.chan, work.bits_np,
+                                            work.active)
+            if not self.finish_round(state, work, uplink,
+                                     verbose=verbose):
                 break
-
-        return FLResult(params=params, logs=logs,
-                        rounds_completed=rounds_done)
+        return self.result(state)

@@ -36,9 +36,12 @@ def summarize_logs(logs: List) -> Dict[str, float]:
     }
 
 
+# max_p is filled by the batched phy driver (largest power coefficient
+# allocated to any user across the run; <= 1 means transmit power
+# <= p_max) and left blank by the host-solve path.
 METRIC_FIELDS = ["rounds", "best_acc", "final_acc", "mean_bits_per_user",
                  "mean_s", "total_latency_s", "mean_uplink_s",
-                 "p95_uplink_s"]
+                 "p95_uplink_s", "max_p"]
 
 
 def write_metrics_csv(rows: Iterable[Dict], path: str) -> None:

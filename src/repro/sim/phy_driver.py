@@ -1,0 +1,188 @@
+"""Batched-phy sweep driver — one power solve per round for a grid.
+
+``run_grid`` steps every (scenario, quantizer, power) cell's engine to
+completion one cell at a time, paying one host numpy/scipy power solve
+per cell per round: O(cells x rounds) host round-trips.  This driver
+runs all cells of a scenario in LOCKSTEP over rounds and routes power
+control through the batched repro.phy solvers — cells sharing a
+power-controller spec are stacked into one ``ChannelBatch`` and solved
+in a single jitted device call, so the per-round host round-trips drop
+to O(power-specs) = O(1) per round regardless of grid width.
+
+Two further de-duplications the lockstep structure buys:
+
+* power control never feeds back into training, so all cells of a
+  quantizer share ONE training state — the jitted train step runs once
+  per quantizer per round, not once per (quantizer x power) cell.
+  Host ``run_grid`` gets the same trajectories by re-running identical
+  RNG streams per power label; a cell that exhausts its latency budget
+  snapshots the shared params at its stopping round.
+* the stacked channel bundle is cached per power group and re-built
+  only when some cell's realization object changed (Monte-Carlo
+  redraws); with a fixed realization the device bundle uploads once.
+
+Churn is handled by the solvers' mask argument (same sub-channel
+semantics as the engine's host path — no power, no interference, no
+straggler contribution for absent users).  Summaries gain a ``max_p``
+column (the largest power coefficient any user was allocated across
+the run — the CI sanity script asserts max_p <= 1, i.e. transmit
+power <= p_max).
+
+Numerics: the batched path solves in jax's default dtype (f32 unless
+JAX_ENABLE_X64=1) while the host path is numpy f64, so latencies agree
+to the documented parity tolerances (DESIGN.md section 7), not
+bit-for-bit; tests/test_phy_driver.py pins the drift on a churn
+scenario.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.power import PowerController
+from repro.phy import batched_solver, bundle_from_realizations
+
+from .engine import RoundWork, RunState, VectorizedFLEngine
+from .scenarios import Scenario, build_problem
+from .sweep import (PowerSpec, QuantSpec, SweepResult, _make_engine,
+                    _make_power, _resolve_scenario, _to_result)
+
+
+@dataclasses.dataclass
+class _Track:
+    """One quantizer's engine + its shared training state."""
+    engine: VectorizedFLEngine
+    state: RunState
+    cells: List["_Cell"] = dataclasses.field(default_factory=list)
+
+    @property
+    def alive(self) -> bool:
+        return any(c.alive for c in self.cells)
+
+
+@dataclasses.dataclass
+class _Cell:
+    """One (quantizer, power) grid cell: per-cell latency accounting
+    over the track's shared training trajectory."""
+    track: _Track
+    power: Optional[PowerController]
+    qlabel: str
+    plabel: str
+    acct: RunState                 # logs / cum_latency / params snapshot
+    alive: bool = True
+    max_p: float = 0.0
+
+
+_BundleCache = Dict[str, Tuple[List[object], object]]
+
+
+def _solve_round_batched(cells: List[_Cell], works: List[RoundWork],
+                         cache: _BundleCache) -> List[float]:
+    """One batched device solve per distinct power spec; returns the
+    per-cell straggler latency for this round."""
+    uplinks = [0.0] * len(cells)
+    # group cells by power label (one spec per label within a grid)
+    groups: Dict[str, List[int]] = {}
+    for i, cell in enumerate(cells):
+        if cell.power is None or cell.track.state.chan is None:
+            continue
+        groups.setdefault(cell.plabel, []).append(i)
+    for plabel, idx in groups.items():
+        chans = [cells[i].track.state.chan for i in idx]
+        # cache holds the realization objects themselves (not ids —
+        # GC id reuse across Monte-Carlo redraws would alias), so a
+        # fixed realization uploads the device bundle exactly once
+        hit = cache.get(plabel)
+        if (hit is None or len(hit[0]) != len(chans)
+                or any(a is not b for a, b in zip(hit[0], chans))):
+            cache[plabel] = (chans, bundle_from_realizations(chans))
+        cb = cache[plabel][1]
+        K = chans[0].cfg.K
+        bits = np.ones((len(idx), K))
+        mask = np.zeros((len(idx), K))
+        for row, i in enumerate(idx):
+            mask[row] = works[i].active
+            bits[row] = np.where(works[i].active > 0,
+                                 np.maximum(works[i].bits_np, 1.0), 1.0)
+        sol = batched_solver(cells[idx[0]].power)(cb, bits, mask=mask)
+        stragglers = np.asarray(sol.straggler_latency, np.float64)
+        p_max_round = np.asarray(np.max(sol.p, axis=-1), np.float64)
+        for row, i in enumerate(idx):
+            uplinks[i] = float(stragglers[row])
+            cells[i].max_p = max(cells[i].max_p, float(p_max_round[row]))
+    return uplinks
+
+
+def _run_scenario_lockstep(scn: Scenario, tracks: List[_Track],
+                           verbose: bool) -> None:
+    cache: _BundleCache = {}
+    for t in range(1, scn.T + 1):
+        live_tracks = [tr for tr in tracks if tr.alive]
+        if not live_tracks:
+            break
+        # ONE jitted training step per quantizer, shared by its cells
+        track_work = {id(tr): tr.engine.train_round(tr.state, t)
+                      for tr in live_tracks}
+        live = [c for tr in live_tracks for c in tr.cells if c.alive]
+        works = [track_work[id(c.track)] for c in live]
+        uplinks = _solve_round_batched(live, works, cache)
+        for cell, work, uplink in zip(live, works, uplinks):
+            # accounting sees the shared trajectory's current params
+            # (snapshotted here, so a budget-stopped cell keeps the
+            # params of ITS final round even as the track trains on)
+            cell.acct.params = cell.track.state.params
+            cell.alive = cell.track.engine.finish_round(
+                cell.acct, work, uplink, verbose=verbose)
+
+
+def run_grid_batched(scenarios: List[Union[str, Scenario]],
+                     quantizers: Mapping[str, QuantSpec],
+                     powers: Optional[Mapping[str, PowerSpec]] = None,
+                     quick: bool = True, out_csv: Optional[str] = None,
+                     latency_budget_s: Optional[float] = None,
+                     verbose: bool = False, mesh=None
+                     ) -> List[SweepResult]:
+    """``run_grid`` semantics on the batched phy path.
+
+    Same grid, same summaries (plus ``max_p``); within a scenario all
+    cells advance round-by-round together and every round's power
+    problems are solved in one jitted call per power spec.
+    """
+    from .metrics import write_metrics_csv
+
+    powers = powers if powers is not None else {"none": None}
+    results: List[SweepResult] = []
+    for scenario in scenarios:
+        scn = _resolve_scenario(scenario, quick, latency_budget_s)
+        problem = build_problem(scn)
+        chan = problem[4]
+        tracks: List[_Track] = []
+        for qlabel, qspec in quantizers.items():
+            engine = _make_engine(scn, problem, qspec, None, mesh=mesh)
+            track = _Track(engine=engine, state=engine.start_run())
+            for plabel, pspec in powers.items():
+                pc = _make_power(pspec)
+                acct = dataclasses.replace(track.state, logs=[],
+                                           cum_latency=0.0,
+                                           rounds_done=0)
+                track.cells.append(_Cell(
+                    track=track,
+                    power=pc if chan is not None else None,
+                    qlabel=qlabel, plabel=plabel, acct=acct))
+            tracks.append(track)
+        _run_scenario_lockstep(scn, tracks, verbose)
+        for track in tracks:
+            for cell in track.cells:
+                res = _to_result(scn, track.engine,
+                                 track.engine.result(cell.acct),
+                                 (cell.qlabel, cell.plabel))
+                res.summary["max_p"] = cell.max_p
+                results.append(res)
+    if out_csv:
+        write_metrics_csv([r.row() for r in results], out_csv)
+    return results
+
+
+__all__ = ["run_grid_batched"]

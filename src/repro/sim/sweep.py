@@ -125,14 +125,26 @@ def run_grid(scenarios: List[Union[str, Scenario]],
              powers: Optional[Mapping[str, PowerSpec]] = None,
              quick: bool = True, out_csv: Optional[str] = None,
              latency_budget_s: Optional[float] = None,
-             verbose: bool = False, mesh=None) -> List[SweepResult]:
+             verbose: bool = False, mesh=None,
+             phy_batched: bool = False) -> List[SweepResult]:
     """Run the full scenario x quantizer x power grid.
 
     Within a scenario the problem (dataset, partition, channel) is
     built once and each quantizer's compiled engine step is reused
     across the power-controller axis (power control is host-side, so
     swapping it does not retrace the jitted step).
+
+    ``phy_batched=True`` routes power control through the batched
+    repro.phy solvers instead: all cells of a scenario advance in
+    lockstep and each round's power problems are solved in ONE jitted
+    device call per power spec (see repro.sim.phy_driver).
     """
+    if phy_batched:
+        from .phy_driver import run_grid_batched
+        return run_grid_batched(scenarios, quantizers, powers=powers,
+                                quick=quick, out_csv=out_csv,
+                                latency_budget_s=latency_budget_s,
+                                verbose=verbose, mesh=mesh)
     powers = powers if powers is not None else {"none": None}
     results: List[SweepResult] = []
     for scenario in scenarios:

@@ -1,0 +1,89 @@
+"""Property tests for the batched power solvers (PowerSolution
+invariants from the ISSUE checklist):
+
+* allocated power lies in [0, p_max] — coefficients in [0, 1], zero
+  for masked users;
+* the Dinkelbach energy-efficiency objective is non-decreasing across
+  outer iterations (the solver reports the running-best iterate, so
+  the trace is monotone by contract — asserted against the actual
+  trace);
+* the bisection-LP scheme's straggler latency is no worse than
+  max-sum-rate's on the same realization and payloads (max-sum
+  ignores payloads; minimizing the max latency is bisection's
+  objective).
+
+Deterministic versions run everywhere; hypothesis widens the sampled
+(geometry seed, payload spread, churn) space when installed.
+"""
+import jax
+import numpy as np
+
+from repro.core.channel import CFmMIMOConfig, make_channel
+from repro.phy import (bisection_solve, bundle_from_realizations,
+                       dinkelbach_solve, maxsum_solve)
+
+from _hypothesis_compat import given, settings, st
+
+X64 = bool(jax.config.jax_enable_x64)
+# bisection certifies eta within eps_rel of the optimum, so its
+# straggler can exceed an accidentally-optimal competitor's by the
+# same relative margin
+BISECTION_SLACK = 1e-3
+
+
+def _problem(seed: int, k: int = 8, m: int = 4, spread: float = 10.0,
+             participation: float = 1.0):
+    cfg = CFmMIMOConfig(K=k, M=m)
+    chans = [make_channel(cfg, seed=seed + i) for i in range(4)]
+    rng = np.random.default_rng(seed)
+    bits = rng.uniform(1e5, 1e5 * spread, (4, k))
+    mask = (rng.random((4, k)) < participation).astype(np.float64)
+    mask[mask.sum(axis=1) == 0, 0] = 1.0
+    bits = np.where(mask > 0, np.maximum(bits, 1.0), 1.0)
+    return bundle_from_realizations(chans), bits, mask
+
+
+def _check_power_box(sol, mask):
+    p = np.asarray(sol.p, np.float64)
+    assert np.all(p >= 0.0) and np.all(p <= 1.0)       # power <= p_max
+    assert np.all(p[mask == 0] == 0.0)                 # absent: no power
+    assert np.all(np.isfinite(np.asarray(sol.latencies)))
+
+
+def _run_all(seed, spread, participation):
+    cb, bits, mask = _problem(seed, spread=spread,
+                              participation=participation)
+    ours = bisection_solve(cb, bits, mask=mask)
+    dink = dinkelbach_solve(cb, bits, mask=mask)
+    msum = maxsum_solve(cb, bits, mask=mask)
+    for sol in (ours, dink, msum):
+        _check_power_box(sol, mask)
+    # Dinkelbach EE trace monotone (running-best contract)
+    trace = np.asarray(dink.info["ee_trace"], np.float64)
+    assert np.all(np.diff(trace, axis=-1) >= 0.0)
+    assert np.all(trace > 0.0)
+    # straggler: ours <= max-sum on identical realization + payloads
+    ours_lat = np.asarray(ours.straggler_latency, np.float64)
+    msum_lat = np.asarray(msum.straggler_latency, np.float64)
+    assert np.all(ours_lat <= msum_lat * (1.0 + BISECTION_SLACK)), \
+        (ours_lat, msum_lat)
+
+
+def test_invariants_full_participation():
+    _run_all(seed=0, spread=20.0, participation=1.0)
+
+
+def test_invariants_under_churn():
+    _run_all(seed=7, spread=10.0, participation=0.6)
+
+
+def test_invariants_equal_payloads():
+    _run_all(seed=3, spread=1.0, participation=1.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**20),
+       spread=st.floats(min_value=1.0, max_value=50.0),
+       participation=st.floats(min_value=0.3, max_value=1.0))
+def test_invariants_hypothesis(seed, spread, participation):
+    _run_all(seed, spread, participation)

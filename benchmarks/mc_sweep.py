@@ -1,9 +1,12 @@
 """Scheduled Monte-Carlo sweep — the weekly CI job's entry point.
 
-Runs ``run_grid`` quick mode on 2 scenarios x 2 quantizers x 2 power
-schemes through the batched phy path and writes the metrics CSV that
-the workflow uploads as an artifact and feeds to
-``benchmarks.sweep_sanity``:
+Runs the REPLICATED batched driver (R Monte-Carlo replicates per cell
+on the vmapped replicate axis — one jitted train call per quantizer
+and one power solve per power spec per round regardless of R) on
+2 scenarios x 2 quantizers x 2 power schemes and writes the metrics
+CSV — now with across-replicate mean + ``<metric>_ci95`` confidence
+columns — that the workflow uploads as an artifact and feeds to
+``benchmarks.sweep_sanity`` (which also gates on CI-width finiteness):
 
     PYTHONPATH=src python -m benchmarks.mc_sweep runs/mc_sweep.csv
 """
@@ -11,23 +14,25 @@ from __future__ import annotations
 
 import sys
 
-from repro.sim import run_grid
+from repro.sim import run_grid_batched
 
 SCENARIOS = ["monte-carlo-channel", "churn-0.7"]
 QUANTIZERS = {"mixed": ("mixed-resolution", {"lambda_": 0.2, "b": 10}),
               "classic": ("classic", {})}
 POWERS = {"ours": "bisection-lp", "maxsum": "max-sum-rate"}
+REPLICATES = 4
 
 
 def main(out_csv: str = "runs/mc_sweep.csv") -> None:
-    results = run_grid(SCENARIOS, QUANTIZERS, POWERS, quick=True,
-                       out_csv=out_csv, phy_batched=True)
+    results = run_grid_batched(SCENARIOS, QUANTIZERS, POWERS, quick=True,
+                               out_csv=out_csv, replicates=REPLICATES)
     for r in results:
         row = r.row()
         print(f"{row['scenario']},{row['quantizer']},{row['power']}: "
               f"rounds={row['rounds']:.0f} "
-              f"total_latency={row['total_latency_s']:.3f}s "
-              f"max_p={row['max_p']:.4f}")
+              f"total_latency={row['total_latency_s']:.3f}s"
+              f"±{row['total_latency_s_ci95']:.3f} "
+              f"(R={row['replicates']:.0f}) max_p={row['max_p']:.4f}")
     print(f"wrote {len(results)} rows to {out_csv}")
 
 

@@ -6,7 +6,11 @@ Asserts, across every cell of the metrics CSV written by
 * all latency metrics are finite and non-negative, and every cell
   completed at least one round;
 * power stayed physical: ``max_p <= 1`` (power-control coefficients,
-  i.e. transmit power <= p_max) — populated by the batched phy driver.
+  i.e. transmit power <= p_max) — populated by the batched phy driver;
+* the replicated driver ran (``replicates`` column present, >= 2) and
+  every latency confidence half-width (``<metric>_ci95``) is finite
+  and non-negative — a NaN/inf CI means some replicate's trajectory
+  diverged or the replicate axis silently collapsed.
 
     PYTHONPATH=src python -m benchmarks.sweep_sanity runs/mc_sweep.csv
 """
@@ -17,6 +21,7 @@ import math
 import sys
 
 LATENCY_FIELDS = ("total_latency_s", "mean_uplink_s", "p95_uplink_s")
+CI_FIELDS = tuple(f + "_ci95" for f in LATENCY_FIELDS)
 
 
 def check(path: str) -> int:
@@ -42,13 +47,26 @@ def check(path: str) -> int:
         else:
             failures.append(f"{cell}: max_p missing — sweep did not run "
                             "on the batched phy path")
+        if row.get("replicates", ""):
+            if float(row["replicates"]) < 2:
+                failures.append(f"{cell}: replicates="
+                                f"{row['replicates']} — no CI width "
+                                "without >= 2 replicates")
+            for field in CI_FIELDS:
+                v = float(row.get(field, "nan"))
+                if not math.isfinite(v) or v < 0:
+                    failures.append(
+                        f"{cell}: {field}={v} not finite/>=0")
+        else:
+            failures.append(f"{cell}: replicates column missing — "
+                            "sweep did not run the replicated driver")
     if failures:
         print(f"FAIL ({len(failures)}):")
         for msg in failures:
             print(f"  {msg}")
         return 1
-    print(f"sweep sanity OK: {len(rows)} cells, finite latencies, "
-          "power <= p_max")
+    print(f"sweep sanity OK: {len(rows)} cells, finite latencies + CI "
+          "widths, power <= p_max")
     return 0
 
 

@@ -37,10 +37,16 @@ def unpack_signs(words: jnp.ndarray, d: int) -> jnp.ndarray:
     return signs
 
 
+def _check_code_width(b: int) -> None:
+    # a width that does not divide 32 would silently mis-split words
+    # (32 // b truncates), so both directions reject it up front
+    if b < 1 or 32 % b != 0:
+        raise ValueError(f"b must divide 32, got {b}")
+
+
 def pack_codes(codes: jnp.ndarray, b: int) -> jnp.ndarray:
     """Pack b-bit unsigned integer codes (uint32 values < 2**b) into words."""
-    if 32 % b != 0:
-        raise ValueError(f"b must divide 32, got {b}")
+    _check_code_width(b)
     per = 32 // b
     codes = _pad_to(codes.astype(jnp.uint32), per).reshape(-1, per)
     shifts = (jnp.arange(per, dtype=jnp.uint32) * b).astype(jnp.uint32)
@@ -49,6 +55,7 @@ def pack_codes(codes: jnp.ndarray, b: int) -> jnp.ndarray:
 
 def unpack_codes(words: jnp.ndarray, b: int, n: int) -> jnp.ndarray:
     """Inverse of pack_codes -> uint32 codes (length n)."""
+    _check_code_width(b)
     per = 32 // b
     shifts = (jnp.arange(per, dtype=jnp.uint32) * b).astype(jnp.uint32)
     mask = jnp.uint32(2 ** b - 1)

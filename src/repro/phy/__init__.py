@@ -17,16 +17,17 @@ section 7.
 """
 from .bitalloc import (equalizing_target_latency_batch,
                        rate_aware_fractions_batch)
-from .channel import (ChannelBatch, bundle_from_realizations,
-                      compute_bundle, make_channel_batch,
-                      uplink_latency_batch)
+from .channel import (ChannelBatch, bundle_from_realization_grid,
+                      bundle_from_realizations, compute_bundle,
+                      make_channel_batch, uplink_latency_batch)
 from .solvers import (BatchedPowerSolution, batched_solver,
                       bisection_solve, dinkelbach_solve,
                       eta_upper_bound_batch, maxsum_solve, maxsum_starts)
 
 __all__ = [
     "BatchedPowerSolution", "ChannelBatch", "batched_solver",
-    "bisection_solve", "bundle_from_realizations", "compute_bundle",
+    "bisection_solve", "bundle_from_realization_grid",
+    "bundle_from_realizations", "compute_bundle",
     "dinkelbach_solve", "equalizing_target_latency_batch",
     "eta_upper_bound_batch", "make_channel_batch", "maxsum_solve",
     "maxsum_starts", "rate_aware_fractions_batch",

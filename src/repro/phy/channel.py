@@ -114,6 +114,21 @@ def bundle_from_realizations(chans: Sequence[ChannelRealization]
     return ChannelBatch(pre_log=cfg.pre_log, p_max_w=cfg.p_max_w, **stack)
 
 
+def bundle_from_realization_grid(grid: Sequence[Sequence[ChannelRealization]]
+                                 ) -> ChannelBatch:
+    """Stack a [cells][R] grid of realizations into one FLAT
+    [cells * R] bundle, row-major (cell-major, replicate-minor).
+
+    The replicated sweep driver solves all cells x Monte-Carlo
+    replicates of a round in one device call; solution row
+    ``i * R + r`` belongs to (cell i, replicate r).  All rows must
+    share the network constants — enforced by
+    :func:`bundle_from_realizations`.
+    """
+    flat = [chan for row in grid for chan in row]
+    return bundle_from_realizations(flat)
+
+
 def compute_bundle(cfg: CFmMIMOConfig, beta: jnp.ndarray,
                    pilot: jnp.ndarray) -> ChannelBatch:
     """eq. (5) coefficient bundle in jnp from (beta [..., M, K],
@@ -172,5 +187,6 @@ def uplink_latency_batch(bits: jnp.ndarray, rates: jnp.ndarray,
     return lat if mask is None else lat * mask
 
 
-__all__ = ["ChannelBatch", "bundle_from_realizations", "compute_bundle",
-           "make_channel", "make_channel_batch", "uplink_latency_batch"]
+__all__ = ["ChannelBatch", "bundle_from_realization_grid",
+           "bundle_from_realizations", "compute_bundle", "make_channel",
+           "make_channel_batch", "uplink_latency_batch"]

@@ -8,11 +8,14 @@ simulation engine.
   churn, Monte-Carlo channel redraws, heterogeneous data, K/M grids);
 * :mod:`sweep` — scenario x quantizer x power-controller grid runner;
 * :mod:`phy_driver` — the batched-phy grid driver: lockstep rounds,
-  ONE jitted power solve per power spec per round (repro.phy);
+  ONE jitted power solve per power spec per round (repro.phy); with
+  ``replicates=R`` also the vmapped Monte-Carlo replicate axis
+  (mean/ci95 summaries at one dispatch per quantizer per round);
 * :mod:`metrics` — round-log aggregation the benchmark tables consume.
 """
-from .engine import EngineConfig, RoundWork, RunState, VectorizedFLEngine
-from .metrics import summarize_logs, write_metrics_csv
+from .engine import (EngineConfig, ReplicatedRoundWork, ReplicatedRunState,
+                     RoundWork, RunState, VectorizedFLEngine)
+from .metrics import summarize_logs, summarize_replicates, write_metrics_csv
 from .phy_driver import run_grid_batched
 from .scenarios import (SCENARIOS, Scenario, build_problem, get_scenario,
                         grid_scenarios, list_scenarios, register_scenario)

@@ -39,6 +39,16 @@ churn (partial participation with re-normalized aggregation weights and
 frozen quantizer state for absent users) and Monte-Carlo channel
 redraws (fresh large-scale realization every ``redraw_channel_every``
 rounds) — see repro.sim.scenarios for the named workloads.
+
+Replicated mode (the Monte-Carlo replicate axis, DESIGN.md section 8):
+``start_replicated_run(R)`` / ``train_round_replicated`` run R
+independent FL trajectories of the SAME problem — distinct minibatch
+RNG streams, distinct participation draws, distinct channel
+realizations, independently evolving quantizer states — with the whole
+per-round device step vmapped over a leading R axis, so one jitted
+dispatch per round trains all R trajectories.  R = 1 routes through
+the IDENTICAL compiled step as the unreplicated path (no vmap), which
+is what makes the replicate-parity suite's bit-for-bit claim possible.
 """
 from __future__ import annotations
 
@@ -86,6 +96,15 @@ class EngineConfig:
     # grouped launch — the right choice on TPU/GPU.  Both are bitwise
     # identical to the sequential per-user jit.
     local_batching: str = "map"      # "map" | "vmap"
+    # How the Monte-Carlo replicate axis R is batched inside the single
+    # jitted replicated step.  "vmap" batches all R trajectories' convs
+    # together — right on TPU/GPU; on CPU it hits the same slow
+    # grouped-conv lowering as local_batching="vmap", so "auto"
+    # (default) picks "map" (lax.map: compile the per-replicate graph
+    # once, loop it on-device — still ONE dispatch per round) on CPU
+    # and "vmap" on accelerators.  aggregation="signplane" always runs
+    # "map": the Pallas wire kernels expect their unbatched windows.
+    replicate_batching: str = "auto"  # "auto" | "map" | "vmap"
     participation: float = 1.0       # P(user active in a round) — churn
     redraw_channel_every: int = 0    # 0 = fixed realization (paper)
     channel_seed: int = 0            # base seed for Monte-Carlo redraws
@@ -130,6 +149,15 @@ class RoundWork:
 
 
 @dataclasses.dataclass
+class ReplicatedRoundWork:
+    """RoundWork with a leading Monte-Carlo replicate axis R."""
+    t: int
+    bits_np: np.ndarray            # [R, K] payload bits; 0 for absent users
+    active: np.ndarray             # [R, K] 0/1 participation masks
+    mean_s: np.ndarray             # [R] mean high-res fraction per replicate
+
+
+@dataclasses.dataclass
 class RunState:
     """Mutable per-run state for the round-stepping API.
 
@@ -150,6 +178,39 @@ class RunState:
     rounds_done: int = 0
 
 
+@dataclasses.dataclass
+class ReplicatedRunState:
+    """Per-run state for R vmapped Monte-Carlo replicates.
+
+    Device arrays carry a leading R axis (params/qstate pytrees);
+    host-side RNG streams and channel realizations are per-replicate
+    lists.  Latency accounting is NOT here — the replicated grid
+    driver (repro.sim.phy_driver) owns it per (cell, replicate), since
+    one training state serves many power cells.
+    """
+    params: object                          # [R]-stacked param pytree
+    qstate: object                          # [R, K, ...] stacked (or None)
+    chans: List[Optional[ChannelRealization]]   # length R
+    rngs: List[np.random.Generator]             # minibatch streams
+    part_rngs: List[np.random.Generator]        # churn streams
+    test_x: object
+    test_y: object
+    rounds_done: int = 0
+
+    @property
+    def R(self) -> int:
+        return len(self.rngs)
+
+
+# RNG-stream folding for replicate r > 0 (replicate 0 keeps the
+# unreplicated streams bit-for-bit — the parity contract):
+# minibatches   default_rng((seed, _REPL_TAG, r))
+# churn         default_rng((seed, 0x5EED, _REPL_TAG, r))
+# channels      make_channel(seed = channel_seed + r * stride + t)
+# The channel-seed stride keeps replicate streams disjoint from the
+# unreplicated redraw seeds (channel_seed + t, t <= T << stride).
+_REPL_TAG = 0x4D43                  # "MC"
+_REPL_CHANNEL_SEED_STRIDE = 1 << 20
 
 
 class VectorizedFLEngine:
@@ -175,6 +236,10 @@ class VectorizedFLEngine:
         if self.engine_cfg.local_batching not in ("map", "vmap"):
             raise ValueError(
                 f"unknown local_batching {self.engine_cfg.local_batching!r}")
+        if self.engine_cfg.replicate_batching not in ("auto", "map",
+                                                      "vmap"):
+            raise ValueError(f"unknown replicate_batching "
+                             f"{self.engine_cfg.replicate_batching!r}")
         if (self.engine_cfg.aggregation == "signplane"
                 and quantizer.name != "mixed-resolution"):
             raise ValueError(
@@ -208,10 +273,14 @@ class VectorizedFLEngine:
         self._user_sharding, self._repl_sharding = self._user_shardings()
         if self.engine_cfg.effective_fused:
             self._train_flat = None
-            self._fused_step = self._build_fused_step()
+            self._fused_step_fn = self._build_fused_step_fn()
+            self._fused_step = self._jit_fused_step(self._fused_step_fn)
         else:
             self._train_flat = self._build_train_flat()
+            self._fused_step_fn = None
             self._fused_step = None
+        # replicate-axis step cache: R -> jitted vmap of the fused step
+        self._repl_step_cache = {}
 
     # ------------------------------------------------------------ build
     def _user_shardings(self):
@@ -268,9 +337,10 @@ class VectorizedFLEngine:
                 self._user_sharding))
         return jax.jit(fn)
 
-    def _build_fused_step(self):
-        """One fully fused jit step per round: train + batched quantize
-        + aggregation + model update in a single dispatch."""
+    def _build_fused_step_fn(self):
+        """The fully fused per-round step (train + batched quantize +
+        aggregation + model update), returned UNJITTED so the replicate
+        axis can vmap it before compilation."""
         q, spec, K = self.quantizer, self.spec, self.K
         signplane = self.engine_cfg.aggregation == "signplane"
 
@@ -293,12 +363,67 @@ class VectorizedFLEngine:
                 lambda p, u: p + u, params, unflatten_pytree(agg, spec))
             return params, new_qstate, res.bits, res.aux
 
+        return step
+
+    def _jit_fused_step(self, step):
         if self._user_sharding is not None:
             us, rs = self._user_sharding, self._repl_sharding
             # params replicated; every stacked [K, ...] arg (quantizer
             # state, minibatches, weights, activity mask) user-sharded
             return jax.jit(step, in_shardings=(rs, us, us, us, us, us))
         return jax.jit(step)
+
+    def _replicated_step(self, R: int):
+        """The per-round step over a leading replicate axis R — ONE
+        jitted dispatch for all R trajectories.
+
+        R == 1 routes through the SAME compiled function as the
+        unreplicated driver (``self._fused_step`` on squeezed arrays):
+        a vmap over a singleton axis recompiles the graph with batched
+        lowerings and is only roundoff-equal, while the squeeze keeps
+        the R=1 replicated path bit-for-bit with today's driver
+        (tests/test_mc_replicates.py).
+        """
+        if R not in self._repl_step_cache:
+            if R == 1:
+                fused = self._fused_step
+
+                def step1(params, qstate, xs, ys, weights, active):
+                    sq = lambda tr: jax.tree_util.tree_map(
+                        lambda x: x[0], tr)
+                    p, q, bits, aux = fused(sq(params), sq(qstate),
+                                            xs[0], ys[0], weights[0],
+                                            active[0])
+                    ex = lambda tr: jax.tree_util.tree_map(
+                        lambda x: x[None], tr)
+                    return ex(p), ex(q), bits[None], ex(aux)
+
+                self._repl_step_cache[R] = step1
+            else:
+                if self._user_sharding is not None:
+                    warnings.warn(
+                        "EngineConfig.mesh user-axis sharding is not "
+                        "supported in replicated mode (R > 1); running "
+                        "unsharded", stacklevel=2)
+                fn = self._fused_step_fn
+                mode = self.engine_cfg.replicate_batching
+                if mode == "auto":
+                    mode = "vmap" if jax.default_backend() in (
+                        "tpu", "gpu") else "map"
+                if self.engine_cfg.aggregation == "signplane":
+                    # the Pallas wire-format kernels expect their
+                    # unbatched [G*W, 128] windows — never vmap them
+                    mode = "map"
+                if mode == "map":
+                    # on-device loop INSIDE the one jitted dispatch:
+                    # per-replicate convs keep the fast unbatched CPU
+                    # lowering (see EngineConfig.replicate_batching)
+                    self._repl_step_cache[R] = jax.jit(
+                        lambda p, q, xs, ys, w, a: jax.lax.map(
+                            lambda args: fn(*args), (p, q, xs, ys, w, a)))
+                else:
+                    self._repl_step_cache[R] = jax.jit(jax.vmap(fn))
+        return self._repl_step_cache[R]
 
     # ----------------------------------------------------------- rounds
     def _dense_round(self, params, qstate, xs, ys, weights, active_np):
@@ -388,6 +513,116 @@ class VectorizedFLEngine:
         return RoundWork(t=t, bits_np=bits_np, active=active,
                          mean_s=mean_s)
 
+    # ------------------------------------------- replicated round API
+    # The Monte-Carlo replicate axis (DESIGN.md section 8): R
+    # independent trajectories of this engine's problem advance in ONE
+    # jitted dispatch per round.  The replicated grid driver
+    # (repro.sim.phy_driver) owns the per-(cell, replicate) latency
+    # accounting; these methods own training state and RNG-stream
+    # folding.
+    def _repl_chan_seed(self, r: int, t: int) -> int:
+        return (self.engine_cfg.channel_seed
+                + r * _REPL_CHANNEL_SEED_STRIDE + t)
+
+    def start_replicated_run(self, R: int) -> ReplicatedRunState:
+        if not self.engine_cfg.effective_fused:
+            raise ValueError(
+                "replicated mode vmaps the fused per-round step; "
+                "configure EngineConfig(fused=True)")
+        if R < 1:
+            raise ValueError(f"need at least one replicate, got {R}")
+        fl = self.fl
+        stack = lambda tr: jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (R,) + x.shape), tr)
+        chans: List[Optional[ChannelRealization]] = [self.chan]
+        for r in range(1, R):
+            chans.append(None if self.chan is None else make_channel(
+                self.chan.cfg, seed=self._repl_chan_seed(r, 0)))
+        return ReplicatedRunState(
+            params=stack(self.params), qstate=stack(self.qstate),
+            chans=chans,
+            # replicate 0 keeps the unreplicated streams bit-for-bit
+            rngs=[np.random.default_rng(fl.seed) if r == 0 else
+                  np.random.default_rng((fl.seed, _REPL_TAG, r))
+                  for r in range(R)],
+            part_rngs=[np.random.default_rng((fl.seed, 0x5EED)) if r == 0
+                       else np.random.default_rng(
+                           (fl.seed, 0x5EED, _REPL_TAG, r))
+                       for r in range(R)],
+            test_x=jnp.asarray(self.test.x),
+            test_y=jnp.asarray(self.test.y))
+
+    def train_round_replicated(self, state: ReplicatedRunState, t: int
+                               ) -> ReplicatedRoundWork:
+        """All R replicates' (channel redraw, minibatch draw, jitted
+        train + quantize + aggregate) for round t — one device
+        dispatch.  Updates ``state`` in place."""
+        fl, ecfg, R = self.fl, self.engine_cfg, state.R
+        if (ecfg.redraw_channel_every > 0 and t > 1
+                and (t - 1) % ecfg.redraw_channel_every == 0):
+            for r in range(R):
+                if state.chans[r] is not None:
+                    state.chans[r] = make_channel(
+                        state.chans[r].cfg,
+                        seed=self._repl_chan_seed(r, t))
+        # per replicate, the same nested draw order as train_round
+        sel = np.stack([
+            np.stack([
+                np.stack([rng.choice(shard, self.take, replace=False)
+                          for _ in range(fl.L)])
+                for shard in self.shards])
+            for rng in state.rngs])                  # [R, K, L, b]
+        xs = jnp.asarray(self.dataset.x[sel])
+        ys = jnp.asarray(self.dataset.y[sel])
+        active = np.stack([self._draw_active(prng)
+                           for prng in state.part_rngs])      # [R, K]
+        weights = np.stack([self._round_weights(a) for a in active])
+        step = self._replicated_step(R)
+        state.params, state.qstate, bits, aux = step(
+            state.params, state.qstate, xs, ys,
+            jnp.asarray(weights, jnp.float32),
+            jnp.asarray(active, jnp.float32))
+        state.rounds_done = t
+        bits_np = np.asarray(bits, np.float64) * active
+        s_np = np.asarray(aux["s"], np.float64) if "s" in aux \
+            else np.ones((R, self.K))
+        mean_s = np.array([float(np.mean(s_np[r][active[r].astype(bool)]))
+                           for r in range(R)])
+        return ReplicatedRoundWork(t=t, bits_np=bits_np, active=active,
+                                   mean_s=mean_s)
+
+    def replicate_params(self, state: ReplicatedRunState, r: int):
+        """Replicate r's current param pytree (device view)."""
+        return jax.tree_util.tree_map(lambda x: x[r], state.params)
+
+    # Both drivers (finish_round below; the replicated lockstep in
+    # repro.sim.phy_driver) must apply the SAME eval schedule and
+    # budget-stop rule or the R=1 bit-for-bit parity contract breaks —
+    # one definition each.
+    def eval_due(self, t: int) -> bool:
+        return t % self.fl.eval_every == 0 or t == self.fl.T
+
+    def budget_spent(self, cum_latency: float) -> bool:
+        return (self.fl.latency_budget_s is not None
+                and cum_latency >= self.fl.latency_budget_s)
+
+    def eval_accuracy_replicated(self, state: ReplicatedRunState,
+                                 alive: Optional[np.ndarray] = None
+                                 ) -> np.ndarray:
+        """Test accuracy per replicate [R] (NaN for replicates the
+        ``alive`` mask excludes — nobody logs them anymore).
+        cnn_accuracy is a host minibatch loop, so replicates evaluate
+        one at a time — for R = 1 this is the identical call the
+        unreplicated path makes (the bit-for-bit parity contract
+        covers accuracy too)."""
+        from repro.fl.cnn import cnn_accuracy
+        accs = np.full(state.R, np.nan)
+        rs = range(state.R) if alive is None else np.flatnonzero(alive)
+        for r in rs:
+            accs[r] = cnn_accuracy(self.replicate_params(state, int(r)),
+                                   state.test_x, state.test_y)
+        return accs
+
     def solve_uplink_host(self, chan: Optional[ChannelRealization],
                           bits_np: np.ndarray, active: np.ndarray
                           ) -> float:
@@ -413,10 +648,10 @@ class VectorizedFLEngine:
         from repro.fl.cnn import cnn_accuracy
         from repro.fl.loop import RoundLog
 
-        fl, t = self.fl, work.t
+        t = work.t
         state.cum_latency += uplink + self.comp_lat
         acc = None
-        if t % fl.eval_every == 0 or t == fl.T:
+        if self.eval_due(t):
             acc = cnn_accuracy(state.params, state.test_x, state.test_y)
         state.logs.append(RoundLog(t, work.bits_np, uplink,
                                    self.comp_lat, state.cum_latency,
@@ -426,8 +661,7 @@ class VectorizedFLEngine:
             print(f"[round {t:4d}] acc={acc:.4f} "
                   f"bits/user={work.bits_np.mean():.3e} "
                   f"cum_lat={state.cum_latency:.2f}s")
-        return not (fl.latency_budget_s is not None
-                    and state.cum_latency >= fl.latency_budget_s)
+        return not self.budget_spent(state.cum_latency)
 
     def result(self, state: RunState):
         from repro.fl.loop import FLResult

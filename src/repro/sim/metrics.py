@@ -6,12 +6,21 @@ scalar metrics reported in the paper's tables: best/final accuracy,
 rounds completed (T_max under a budget), mean payload bits, mean
 high-resolution fraction s, cumulative latency and straggler
 percentiles.
+
+``summarize_replicates`` lifts that row over the Monte-Carlo replicate
+axis: each replicate's log list is summarized independently, every
+metric column becomes the across-replicate mean under its original
+name (so downstream table code needs no change), and a ``<metric>_ci95``
+column carries the normal-approximation 95% confidence half-width
+``1.96 * std(ddof=1) / sqrt(R)`` (0 at R = 1 — a point estimate has no
+width).  The mean is the plain ``np.mean`` of the per-replicate
+summaries, which is what tests/test_mc_replicates.py pins host-side.
 """
 from __future__ import annotations
 
 import csv
 import os
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, List, Sequence
 
 
 def summarize_logs(logs: List) -> Dict[str, float]:
@@ -36,12 +45,43 @@ def summarize_logs(logs: List) -> Dict[str, float]:
     }
 
 
+def summarize_replicates(replicate_logs: Sequence[List]
+                         ) -> Dict[str, float]:
+    """Reduce R replicates' log lists to mean + ci95 columns.
+
+    Every ``summarize_logs`` metric appears under its own name as the
+    across-replicate mean, plus ``<metric>_ci95`` (1.96 * standard
+    error; 0.0 at R = 1) and a ``replicates`` count column.  NaN
+    metrics (e.g. accuracy in a no-eval window) propagate as NaN means.
+    """
+    import numpy as np
+
+    if not replicate_logs:
+        raise ValueError("need at least one replicate")
+    rows = [summarize_logs(logs) for logs in replicate_logs]
+    R = len(rows)
+    out: Dict[str, float] = {}
+    for key in rows[0]:
+        vals = np.array([row[key] for row in rows], dtype=np.float64)
+        out[key] = float(np.mean(vals))
+        out[key + "_ci95"] = float(
+            1.96 * np.std(vals, ddof=1) / np.sqrt(R)) if R > 1 else 0.0
+    out["replicates"] = float(R)
+    return out
+
+
 # max_p is filled by the batched phy driver (largest power coefficient
 # allocated to any user across the run; <= 1 means transmit power
 # <= p_max) and left blank by the host-solve path.
 METRIC_FIELDS = ["rounds", "best_acc", "final_acc", "mean_bits_per_user",
                  "mean_s", "total_latency_s", "mean_uplink_s",
                  "p95_uplink_s", "max_p"]
+
+# the replicated driver's extra columns (summarize_replicates); written
+# only when some row carries them, so unreplicated sweep CSVs keep
+# their schema
+REPLICATE_FIELDS = ["replicates"] + [
+    f + "_ci95" for f in METRIC_FIELDS if f != "max_p"]
 
 
 def write_metrics_csv(rows: Iterable[Dict], path: str) -> None:
@@ -51,6 +91,8 @@ def write_metrics_csv(rows: Iterable[Dict], path: str) -> None:
         return
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fields = ["scenario", "quantizer", "power"] + METRIC_FIELDS
+    if any(f in row for f in REPLICATE_FIELDS for row in rows):
+        fields += REPLICATE_FIELDS
     with open(path, "w", newline="") as f:
         w = csv.DictWriter(f, fieldnames=fields, extrasaction="ignore")
         w.writeheader()

@@ -33,6 +33,19 @@ JAX_ENABLE_X64=1) while the host path is numpy f64, so latencies agree
 to the documented parity tolerances (DESIGN.md section 7), not
 bit-for-bit; tests/test_phy_driver.py pins the drift on a churn
 scenario.
+
+``replicates=R`` (DESIGN.md section 8) adds the Monte-Carlo replicate
+axis: every (quantizer, power) cell runs R independent trajectories —
+distinct minibatch/churn RNG streams, distinct channel realizations,
+independently evolving quantizer state — and the lockstep structure is
+preserved: still ONE jitted train call per quantizer per round (the
+engine vmaps the replicate axis) and ONE power solve per power spec
+per round (the R x cells uplink problems stack into one flat
+ChannelBatch).  Summaries become across-replicate means with
+``<metric>_ci95`` confidence half-widths; ``SweepResult.result`` holds
+the per-replicate FLResult list.  ``replicates=1`` exercises the same
+machinery and reproduces the unreplicated driver bit-for-bit on
+training metrics (tests/test_mc_replicates.py).
 """
 from __future__ import annotations
 
@@ -42,12 +55,16 @@ from typing import Dict, List, Mapping, Optional, Tuple, Union
 import numpy as np
 
 from repro.core.power import PowerController
-from repro.phy import batched_solver, bundle_from_realizations
+from repro.phy import (batched_solver, bundle_from_realization_grid,
+                       bundle_from_realizations)
 
-from .engine import RoundWork, RunState, VectorizedFLEngine
+from .engine import (ReplicatedRoundWork, ReplicatedRunState, RoundWork,
+                     RunState, VectorizedFLEngine)
+from .metrics import summarize_replicates
 from .scenarios import Scenario, build_problem
-from .sweep import (PowerSpec, QuantSpec, SweepResult, _make_engine,
-                    _make_power, _resolve_scenario, _to_result)
+from .sweep import (PowerSpec, QuantSpec, SweepCell, SweepResult,
+                    _make_engine, _make_power, _resolve_scenario,
+                    _to_result)
 
 
 @dataclasses.dataclass
@@ -72,6 +89,39 @@ class _Cell:
     plabel: str
     acct: RunState                 # logs / cum_latency / params snapshot
     alive: bool = True
+    max_p: float = 0.0
+
+
+@dataclasses.dataclass
+class _ReplTrack:
+    """One quantizer's engine + its shared R-replicate training state."""
+    engine: VectorizedFLEngine
+    state: ReplicatedRunState
+    cells: List["_ReplCell"] = dataclasses.field(default_factory=list)
+
+    @property
+    def alive(self) -> bool:
+        return any(c.alive.any() for c in self.cells)
+
+
+@dataclasses.dataclass
+class _ReplCell:
+    """One (quantizer, power) cell with per-replicate accounting.
+
+    The track's R trajectories are shared by all its cells; each cell
+    keeps an [R] alive mask (a replicate stops logging once ITS latency
+    budget is spent), per-replicate logs/cum-latency, and a params
+    snapshot taken at each replicate's own stopping round.
+    """
+    track: _ReplTrack
+    power: Optional[PowerController]
+    qlabel: str
+    plabel: str
+    logs: List[List]               # [R] lists of RoundLog
+    cum_latency: np.ndarray        # [R] float64
+    alive: np.ndarray              # [R] bool
+    rounds_done: np.ndarray        # [R] int
+    params: List[object]           # [R] per-replicate final params
     max_p: float = 0.0
 
 
@@ -137,27 +187,179 @@ def _run_scenario_lockstep(scn: Scenario, tracks: List[_Track],
                 cell.acct, work, uplink, verbose=verbose)
 
 
+def _solve_round_replicated(cells: List[_ReplCell],
+                            works: List[ReplicatedRoundWork],
+                            cache: _BundleCache, R: int) -> np.ndarray:
+    """One batched device solve per distinct power spec over the
+    flattened R x cells axis; returns per-(cell, replicate) straggler
+    latencies [n_cells, R]."""
+    uplinks = np.zeros((len(cells), R))
+    groups: Dict[str, List[int]] = {}
+    for i, cell in enumerate(cells):
+        if cell.power is None or cell.track.state.chans[0] is None:
+            continue
+        groups.setdefault(cell.plabel, []).append(i)
+    for plabel, idx in groups.items():
+        # row i * R + r of the flat bundle is (cell idx[i], replicate r)
+        grid = [cells[i].track.state.chans for i in idx]
+        flat = [chan for row in grid for chan in row]
+        hit = cache.get(plabel)
+        if (hit is None or len(hit[0]) != len(flat)
+                or any(a is not b for a, b in zip(hit[0], flat))):
+            cache[plabel] = (flat, bundle_from_realization_grid(grid))
+        cb = cache[plabel][1]
+        K = flat[0].cfg.K
+        bits = np.ones((len(idx) * R, K))
+        mask = np.zeros((len(idx) * R, K))
+        for row, i in enumerate(idx):
+            w = works[i]
+            mask[row * R:(row + 1) * R] = w.active
+            bits[row * R:(row + 1) * R] = np.where(
+                w.active > 0, np.maximum(w.bits_np, 1.0), 1.0)
+        sol = batched_solver(cells[idx[0]].power)(cb, bits, mask=mask)
+        stragglers = np.asarray(sol.straggler_latency,
+                                np.float64).reshape(len(idx), R)
+        p_max_round = np.asarray(np.max(sol.p, axis=-1),
+                                 np.float64).reshape(len(idx), R)
+        for row, i in enumerate(idx):
+            uplinks[i] = stragglers[row]
+            # max_p only over replicates still accounting (alive);
+            # dead replicates' rows ride along for shape stability
+            if cells[i].alive.any():
+                cells[i].max_p = max(
+                    cells[i].max_p,
+                    float(np.max(p_max_round[row][cells[i].alive])))
+    return uplinks
+
+
+def _run_scenario_lockstep_replicated(scn: Scenario,
+                                      tracks: List[_ReplTrack], R: int,
+                                      verbose: bool) -> None:
+    from repro.fl.loop import RoundLog
+
+    cache: _BundleCache = {}
+    for t in range(1, scn.T + 1):
+        live_tracks = [tr for tr in tracks if tr.alive]
+        if not live_tracks:
+            break
+        # ONE jitted training step per quantizer for all R replicates
+        track_work = {id(tr): tr.engine.train_round_replicated(tr.state, t)
+                      for tr in live_tracks}
+        live = [c for tr in live_tracks for c in tr.cells
+                if c.alive.any()]
+        works = [track_work[id(c.track)] for c in live]
+        uplinks = _solve_round_replicated(live, works, cache, R)
+        # per-replicate accuracy, once per track on eval rounds —
+        # only for replicates some cell still accounts (a replicate
+        # dead in EVERY cell of the track is never logged again)
+        track_acc: Dict[int, Optional[np.ndarray]] = {}
+        for tr in live_tracks:
+            track_acc[id(tr)] = (
+                tr.engine.eval_accuracy_replicated(
+                    tr.state,
+                    alive=np.logical_or.reduce(
+                        [c.alive for c in tr.cells]))
+                if tr.engine.eval_due(t) else None)
+        for cell, work, uplink in zip(live, works, uplinks):
+            eng = cell.track.engine
+            comp_lat = eng.comp_lat
+            accs = track_acc[id(cell.track)]
+            for r in np.flatnonzero(cell.alive):
+                cell.cum_latency[r] += uplink[r] + comp_lat
+                acc = None if accs is None else float(accs[r])
+                cell.logs[r].append(RoundLog(
+                    t, work.bits_np[r], float(uplink[r]), comp_lat,
+                    float(cell.cum_latency[r]), float(work.mean_s[r]),
+                    acc))
+                cell.rounds_done[r] = t
+                if eng.budget_spent(cell.cum_latency[r]):
+                    cell.alive[r] = False
+                    # budget exhausted: snapshot THIS replicate's
+                    # params at its final round while the track trains on
+                    cell.params[r] = eng.replicate_params(
+                        cell.track.state, int(r))
+            if verbose and accs is not None:
+                # dead replicates carry NaN — average the live ones
+                print(f"[round {t:4d}] {cell.qlabel}/{cell.plabel} "
+                      f"acc={np.nanmean(accs):.4f}±"
+                      f"{np.nanstd(accs):.4f} (R={R})")
+    for tr in tracks:
+        for cell in tr.cells:
+            for r in np.flatnonzero(cell.alive):
+                cell.params[r] = tr.engine.replicate_params(
+                    tr.state, int(r))
+
+
+def _to_replicated_result(scn: Scenario, cell: _ReplCell) -> SweepResult:
+    from repro.fl.loop import FLResult
+
+    results = [FLResult(params=cell.params[r], logs=cell.logs[r],
+                        rounds_completed=int(cell.rounds_done[r]))
+               for r in range(len(cell.logs))]
+    summary = summarize_replicates([res.logs for res in results])
+    summary["max_p"] = cell.max_p
+    return SweepResult(cell=SweepCell(scn, cell.qlabel, cell.plabel),
+                       result=results, summary=summary)
+
+
 def run_grid_batched(scenarios: List[Union[str, Scenario]],
                      quantizers: Mapping[str, QuantSpec],
                      powers: Optional[Mapping[str, PowerSpec]] = None,
                      quick: bool = True, out_csv: Optional[str] = None,
                      latency_budget_s: Optional[float] = None,
-                     verbose: bool = False, mesh=None
+                     verbose: bool = False, mesh=None,
+                     replicates: Optional[int] = None
                      ) -> List[SweepResult]:
     """``run_grid`` semantics on the batched phy path.
 
     Same grid, same summaries (plus ``max_p``); within a scenario all
     cells advance round-by-round together and every round's power
     problems are solved in one jitted call per power spec.
+
+    ``replicates=R`` (int >= 1) switches a scenario to the Monte-Carlo
+    replicate axis: R independent trajectories per cell, still one
+    train call per quantizer and one power solve per power spec per
+    round; summaries gain mean/ci95 columns and ``SweepResult.result``
+    becomes the per-replicate FLResult list.  ``replicates=None``
+    (default) keeps the unreplicated driver unless the scenario itself
+    declares ``Scenario.replicates > 1``.
     """
     from .metrics import write_metrics_csv
 
+    if replicates is not None and replicates < 1:
+        raise ValueError(f"replicates must be >= 1, got {replicates}")
     powers = powers if powers is not None else {"none": None}
     results: List[SweepResult] = []
     for scenario in scenarios:
         scn = _resolve_scenario(scenario, quick, latency_budget_s)
+        R = replicates if replicates is not None \
+            else (scn.replicates if scn.replicates > 1 else None)
         problem = build_problem(scn)
         chan = problem[4]
+        if R is not None:
+            tracks_r: List[_ReplTrack] = []
+            for qlabel, qspec in quantizers.items():
+                engine = _make_engine(scn, problem, qspec, None,
+                                      mesh=mesh)
+                track = _ReplTrack(engine=engine,
+                                   state=engine.start_replicated_run(R))
+                for plabel, pspec in powers.items():
+                    pc = _make_power(pspec)
+                    track.cells.append(_ReplCell(
+                        track=track,
+                        power=pc if chan is not None else None,
+                        qlabel=qlabel, plabel=plabel,
+                        logs=[[] for _ in range(R)],
+                        cum_latency=np.zeros(R),
+                        alive=np.ones(R, dtype=bool),
+                        rounds_done=np.zeros(R, dtype=np.int64),
+                        params=[None] * R))
+                tracks_r.append(track)
+            _run_scenario_lockstep_replicated(scn, tracks_r, R, verbose)
+            for track in tracks_r:
+                for cell in track.cells:
+                    results.append(_to_replicated_result(scn, cell))
+            continue
         tracks: List[_Track] = []
         for qlabel, qspec in quantizers.items():
             engine = _make_engine(scn, problem, qspec, None, mesh=mesh)

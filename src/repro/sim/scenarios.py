@@ -66,6 +66,12 @@ class Scenario:
     aggregation: str = "dense"
     fused: bool = True               # production sweeps run fully fused
     seed: int = 0
+    # Monte-Carlo replicate axis (DESIGN.md section 8): > 1 makes the
+    # batched sweep driver run this many independent trajectories per
+    # cell — distinct data/churn RNG streams and channel realizations,
+    # vmapped through one jitted train step per round — and report
+    # mean/ci95 summaries.  1 = point estimate (unreplicated driver).
+    replicates: int = 1
 
     def scaled(self, quick: bool = True) -> "Scenario":
         """Quick-mode variant: reduced K/T/data for CPU CI runs."""
@@ -189,6 +195,14 @@ register_scenario(Scenario(
     description="Monte-Carlo fading geometry: fresh large-scale "
                 "realization every round (Vu et al. style averaging)",
     K=20, T=40, redraw_channel_every=1))
+
+register_scenario(Scenario(
+    name="monte-carlo-replicated",
+    description="Monte-Carlo replicate axis: 8 independent trajectories "
+                "(distinct channel realizations + data/churn RNG "
+                "streams) vmapped through one train step per round; "
+                "summaries report mean +- ci95",
+    K=20, T=40, replicates=8))
 
 register_scenario(Scenario(
     name="hetero-data",

@@ -126,7 +126,8 @@ def run_grid(scenarios: List[Union[str, Scenario]],
              quick: bool = True, out_csv: Optional[str] = None,
              latency_budget_s: Optional[float] = None,
              verbose: bool = False, mesh=None,
-             phy_batched: bool = False) -> List[SweepResult]:
+             phy_batched: bool = False,
+             replicates: Optional[int] = None) -> List[SweepResult]:
     """Run the full scenario x quantizer x power grid.
 
     Within a scenario the problem (dataset, partition, channel) is
@@ -138,13 +139,21 @@ def run_grid(scenarios: List[Union[str, Scenario]],
     repro.phy solvers instead: all cells of a scenario advance in
     lockstep and each round's power problems are solved in ONE jitted
     device call per power spec (see repro.sim.phy_driver).
+
+    ``replicates=R`` (requires ``phy_batched=True``) runs R
+    Monte-Carlo replicates per cell on the vmapped replicate axis and
+    reports mean/ci95 summaries — see ``run_grid_batched``.
     """
     if phy_batched:
         from .phy_driver import run_grid_batched
         return run_grid_batched(scenarios, quantizers, powers=powers,
                                 quick=quick, out_csv=out_csv,
                                 latency_budget_s=latency_budget_s,
-                                verbose=verbose, mesh=mesh)
+                                verbose=verbose, mesh=mesh,
+                                replicates=replicates)
+    if replicates is not None:
+        raise ValueError("replicates requires phy_batched=True (the "
+                         "replicate axis lives in the batched driver)")
     powers = powers if powers is not None else {"none": None}
     results: List[SweepResult] = []
     for scenario in scenarios:

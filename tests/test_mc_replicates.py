@@ -1,0 +1,238 @@
+"""Monte-Carlo replicate axis (repro.sim.phy_driver, DESIGN.md §8).
+
+The contract the ISSUE pins:
+
+* R=1 replicated driver == unreplicated batched driver bit-for-bit on
+  training metrics (bits, accuracy, mean_s) — the R=1 path routes
+  through the IDENTICAL compiled step, no vmap — with latency compared
+  under the DESIGN.md §7 tolerances (here it is the same jitted solve
+  on the same bundle, so the tolerance is tight);
+* R=4 trajectories are pairwise distinct (RNG-stream and channel-draw
+  independence) and the reported ``mean``/``ci95`` columns equal the
+  host-computed statistics of the per-replicate summaries exactly;
+* one jitted train call per quantizer per round and one power solve
+  per power spec per round REGARDLESS of R (dispatch-count test).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.sim.phy_driver as phy_driver
+from repro.sim import (VectorizedFLEngine, get_scenario, run_grid,
+                       run_grid_batched, summarize_logs)
+
+# engine trains in float32 (see tests/test_phy_driver.py); the x64 CI
+# leg covers solver parity separately
+pytestmark = pytest.mark.skipif(
+    bool(jax.config.jax_enable_x64),
+    reason="engine trains in float32; x64 leg covers solver parity")
+
+QUANTIZERS = {"mixed": ("mixed-resolution", {"lambda_": 0.2, "b": 4}),
+              "classic": ("classic", {})}
+POWERS = {"ours": "bisection-lp", "maxsum": "max-sum-rate"}
+
+
+def _tiny(name, **overrides):
+    fields = dict(K=4, T=4, n_train=240, n_test=60, batch_size=8, L=1,
+                  name=f"{name}-tiny")
+    fields.update(overrides)
+    return dataclasses.replace(get_scenario(name), **fields)
+
+
+# ------------------------------------------------------- R=1 parity
+@pytest.fixture(scope="module")
+def parity_runs():
+    scn = _tiny("churn-0.7", participation=0.5)
+    legacy = run_grid_batched([scn], QUANTIZERS, POWERS, quick=False)
+    rep1 = run_grid_batched([scn], QUANTIZERS, POWERS, quick=False,
+                            replicates=1)
+    return legacy, rep1
+
+
+def test_r1_training_metrics_bit_for_bit(parity_runs):
+    legacy, rep1 = parity_runs
+    assert len(legacy) == len(rep1) == 4
+    for rl, rr in zip(legacy, rep1):
+        assert (rl.cell.quantizer_label, rl.cell.power_label) \
+            == (rr.cell.quantizer_label, rr.cell.power_label)
+        assert len(rr.result) == 1          # per-replicate FLResult list
+        ll, lr = rl.result.logs, rr.result[0].logs
+        assert len(ll) == len(lr)
+        for a, b in zip(ll, lr):
+            np.testing.assert_array_equal(a.bits_per_user,
+                                          b.bits_per_user)
+            assert a.test_acc == b.test_acc
+            assert a.mean_s == b.mean_s
+
+
+def test_r1_latency_parity(parity_runs):
+    """R=1 stacks the same bundle and runs the same jitted solve as
+    the unreplicated driver, so latency parity is tight — far inside
+    the DESIGN.md §7 f32 driver tolerance (2e-2)."""
+    legacy, rep1 = parity_runs
+    for rl, rr in zip(legacy, rep1):
+        for a, b in zip(rl.result.logs, rr.result[0].logs):
+            np.testing.assert_allclose(a.uplink_latency_s,
+                                       b.uplink_latency_s, rtol=1e-9)
+        np.testing.assert_allclose(rl.summary["total_latency_s"],
+                                   rr.summary["total_latency_s"],
+                                   rtol=1e-9)
+        np.testing.assert_allclose(rl.summary["max_p"],
+                                   rr.summary["max_p"], rtol=1e-9)
+
+
+def test_r1_summary_is_degenerate_point_estimate(parity_runs):
+    """At R=1 every mean column equals the single replicate's summary
+    and every ci95 column is exactly 0 (a point estimate has no
+    width)."""
+    _, rep1 = parity_runs
+    for r in rep1:
+        assert r.summary["replicates"] == 1.0
+        single = summarize_logs(r.result[0].logs)
+        for key, val in single.items():
+            np.testing.assert_array_equal(r.summary[key], val)
+            assert r.summary[key + "_ci95"] == 0.0
+
+
+# --------------------------------------------- R=4 replicate statistics
+@pytest.fixture(scope="module")
+def r4_run():
+    scn = _tiny("monte-carlo-channel")
+    return run_grid_batched(
+        [scn], {"mixed": QUANTIZERS["mixed"]}, {"ours": "bisection-lp"},
+        quick=False, replicates=4)[0]
+
+
+def test_r4_trajectories_pairwise_distinct(r4_run):
+    """RNG-stream independence: no two replicates draw the same
+    round-1 minibatches (payload bits differ) or the same channel
+    (uplink latencies differ)."""
+    bits = [tuple(np.asarray(res.logs[0].bits_per_user))
+            for res in r4_run.result]
+    assert len(set(bits)) == 4
+    uplinks = [tuple(log.uplink_latency_s for log in res.logs)
+               for res in r4_run.result]
+    assert len(set(uplinks)) == 4
+    # and the final models differ too
+    finals = [np.concatenate([np.ravel(np.asarray(leaf)) for leaf in
+                              jax.tree_util.tree_leaves(res.params)])
+              for res in r4_run.result]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(finals[i], finals[j])
+
+
+def test_r4_mean_and_ci95_match_host_computation(r4_run):
+    """The reported mean column IS np.mean of the per-replicate
+    summaries (exactly — same arithmetic), and ci95 is the normal 95%
+    half-width 1.96 * std(ddof=1) / sqrt(R)."""
+    rows = [summarize_logs(res.logs) for res in r4_run.result]
+    assert r4_run.summary["replicates"] == 4.0
+    for key in rows[0]:
+        vals = np.array([row[key] for row in rows])
+        np.testing.assert_array_equal(r4_run.summary[key],
+                                      float(np.mean(vals)))
+        np.testing.assert_array_equal(
+            r4_run.summary[key + "_ci95"],
+            float(1.96 * np.std(vals, ddof=1) / np.sqrt(4)))
+
+
+def test_r4_ci_widths_finite_and_informative(r4_run):
+    """Monte-Carlo channel redraws make latency genuinely random, so
+    the latency CI is finite and strictly positive; power stays
+    physical across all replicates."""
+    s = r4_run.summary
+    for f in ("total_latency_s", "mean_uplink_s", "p95_uplink_s"):
+        assert np.isfinite(s[f]) and s[f] > 0
+        assert np.isfinite(s[f + "_ci95"]) and s[f + "_ci95"] > 0
+    assert 0.0 < s["max_p"] <= 1.0
+
+
+# -------------------------------------------------- dispatch counting
+def _counting_run(monkeypatch, R):
+    calls = {"train": 0, "solve": 0}
+    orig_step = VectorizedFLEngine._replicated_step
+    orig_solver = phy_driver.batched_solver
+
+    def counting_step(self, n):
+        fn = orig_step(self, n)
+
+        def wrapper(*args, **kwargs):
+            calls["train"] += 1
+            return fn(*args, **kwargs)
+        return wrapper
+
+    def counting_solver(ctrl):
+        fn = orig_solver(ctrl)
+
+        def wrapper(*args, **kwargs):
+            calls["solve"] += 1
+            return fn(*args, **kwargs)
+        return wrapper
+
+    monkeypatch.setattr(VectorizedFLEngine, "_replicated_step",
+                        counting_step)
+    monkeypatch.setattr(phy_driver, "batched_solver", counting_solver)
+    scn = _tiny("churn-0.7", T=3)
+    run_grid_batched([scn], QUANTIZERS, POWERS, quick=False,
+                     replicates=R)
+    return calls
+
+
+@pytest.mark.parametrize("R", [1, 4])
+def test_one_dispatch_per_quantizer_and_power_spec_per_round(
+        monkeypatch, R):
+    """The acceptance criterion: O(quantizers + power specs) device
+    dispatches per round REGARDLESS of the replicate count."""
+    calls = _counting_run(monkeypatch, R)
+    T = 3
+    assert calls["train"] == len(QUANTIZERS) * T
+    assert calls["solve"] == len(POWERS) * T
+
+
+# ----------------------------------------------------- plumbing & API
+def test_scenario_replicates_field_routes_to_replicated_driver():
+    """A Scenario declaring replicates > 1 gets the replicate axis
+    without the caller passing replicates=."""
+    scn = dataclasses.replace(_tiny("monte-carlo-replicated", T=2),
+                              replicates=2)
+    res = run_grid_batched([scn], {"classic": ("classic", {})},
+                           {"ours": "bisection-lp"}, quick=False)
+    assert res[0].summary["replicates"] == 2.0
+    assert len(res[0].result) == 2
+
+
+def test_run_grid_passes_replicates_through():
+    scn = _tiny("paper-table3", T=2)
+    res = run_grid([scn], {"classic": ("classic", {})},
+                   {"ours": "bisection-lp"}, quick=False,
+                   phy_batched=True, replicates=2)
+    assert res[0].summary["replicates"] == 2.0
+    assert np.isfinite(res[0].summary["total_latency_s_ci95"])
+
+
+def test_run_grid_rejects_replicates_without_phy_batched():
+    with pytest.raises(ValueError, match="phy_batched"):
+        run_grid([_tiny("paper-table3")], {"classic": ("classic", {})},
+                 replicates=2)
+
+
+def test_replicated_mode_requires_fused_engine():
+    from repro.sim import EngineConfig
+    from repro.sim.scenarios import build_problem
+    from repro.fl.loop import FLConfig
+    from repro.core.quantize import ClassicQuantizer
+
+    scn = _tiny("paper-table2", T=1)
+    train, test, shards, cnn_cfg, chan = build_problem(scn)
+    fl = FLConfig(L=1, T=1, batch_size=8, seed=0)
+    eng = VectorizedFLEngine(train, test, shards, cnn_cfg,
+                             ClassicQuantizer(), None, chan, fl,
+                             engine=EngineConfig(fused=False))
+    with pytest.raises(ValueError, match="fused"):
+        eng.start_replicated_run(2)
+    with pytest.raises(ValueError, match="replicate"):
+        run_grid_batched([scn], {"classic": ("classic", {})},
+                         quick=False, replicates=0)

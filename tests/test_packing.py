@@ -1,11 +1,15 @@
 """Round-trip coverage for the wire-format bit packing
-(core/quantize/packing.py) across code widths and odd lengths."""
+(core/quantize/packing.py) across code widths and odd lengths, plus
+hypothesis property tests over arbitrary contents/lengths (skipped
+with a clear reason when hypothesis is not installed)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.quantize.packing import (pack_codes, pack_signs,
                                          unpack_codes, unpack_signs)
+
+from _hypothesis_compat import given, settings, st
 
 
 @pytest.mark.parametrize("d", [1, 31, 32, 33, 100, 127, 128, 129, 1000])
@@ -32,9 +36,77 @@ def test_code_roundtrip(b, n):
     np.testing.assert_array_equal(out, codes)
 
 
-def test_code_width_must_divide_32():
-    with pytest.raises(ValueError):
-        pack_codes(jnp.zeros(4, jnp.uint32), 5)
+@pytest.mark.parametrize("b", [0, 3, 5, 7, 24, 33])
+def test_code_width_must_divide_32(b):
+    """Widths that do not divide 32 would silently mis-split words;
+    both pack and unpack must reject them up front."""
+    with pytest.raises(ValueError, match="divide 32"):
+        pack_codes(jnp.zeros(4, jnp.uint32), b)
+    with pytest.raises(ValueError, match="divide 32"):
+        unpack_codes(jnp.zeros(1, jnp.uint32), b, 4)
+
+
+# ------------------------------------------------ edge / degenerate cases
+def test_sign_roundtrip_zero_length():
+    words = pack_signs(jnp.zeros((0,), jnp.float32))
+    assert words.shape == (0,) and words.dtype == jnp.uint32
+    assert unpack_signs(words, 0).shape == (0,)
+
+
+@pytest.mark.parametrize("b", [2, 4, 8, 16])
+def test_code_roundtrip_zero_length(b):
+    words = pack_codes(jnp.zeros((0,), jnp.uint32), b)
+    assert words.shape == (0,) and words.dtype == jnp.uint32
+    assert unpack_codes(words, b, 0).shape == (0,)
+
+
+def test_all_zero_sign_vector_decodes_minus_one():
+    """sign(0) transmits bit 0 and must decode as -1 (eq. 7's
+    x > 0 convention), for a full word and a ragged tail."""
+    for d in (32, 45):
+        out = np.asarray(unpack_signs(pack_signs(jnp.zeros(d)), d))
+        np.testing.assert_array_equal(out, -np.ones(d, np.float32))
+
+
+# -------------------------------------------------- hypothesis properties
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(allow_nan=False, allow_infinity=False,
+                          width=32),
+                min_size=0, max_size=200))
+def test_sign_roundtrip_property(xs):
+    """pack/unpack signs is a roundtrip of sign(x > 0) for ANY finite
+    float contents at ANY length (word-aligned or not)."""
+    x = np.asarray(xs, np.float32)
+    words = pack_signs(jnp.asarray(x))
+    assert words.shape == (-(-len(xs) // 32),)
+    out = np.asarray(unpack_signs(words, len(xs)))
+    np.testing.assert_array_equal(out, np.where(x > 0, 1.0, -1.0))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.sampled_from([2, 4, 8, 16]), st.integers(0, 300),
+       st.randoms(use_true_random=False))
+def test_code_roundtrip_property(b, n, rnd):
+    """pack/unpack codes is a roundtrip for every supported width and
+    length, including non-word-aligned tails."""
+    codes = np.asarray([rnd.randrange(2 ** b) for _ in range(n)],
+                       np.uint32)
+    words = pack_codes(jnp.asarray(codes), b)
+    per = 32 // b
+    assert words.shape == (-(-n // per),)
+    assert words.dtype == jnp.uint32
+    out = np.asarray(unpack_codes(words, b, n))
+    np.testing.assert_array_equal(out, codes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([2, 4, 8, 16]), st.integers(1, 100))
+def test_code_pack_all_zero_property(b, n):
+    """All-zero codes pack to all-zero words and roundtrip."""
+    words = pack_codes(jnp.zeros(n, jnp.uint32), b)
+    assert not np.asarray(words).any()
+    np.testing.assert_array_equal(np.asarray(unpack_codes(words, b, n)),
+                                  np.zeros(n, np.uint32))
 
 
 @pytest.mark.parametrize("G,d", [(2, 25600), (3, 4096), (2, 128),

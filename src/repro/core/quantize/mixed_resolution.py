@@ -15,6 +15,13 @@ Total payload (eq. below (7)): ``b_t = d (b s + 1 - s) + 32`` bits with
 radius.  Lemma 1 bounds the error: ``||delta - recon||_inf <=
 c(lambda_, b) ||delta||_inf`` — property-tested in tests/test_quantize.py.
 
+This module is the eager golden reference.  The production encode path
+is the fused quantize-to-wire kernel suite (``repro.kernels.mixed_res``
+via ``repro.kernels.ops.mixed_res_wire_aggregate``, DESIGN.md §9): two
+streaming passes to the packed wire planes, never materializing the
+dense ``recon`` — bit accounting exact vs this reference, recon within
+a documented ulp bound (tests/test_quant_kernels.py).
+
 Faithfulness notes:
 * the paper transmits ``r`` in 32 bits; reconstructing also needs the
   grid anchor ``dw_q`` (or equivalently ``||x||_inf``).  We follow the

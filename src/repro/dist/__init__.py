@@ -6,8 +6,12 @@ Lays the LM zoo and the FL aggregation state over a ``("data",
 tensor parallelism via GSPMD constraint propagation, the data(+pod)
 axes enumerate FL replicas ("users") whose local deltas meet at
 :func:`aggregate_delta` — the paper's quantized aggregation (§II-C)
-realized as a packed-sign-plane collective through the Pallas
-``signpack`` / ``sign_dequant_reduce`` kernels.
+realized as a packed-wire collective: by default the fused
+mixed-resolution encode/decode kernels (``repro.kernels.mixed_res``,
+DESIGN.md §9 — sign/hi/code planes straight to uint32 buffers, fused
+dequant+reduce, no dense recon), with the ``signpack`` /
+``sign_dequant_reduce`` sign-plane path kept as the jnp-anchored
+reference (``CompressorConfig.wire_path``).
 
 See DESIGN.md §6 for the mesh layout, sharding rules and wire format;
 tests/dist_checks.py exercises the whole surface on an 8-fake-device

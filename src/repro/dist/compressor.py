@@ -12,13 +12,24 @@ with the static-budget wire format (core/quantize/static_budget.py):
   magnitude elements are sent on a ``bits``-wide uniform grid anchored
   at the rank-k magnitude ``dw_q`` (high resolution); every element
   additionally contributes one sign bit, reconstructed as
-  ``± dw_q / 2`` outside the top-k support (low resolution).  The sign
-  plane is bit-packed through the Pallas ``signpack`` kernel and the
-  multi-peer weighted reduction runs in ``sign_dequant_reduce`` — the
-  packed uint32 words are the arrays the wire actually moves; the
-  sparse high-resolution correction rides a dense fp32 reduce whose
-  payload is *accounted* at the packed idx+code size (see DESIGN.md
-  §6 for the wire-format layout).
+  ``± dw_q / 2`` outside the top-k support (low resolution).
+
+  ``wire_path`` selects the realization of that exchange:
+
+  * ``"fused"`` (default) — the streaming mixed-res kernel suite
+    (``kernels/mixed_res.py``, DESIGN.md §9): after the top-k anchor,
+    one emit pass packs sign + hi-mask + b-bit code planes straight to
+    uint32 wire buffers and ``mixed_res_dequant_reduce`` fuses the
+    multi-peer decode with the weighted reduction — no dense
+    reconstruction is ever materialized, and in manual mode the
+    ``all_gather`` moves exactly the packed wire buffers;
+  * ``"reference"`` — the original jnp path (``mixed_recon`` dense
+    roundtrip + packed 1-bit plane through ``signpack`` /
+    ``sign_dequant_reduce`` + dense high-res correction), kept as the
+    golden reference the fused path is tested against.
+
+  Either way the payload is *accounted* at the packed
+  sign+idx+code size (see DESIGN.md §6 for the wire-format layout).
 
 Two calling conventions, one semantics:
 
@@ -42,7 +53,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize.static_budget import wire_bits
-from repro.kernels.ops import packed_sign_weighted_sum
+from repro.kernels.ops import (mixed_res_encode_anchored,
+                               mixed_res_wire_reduce,
+                               packed_sign_weighted_sum)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,10 +65,14 @@ class CompressorConfig:
     s_budget: float = 0.01       # high-resolution fraction (k = ceil(s*d))
     bits: int = 8                # grid width b; must divide 32
     exact_topk: bool = False     # False may use approx_max_k on TPU
+    wire_path: str = "fused"     # "fused" (mixed-res kernels) |
+                                 # "reference" (jnp golden path)
 
     def validate(self) -> None:
         if self.kind not in ("none", "mixed"):
             raise ValueError(f"unknown compressor kind {self.kind!r}")
+        if self.wire_path not in ("fused", "reference"):
+            raise ValueError(f"unknown wire_path {self.wire_path!r}")
         if self.kind == "mixed":
             if not (0.0 < self.s_budget <= 1.0):
                 raise ValueError(f"s_budget must be in (0, 1], got "
@@ -63,6 +80,10 @@ class CompressorConfig:
             if self.bits < 2 or 32 % self.bits != 0:
                 raise ValueError(f"bits must divide 32 and be >= 2, got "
                                  f"{self.bits}")
+            if self.wire_path == "fused" and self.bits > 16:
+                raise ValueError(
+                    "the fused wire kernels store codes in <= 16 bits; "
+                    f"got bits={self.bits} (use wire_path='reference')")
 
 
 def budget_k(d: int, s_budget: float) -> int:
@@ -147,11 +168,19 @@ def aggregate_flat_stacked(flat: jnp.ndarray, comp: CompressorConfig
                            ) -> jnp.ndarray:
     """[G, d] per-replica flat deltas -> [d] compressed mean (GSPMD)."""
     flat = flat.astype(jnp.float32)
-    G = flat.shape[0]
+    G, d = flat.shape
     if comp.kind == "none":
         return jnp.mean(flat, axis=0)
-    recon, dw_q = mixed_recon(flat, comp)
     weights = jnp.full((G,), 1.0 / G, jnp.float32)
+    if comp.wire_path == "fused":
+        # quantize-to-wire without a dense reconstruction: top-k picks
+        # the per-replica anchor, the emit pass packs the wire planes,
+        # and the decode+mean runs fused from the packed buffers
+        k = budget_k(d, comp.s_budget)
+        inf, dw_q = _rank_k_values(jnp.abs(flat), k, comp.exact_topk)
+        wire = mixed_res_encode_anchored(flat, inf, dw_q, comp.bits)
+        return mixed_res_wire_reduce(wire, weights, comp.bits, d)
+    recon, dw_q = mixed_recon(flat, comp)
     return signplane_weighted_aggregate(flat, recon, dw_q, weights)
 
 
@@ -164,6 +193,20 @@ def aggregate_flat_manual(flat: jnp.ndarray, comp: CompressorConfig,
     if comp.kind == "none":
         return jax.lax.pmean(flat, axes)
     d = flat.shape[0]
+    if comp.wire_path == "fused":
+        # encode the local shard to wire, then ALL-GATHER THE PACKED
+        # BUFFERS — the collective moves the uint32 planes + 8-lane
+        # header, i.e. exactly the accounted wire payload — and decode
+        # + mean locally in one fused kernel
+        k = budget_k(d, comp.s_budget)
+        inf, dw_q = _rank_k_values(jnp.abs(flat), k, comp.exact_topk)
+        wire = mixed_res_encode_anchored(flat[None], inf[None],
+                                         dw_q[None], comp.bits)
+        local = jax.tree_util.tree_map(lambda x: x[0], wire)
+        g_wire = jax.lax.all_gather(local, axes)
+        G = g_wire.head.shape[0]
+        weights = jnp.full((G,), 1.0 / G, jnp.float32)
+        return mixed_res_wire_reduce(g_wire, weights, comp.bits, d)
     recon, dw_q = mixed_recon(flat, comp)
     from repro.kernels.ops import _default_interpret, sign_pad_len
     from repro.kernels.quant_pack import sign_dequant_reduce, signpack

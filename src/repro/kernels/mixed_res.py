@@ -1,0 +1,285 @@
+"""Fused Pallas mixed-resolution encode/decode — quantize-to-wire in
+two streaming passes.
+
+The paper's adaptive mixed-resolution quantization (eqs. 6-8,
+``core/quantize/mixed_resolution.py``) is the per-user, per-round hot
+path of the reproduction.  The pure-jnp reference makes ~8 full passes
+over the d-element delta (abs/max/mask/min-where/round/three wheres),
+materializes a dense f32 reconstruction, and leaves wire packing
+(``core/quantize/packing.py``) as yet another downstream pass.  These
+kernels collapse the whole encode into two streaming passes over VMEM
+tiles and fuse the server-side decode with the multi-user weighted
+reduction, so the dense reconstruction never exists anywhere:
+
+* **pass A** (:func:`mixed_res_reduce`) — per-tile reductions of
+  ``||x||_inf`` (grid phase 0), then the threshold-masked minimum
+  ``dw_q`` and the high-resolution count ``dbar`` (grid phase 1, which
+  needs the phase-0 max), tree-combined across the grid into one
+  8-lane scalar row per user;
+* **pass B** (:func:`mixed_res_emit`) — consumes the per-user scalar
+  header and emits the packed wire format directly: uint32 sign-plane
+  words, uint32 high-resolution mask words (both in the ``signpack``
+  ``[W, 4]`` layout) and ``b``-bit magnitude codes packed
+  ``32 // bw`` per word in the ``packing.pack_codes`` layout;
+* **decode** (:func:`mixed_res_dequant_reduce`) — unpacks all G users'
+  wire buffers tile-by-tile and reduces ``sum_g w_g * recon_g`` in one
+  kernel; the per-user dense planes live only as one VMEM tile each.
+
+Layout convention (same as ``quant_pack.py``): the flat f32 vector is
+viewed as ``[W, 128]`` rows; sign/hi planes pack to ``[W, 4]`` uint32;
+the code plane packs to ``[W, 4 * bw]`` uint32 where ``bw`` is the
+code *storage* width — the smallest of {2, 4, 8, 16} that holds ``b``
+bits (the paper's b = 10 stores in 16; the *accounted* payload uses
+the true ``b``, see DESIGN.md section 9).  A leading user axis U rides
+the grid, never a vmap.
+
+TARGET is TPU; on CPU the kernels run under interpret=True (see
+``ops.py``).  The jnp oracles live in ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quant_pack import BLOCK_ROWS
+
+# wire-header lane assignment ([U, 8] f32 scalar rows)
+H_INF, H_DWQ, H_STEP, H_DBAR, H_LAM = 0, 1, 2, 3, 4
+HEADER_LANES = 8
+
+CODE_STORE_WIDTHS = (2, 4, 8, 16)
+
+
+def code_width(b: int) -> int:
+    """Storage width for b-bit codes: smallest of {2,4,8,16} >= b."""
+    for w in CODE_STORE_WIDTHS:
+        if w >= b:
+            return w
+    raise ValueError(f"wire kernels store codes in <= 16 bits, got b={b}")
+
+
+def code_words_per_row(b: int) -> int:
+    """uint32 words per 128-lane row of the packed code plane."""
+    return 128 * code_width(b) // 32
+
+
+def _valid_mask(i, bm: int, d_valid: int):
+    """[bm, 128] bool — element's flat index within the real (unpadded)
+    vector.  ``d_valid`` is static; callers skip the mask entirely when
+    the vector fills its padded view."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 128), 0)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bm, 128), 1)
+    flat = (i * bm + rows) * 128 + lanes
+    return flat < d_valid
+
+
+# ------------------------------------------------------------ pass A
+def _reduce_kernel(x_ref, out_ref, *, lam: float, bm: int, d_valid: int,
+                   masked: bool):
+    """Grid (U, 2, T).  Phase 0 accumulates ||x||_inf; phase 1 (which
+    reads the phase-0 result from the revisited output row) accumulates
+    the threshold-masked min ``dw_q`` and the high-res count ``dbar``.
+    out_ref: [1, 8] f32 per user — revisited across (phase, tile), so
+    it stays resident in VMEM for the whole per-user reduction."""
+    ph = pl.program_id(1)
+    i = pl.program_id(2)
+    absx = jnp.abs(x_ref[0])
+
+    @pl.when((ph == 0) & (i == 0))
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(ph == 0)
+    def _():
+        out_ref[0, H_INF] = jnp.maximum(out_ref[0, H_INF], jnp.max(absx))
+
+    @pl.when(ph == 1)
+    def _():
+        @pl.when(i == 0)
+        def _():
+            out_ref[0, H_DWQ] = jnp.inf
+
+        inf = out_ref[0, H_INF]
+        safe_inf = jnp.where(inf > 0, inf, 1.0)
+        # the same per-element division the jnp reference uses (NOT
+        # absx >= lam * inf, which rounds differently)
+        hi = (absx / safe_inf) >= lam
+        if masked:
+            hi = hi & _valid_mask(i, bm, d_valid)
+        out_ref[0, H_DWQ] = jnp.minimum(
+            out_ref[0, H_DWQ], jnp.min(jnp.where(hi, absx, jnp.inf)))
+        out_ref[0, H_DBAR] = out_ref[0, H_DBAR] + jnp.sum(
+            hi.astype(jnp.float32))
+
+
+def mixed_res_reduce(x: jnp.ndarray, lam: float, d_valid: int, *,
+                     interpret: bool = False,
+                     block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """x: [U, W, 128] f32 -> stats [U, 8] f32.
+
+    Lane H_INF holds ``||x||_inf``, H_DWQ the raw threshold-masked min
+    (``+inf`` when no element clears the threshold — callers map it to
+    0 like the jnp reference), H_DBAR the high-resolution count (exact
+    in f32 for d < 2**24).  ``d_valid`` is the unpadded length; pad
+    elements never enter the phase-1 mask."""
+    U, W, _ = x.shape
+    bm = min(block_rows, W)
+    assert W % bm == 0, (W, bm)
+    if not (0 < d_valid <= W * 128):
+        raise ValueError(f"d_valid={d_valid} outside (0, {W * 128}]")
+    if d_valid >= 2 ** 24:
+        raise ValueError("f32 dbar accumulator is exact only to 2**24")
+    kernel = functools.partial(
+        _reduce_kernel, lam=float(lam), bm=bm, d_valid=int(d_valid),
+        masked=d_valid != W * 128)
+    return pl.pallas_call(
+        kernel,
+        grid=(U, 2, W // bm),
+        in_specs=[pl.BlockSpec((1, bm, 128), lambda u, p, i: (u, i, 0))],
+        out_specs=pl.BlockSpec((1, HEADER_LANES),
+                               lambda u, p, i: (u, 0)),
+        out_shape=jax.ShapeDtypeStruct((U, HEADER_LANES), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+# ------------------------------------------------------------ pass B
+def _emit_kernel(x_ref, head_ref, signs_ref, hi_ref, codes_ref, *,
+                 bw: int, levels: int, anchored: bool, bm: int,
+                 d_valid: int, masked: bool):
+    """Grid (U, T): consume the scalar header, emit the wire tile."""
+    i = pl.program_id(1)
+    x = x_ref[0]
+    absx = jnp.abs(x)
+    inf = head_ref[0, H_INF]
+    dw_q = head_ref[0, H_DWQ]
+    step = head_ref[0, H_STEP]
+    safe_step = jnp.where(step > 0, step, 1.0)
+    if anchored:
+        hi = absx >= dw_q                       # static-budget rule
+    else:
+        safe_inf = jnp.where(inf > 0, inf, 1.0)
+        hi = (absx / safe_inf) >= head_ref[0, H_LAM]   # eq. (6)
+    if masked:
+        hi = hi & _valid_mask(i, bm, d_valid)
+
+    # b-bit magnitude code on the [dw_q, inf] grid; low-res elements
+    # would produce negative codes — masked to 0 before the uint cast.
+    # The clamp to the grid top is a no-op when the header's inf is the
+    # true max (codes never exceed `levels` then), but an anchored
+    # header from an approximate top-k (jax.lax.approx_max_k) can
+    # underestimate inf — an unclamped code would then spill shifted
+    # bits into NEIGHBORING code slots and corrupt other elements;
+    # clamped, the overshoot stays element-local (mag caps at inf),
+    # like the jnp reference's behaviour.
+    code = jnp.round((absx - dw_q) / safe_step)
+    code = jnp.minimum(jnp.where(hi, code, 0.0),
+                       float(levels)).astype(jnp.uint32)
+
+    shifts32 = jnp.arange(32, dtype=jnp.uint32)[None, None, :]
+    sbits = (x > 0).astype(jnp.uint32).reshape(bm, 4, 32)
+    signs_ref[0] = jnp.sum(sbits << shifts32, axis=-1, dtype=jnp.uint32)
+    hbits = hi.astype(jnp.uint32).reshape(bm, 4, 32)
+    hi_ref[0] = jnp.sum(hbits << shifts32, axis=-1, dtype=jnp.uint32)
+
+    per = 32 // bw                              # codes per uint32 word
+    cshift = (jnp.arange(per, dtype=jnp.uint32) * bw)[None, None, :]
+    cw = code.reshape(bm, 128 * bw // 32, per)
+    codes_ref[0] = jnp.sum(cw << cshift, axis=-1, dtype=jnp.uint32)
+
+
+def mixed_res_emit(x: jnp.ndarray, head: jnp.ndarray, b: int,
+                   d_valid: int, *, anchored: bool = False,
+                   interpret: bool = False,
+                   block_rows: int = BLOCK_ROWS):
+    """x: [U, W, 128] f32, head: [U, 8] f32 -> packed wire planes
+    (signs [U, W, 4], hi [U, W, 4], codes [U, W, 4*bw]) uint32.
+
+    ``anchored=False`` uses the paper's threshold rule
+    ``|x|/||x||_inf >= lambda`` (header lane H_LAM); ``anchored=True``
+    uses the static-budget rule ``|x| >= dw_q`` (repro.dist)."""
+    U, W, _ = x.shape
+    bm = min(block_rows, W)
+    assert W % bm == 0, (W, bm)
+    bw = code_width(b)
+    cpr = code_words_per_row(b)
+    kernel = functools.partial(
+        _emit_kernel, bw=bw, levels=2 ** b - 1, anchored=anchored,
+        bm=bm, d_valid=int(d_valid), masked=d_valid != W * 128)
+    return pl.pallas_call(
+        kernel,
+        grid=(U, W // bm),
+        in_specs=[pl.BlockSpec((1, bm, 128), lambda u, i: (u, i, 0)),
+                  pl.BlockSpec((1, HEADER_LANES), lambda u, i: (u, 0))],
+        out_specs=[pl.BlockSpec((1, bm, 4), lambda u, i: (u, i, 0)),
+                   pl.BlockSpec((1, bm, 4), lambda u, i: (u, i, 0)),
+                   pl.BlockSpec((1, bm, cpr), lambda u, i: (u, i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((U, W, 4), jnp.uint32),
+                   jax.ShapeDtypeStruct((U, W, 4), jnp.uint32),
+                   jax.ShapeDtypeStruct((U, W, cpr), jnp.uint32)],
+        interpret=interpret,
+    )(x, head)
+
+
+# ------------------------------------------------------------- decode
+def _dequant_reduce_kernel(signs_ref, hi_ref, codes_ref, head_ref,
+                           w_ref, out_ref, *, bw: int, bm: int):
+    """All G users' wire tiles -> one weighted-reduced f32 tile.  The
+    per-user dense reconstruction exists only as this VMEM tile."""
+    G = signs_ref.shape[0]
+    shifts32 = jnp.arange(32, dtype=jnp.uint32)[None, None, None, :]
+    one = jnp.uint32(1)
+
+    sbits = (signs_ref[...][..., None] >> shifts32) & one   # [G,bm,4,32]
+    signs = sbits.astype(jnp.float32).reshape(G, bm, 128) * 2.0 - 1.0
+    hbits = (hi_ref[...][..., None] >> shifts32) & one
+    hi = hbits.reshape(G, bm, 128) > 0
+
+    per = 32 // bw
+    cshift = (jnp.arange(per, dtype=jnp.uint32) * bw)[None, None, None, :]
+    cmask = jnp.uint32((1 << bw) - 1)
+    code = ((codes_ref[...][..., None] >> cshift) & cmask).astype(
+        jnp.float32).reshape(G, bm, 128)
+
+    dw_q = head_ref[:, H_DWQ].reshape(G, 1, 1)
+    step = head_ref[:, H_STEP].reshape(G, 1, 1)
+    # eq. (7)/(8): b-bit grid magnitude on the hi support, dw_q/2 off it
+    mag = jnp.where(hi, dw_q + code * step, dw_q * 0.5)
+    recon = signs * mag
+    out_ref[...] = jnp.einsum(
+        "g,gwl->wl", w_ref[...].reshape(G), recon,
+        preferred_element_type=jnp.float32)
+
+
+def mixed_res_dequant_reduce(signs: jnp.ndarray, hi: jnp.ndarray,
+                             codes: jnp.ndarray, head: jnp.ndarray,
+                             weights: jnp.ndarray, b: int, *,
+                             interpret: bool = False,
+                             block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
+    """signs/hi: [G, W, 4] u32, codes: [G, W, 4*bw] u32, head: [G, 8]
+    f32, weights: [G] f32 -> [W, 128] f32 = sum_g w_g * deq(wire_g).
+
+    Fuses per-user wire decoding with the weighted multi-user reduce:
+    the G dense f32 reconstruction planes never hit HBM."""
+    G, W, _ = signs.shape
+    bm = min(block_rows, W)
+    assert W % bm == 0, (W, bm)
+    bw = code_width(b)
+    cpr = code_words_per_row(b)
+    assert codes.shape == (G, W, cpr), (codes.shape, cpr)
+    kernel = functools.partial(_dequant_reduce_kernel, bw=bw, bm=bm)
+    return pl.pallas_call(
+        kernel,
+        grid=(W // bm,),
+        in_specs=[pl.BlockSpec((G, bm, 4), lambda i: (0, i, 0)),
+                  pl.BlockSpec((G, bm, 4), lambda i: (0, i, 0)),
+                  pl.BlockSpec((G, bm, cpr), lambda i: (0, i, 0)),
+                  pl.BlockSpec((G, HEADER_LANES), lambda i: (0, 0)),
+                  pl.BlockSpec((G, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bm, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((W, 128), jnp.float32),
+        interpret=interpret,
+    )(signs, hi, codes, head, weights.reshape(G, 1))

@@ -10,13 +10,31 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from typing import NamedTuple
+
+from . import ref as _ref
 from .flash_decode import flash_decode as _flash_decode
+from .mixed_res import (H_DBAR, H_DWQ, H_INF, H_LAM, H_STEP,
+                        mixed_res_dequant_reduce, mixed_res_emit,
+                        mixed_res_reduce)
 from .quant_pack import sign_dequant_reduce as _sdr
 from .quant_pack import signpack as _signpack
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _default_use_kernel(use_kernel: bool | None) -> bool:
+    """The fused wire path has two lowerings of the same streaming
+    pipeline: the Pallas kernels (the TPU target; run under
+    interpret=True on CPU — the parity suite pins them bit-identical
+    to the jnp lowering) and the jnp composition of the ref.py oracles
+    under the caller's jit (what CPU call sites actually execute —
+    interpret mode is a correctness harness, not a fast path)."""
+    if use_kernel is None:
+        return jax.default_backend() == "tpu"
+    return use_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -78,6 +96,141 @@ def packed_sign_weighted_sum(flat: jnp.ndarray, scales: jnp.ndarray,
     out = _sdr(words, scales.astype(jnp.float32), interpret=interp,
                block_rows=bm)
     return out.reshape(-1)[:d]
+
+
+# ------------------------------------------------- fused mixed-res wire
+class MixedResWire(NamedTuple):
+    """Packed wire buffers for U stacked deltas (what a multi-peer
+    aggregation actually transmits): sign plane + high-res mask plane
+    ([U, W, 4] u32, signpack layout), b-bit magnitude codes
+    ([U, W, 4*bw] u32, packing.pack_codes layout) and the per-user
+    scalar header row ([U, 8] f32 — inf, dw_q, step, dbar, lambda)."""
+    signs: jnp.ndarray
+    hi: jnp.ndarray
+    codes: jnp.ndarray
+    head: jnp.ndarray
+
+
+def wire_view(flat: jnp.ndarray):
+    """[U, d] f32 -> zero-padded [U, W, 128] rows (W per sign_pad_len,
+    so the kernels' block partition is always valid)."""
+    U, d = flat.shape
+    d_pad = sign_pad_len(d)
+    if d_pad != d:
+        flat = jnp.pad(flat, ((0, 0), (0, d_pad - d)))
+    return flat.reshape(U, d_pad // 128, 128)
+
+
+def mixed_res_encode(flat: jnp.ndarray, lambda_: float, b: int, *,
+                     interpret: bool | None = None,
+                     use_kernel: bool | None = None) -> MixedResWire:
+    """Threshold-rule (paper eq. 6) encode of U stacked deltas straight
+    to the packed wire format — two streaming passes, no dense recon.
+
+    flat: [U, d] f32.  Not jitted here; call sites trace it into their
+    own jitted steps."""
+    flat = flat.astype(jnp.float32)
+    U, d = flat.shape
+    if d >= 2 ** 24:
+        # both lowerings accumulate the high-res count in f32, which
+        # is exact only to 2**24 — refuse identically on every backend
+        # (the anchored encode has no count and no such limit)
+        raise ValueError(
+            f"mixed_res_encode: d={d} >= 2**24 would make the f32 "
+            "dbar count inexact; shard the delta first")
+    x3 = wire_view(flat)
+    interp = _default_interpret() if interpret is None else interpret
+    kern = _default_use_kernel(use_kernel)
+    if kern:
+        stats = mixed_res_reduce(x3, lambda_, d, interpret=interp)
+    else:
+        stats = _ref.mixed_res_reduce_ref(x3, lambda_, d)
+    # scalar epilogue — identical op sequence to the jnp reference
+    inf = stats[:, H_INF]
+    dw_q_raw = stats[:, H_DWQ]
+    dw_q = jnp.where(jnp.isfinite(dw_q_raw), dw_q_raw, 0.0)
+    step = (inf - dw_q) / (2 ** b - 1)
+    head = stats.at[:, H_DWQ].set(dw_q).at[:, H_STEP].set(step) \
+                .at[:, H_LAM].set(lambda_)
+    if kern:
+        signs, hi, codes = mixed_res_emit(x3, head, b, d,
+                                          interpret=interp)
+    else:
+        signs, hi, codes = _ref.mixed_res_emit_ref(x3, head, b, d)
+    return MixedResWire(signs=signs, hi=hi, codes=codes, head=head)
+
+
+def mixed_res_encode_anchored(flat: jnp.ndarray, inf: jnp.ndarray,
+                              dw_q: jnp.ndarray, b: int, *,
+                              interpret: bool | None = None,
+                              use_kernel: bool | None = None
+                              ) -> MixedResWire:
+    """Static-budget (``|x| >= dw_q``) encode used by repro.dist: the
+    grid anchor comes from an upstream top-k, so only the emit pass
+    runs.  flat: [U, d]; inf/dw_q: [U] f32."""
+    flat = flat.astype(jnp.float32)
+    U, d = flat.shape
+    x3 = wire_view(flat)
+    step = (inf - dw_q) / (2 ** b - 1)
+    head = jnp.zeros((U, 8), jnp.float32)
+    head = head.at[:, H_INF].set(inf).at[:, H_DWQ].set(dw_q) \
+               .at[:, H_STEP].set(step)
+    interp = _default_interpret() if interpret is None else interpret
+    if _default_use_kernel(use_kernel):
+        signs, hi, codes = mixed_res_emit(x3, head, b, d, anchored=True,
+                                          interpret=interp)
+    else:
+        signs, hi, codes = _ref.mixed_res_emit_ref(x3, head, b, d,
+                                                   anchored=True)
+    return MixedResWire(signs=signs, hi=hi, codes=codes, head=head)
+
+
+def mixed_res_wire_reduce(wire: MixedResWire, weights: jnp.ndarray,
+                          b: int, d: int, *,
+                          interpret: bool | None = None,
+                          use_kernel: bool | None = None) -> jnp.ndarray:
+    """Fused decode + weighted reduce: sum_g weights_g * deq(wire_g)
+    -> [d] f32, entirely from the packed buffers."""
+    interp = _default_interpret() if interpret is None else interpret
+    w = weights.astype(jnp.float32)
+    if _default_use_kernel(use_kernel):
+        out = mixed_res_dequant_reduce(wire.signs, wire.hi, wire.codes,
+                                       wire.head, w, b,
+                                       interpret=interp)
+    else:
+        out = _ref.mixed_res_dequant_reduce_ref(
+            wire.signs, wire.hi, wire.codes, wire.head, w, b)
+    return out.reshape(-1)[:d]
+
+
+def mixed_res_wire_aggregate(flat: jnp.ndarray, weights: jnp.ndarray,
+                             lambda_: float, b: int, *,
+                             interpret: bool | None = None,
+                             use_kernel: bool | None = None):
+    """The whole quantize-to-wire aggregation of the paper's scheme:
+    encode U stacked deltas (two streaming passes) and reduce
+    ``sum_g w_g * deq(wire_g)`` from the packed buffers.
+
+    Returns ``(agg [d], bits [U], aux)`` where ``bits`` replays the
+    reference accounting ``d (b s + 1 - s) + 32`` exactly (``dbar`` is
+    an exact integer count) and ``aux`` mirrors
+    ``mixed_resolution_quantize``'s aux dict.  The dense per-user
+    reconstructions are never materialized."""
+    U, d = flat.shape
+    wire = mixed_res_encode(flat, lambda_, b, interpret=interpret,
+                            use_kernel=use_kernel)
+    agg = mixed_res_wire_reduce(wire, weights, b, d,
+                                interpret=interpret,
+                                use_kernel=use_kernel)
+    inf = wire.head[:, H_INF]
+    dw_q = wire.head[:, H_DWQ]
+    dbar = wire.head[:, H_DBAR]
+    s = dbar / d
+    bits = d * (b * s + 1.0 - s) + 32.0
+    bits = jnp.where(inf > 0, bits, float(d) + 32.0)
+    aux = {"s": s, "dbar": dbar.astype(jnp.int32), "r": inf - dw_q,
+           "dw_q": dw_q, "inf": inf}
+    return agg, bits, aux
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "kv_block"))

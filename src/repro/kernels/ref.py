@@ -31,6 +31,111 @@ def sign_dequant_reduce_ref(words: jnp.ndarray, scales: jnp.ndarray
     return jnp.einsum("g,gwl->wl", scales, signs)
 
 
+# ------------------------------------------------- mixed-res wire path
+# jnp oracles for kernels/mixed_res.py, operating on the same [U, W,
+# 128] padded views and emitting bit-identical packed planes.  Besides
+# being the test ground truth, these compose (under one jit) into the
+# streaming fallback pipeline benchmarks/quant_kernels.py measures on
+# CPU, where interpret-mode Pallas is not a timing proxy.
+
+def _head(h, lane):
+    return h[:, lane].reshape(-1, 1, 1)
+
+
+def mixed_res_reduce_ref(x: jnp.ndarray, lam: float, d_valid: int
+                         ) -> jnp.ndarray:
+    """x: [U, W, 128] f32 -> stats [U, 8] f32 (see mixed_res_reduce)."""
+    from .mixed_res import H_DBAR, H_DWQ, H_INF, HEADER_LANES
+    U, W, _ = x.shape
+    absx = jnp.abs(x)
+    inf = jnp.max(absx, axis=(1, 2))
+    safe_inf = jnp.where(inf > 0, inf, 1.0)
+    hi = (absx / safe_inf[:, None, None]) >= lam
+    if d_valid != W * 128:
+        valid = jnp.arange(W * 128).reshape(1, W, 128) < d_valid
+        hi = hi & valid
+    dwq_raw = jnp.min(jnp.where(hi, absx, jnp.inf), axis=(1, 2))
+    dbar = jnp.sum(hi, axis=(1, 2)).astype(jnp.float32)
+    stats = jnp.zeros((U, HEADER_LANES), jnp.float32)
+    return stats.at[:, H_INF].set(inf).at[:, H_DWQ].set(dwq_raw) \
+                .at[:, H_DBAR].set(dbar)
+
+
+def mixed_res_emit_ref(x: jnp.ndarray, head: jnp.ndarray, b: int,
+                       d_valid: int, *, anchored: bool = False):
+    """x: [U, W, 128], head: [U, 8] -> (signs, hi, codes) packed u32
+    planes (see mixed_res_emit)."""
+    from .mixed_res import H_DWQ, H_INF, H_LAM, H_STEP, code_width
+    U, W, _ = x.shape
+    absx = jnp.abs(x)
+    dw_q, step = _head(head, H_DWQ), _head(head, H_STEP)
+    safe_step = jnp.where(step > 0, step, 1.0)
+    if anchored:
+        hi = absx >= dw_q
+    else:
+        inf = _head(head, H_INF)
+        safe_inf = jnp.where(inf > 0, inf, 1.0)
+        hi = (absx / safe_inf) >= _head(head, H_LAM)
+    if d_valid != W * 128:
+        hi = hi & (jnp.arange(W * 128).reshape(1, W, 128) < d_valid)
+    # clamp mirrors the kernel: element-local cap at the grid top when
+    # an approximate-top-k anchor header underestimates inf (otherwise
+    # overflowing codes spill bits into neighboring packed slots)
+    code = jnp.round((absx - dw_q) / safe_step)
+    code = jnp.minimum(jnp.where(hi, code, 0.0),
+                       float(2 ** b - 1)).astype(jnp.uint32)
+
+    shifts32 = jnp.arange(32, dtype=jnp.uint32)
+    pack1 = lambda bits: jnp.sum(
+        bits.astype(jnp.uint32).reshape(U, W, 4, 32) << shifts32,
+        axis=-1, dtype=jnp.uint32)
+    bw = code_width(b)
+    per = 32 // bw
+    cshift = (jnp.arange(per, dtype=jnp.uint32) * bw)
+    codes = jnp.sum(code.reshape(U, W, 128 * bw // 32, per) << cshift,
+                    axis=-1, dtype=jnp.uint32)
+    return pack1(x > 0), pack1(hi), codes
+
+
+def mixed_res_dequant_reduce_ref(signs: jnp.ndarray, hi: jnp.ndarray,
+                                 codes: jnp.ndarray, head: jnp.ndarray,
+                                 weights: jnp.ndarray, b: int
+                                 ) -> jnp.ndarray:
+    """Packed wire planes of G users -> [W, 128] f32 weighted reduce
+    (see mixed_res_dequant_reduce)."""
+    from .mixed_res import H_DWQ, H_STEP, code_width
+    G, W, _ = signs.shape
+    shifts32 = jnp.arange(32, dtype=jnp.uint32)
+    unpack1 = lambda words: (
+        (words[..., None] >> shifts32) & jnp.uint32(1)).reshape(W, 128)
+    bw = code_width(b)
+    per = 32 // bw
+    cshift = jnp.arange(per, dtype=jnp.uint32) * bw
+    cmask = jnp.uint32((1 << bw) - 1)
+
+    # unrolled accumulation over the (static) user axis with the
+    # weight folded into the grid scalars — one user's dense plane is
+    # live at a time, and on CPU this lowers ~4x faster than a
+    # G-contracted einsum (the kernel keeps the einsum — that shape
+    # feeds the TPU MXU).  ``w*dwq + code*(w*step)`` differs from the
+    # kernel's ``w * (dwq + code*step)`` by ~1 ulp per element; at
+    # w = 1 (the roundtrip-parity case) both are exact.
+    def one(g):
+        sb = unpack1(signs[g]) > 0
+        him = unpack1(hi[g]) > 0
+        code = ((codes[g][..., None] >> cshift) & cmask).astype(
+            jnp.float32).reshape(W, 128)
+        wdq = weights[g] * head[g, H_DWQ]
+        wst = weights[g] * head[g, H_STEP]
+        mag = jnp.where(him, wdq + code * wst, wdq * 0.5)
+        return jnp.where(sb, mag, -mag)              # mag >= 0
+
+    out = one(0)
+    for g in range(1, G):
+        out = out + one(g)
+    return out
+
+
 def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      length: jnp.ndarray) -> jnp.ndarray:
     """Single-token decode attention oracle.

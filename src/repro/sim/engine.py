@@ -33,6 +33,14 @@ Execution modes (EngineConfig):
   aggregation would move — plus a dense correction on the (sparse)
   high-resolution support.  Exercises the wire format end-to-end
   instead of only in unit tests.
+* ``aggregation="wire"`` (implies fused) — the full fused
+  quantize-to-wire path (kernels/mixed_res.py, DESIGN.md section 9):
+  the per-user quantization reductions, the packed sign/hi/code wire
+  planes and the rho-weighted multi-user dequantize+reduce all run in
+  the streaming mixed-resolution kernel suite, and the dense per-user
+  reconstructions are never materialized.  Payload bits and the aux
+  diagnostics replay the reference accounting exactly; the aggregated
+  update agrees with the fused dense path to a documented ulp bound.
 
 Beyond the paper's fixed setting the engine simulates per-round user
 churn (partial participation with re-normalized aggregation weights and
@@ -73,12 +81,15 @@ from repro.data.synthetic import ImageDataset
 # shared with repro.dist's cross-replica aggregation
 from repro.dist.compressor import \
     signplane_weighted_aggregate as _signplane_aggregate
+from repro.kernels.ops import mixed_res_wire_aggregate as _wire_aggregate
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Engine-level knobs beyond the paper's Algorithm 1."""
-    aggregation: str = "dense"       # "dense" | "signplane" (Pallas wire)
+    # "dense" | "signplane" (packed 1-bit plane + dense correction) |
+    # "wire" (fully fused quantize-to-wire, kernels/mixed_res.py)
+    aggregation: str = "dense"
     # fused=False (exact mode): only the K local AdaGrad runs share one
     # jit dispatch; quantization and aggregation replay the sequential
     # loop's eager per-op arithmetic — BIT-FOR-BIT equal to
@@ -102,8 +113,9 @@ class EngineConfig:
     # grouped-conv lowering as local_batching="vmap", so "auto"
     # (default) picks "map" (lax.map: compile the per-replicate graph
     # once, loop it on-device — still ONE dispatch per round) on CPU
-    # and "vmap" on accelerators.  aggregation="signplane" always runs
-    # "map": the Pallas wire kernels expect their unbatched windows.
+    # and "vmap" on accelerators.  aggregation="signplane"/"wire"
+    # always run "map": the Pallas wire kernels expect their unbatched
+    # windows.
     replicate_batching: str = "auto"  # "auto" | "map" | "vmap"
     participation: float = 1.0       # P(user active in a round) — churn
     redraw_channel_every: int = 0    # 0 = fixed realization (paper)
@@ -118,7 +130,7 @@ class EngineConfig:
 
     @property
     def effective_fused(self) -> bool:
-        return self.fused or self.aggregation == "signplane"
+        return self.fused or self.aggregation in ("signplane", "wire")
 
 
 def _subchannel(chan: ChannelRealization, idx: np.ndarray
@@ -230,7 +242,8 @@ class VectorizedFLEngine:
         from repro.fl.cnn import init_cnn  # local: repro.fl imports us
 
         self.engine_cfg = engine or EngineConfig()
-        if self.engine_cfg.aggregation not in ("dense", "signplane"):
+        if self.engine_cfg.aggregation not in ("dense", "signplane",
+                                               "wire"):
             raise ValueError(
                 f"unknown aggregation {self.engine_cfg.aggregation!r}")
         if self.engine_cfg.local_batching not in ("map", "vmap"):
@@ -240,11 +253,16 @@ class VectorizedFLEngine:
                                                       "vmap"):
             raise ValueError(f"unknown replicate_batching "
                              f"{self.engine_cfg.replicate_batching!r}")
-        if (self.engine_cfg.aggregation == "signplane"
+        if (self.engine_cfg.aggregation in ("signplane", "wire")
                 and quantizer.name != "mixed-resolution"):
             raise ValueError(
-                "signplane aggregation packs the mixed-resolution "
-                f"low-res plane; quantizer {quantizer.name!r} has none")
+                f"{self.engine_cfg.aggregation} aggregation packs the "
+                "mixed-resolution wire format; quantizer "
+                f"{quantizer.name!r} has none")
+        if self.engine_cfg.aggregation == "wire" and quantizer.b > 16:
+            raise ValueError(
+                "the wire kernels store magnitude codes in <= 16 bits; "
+                f"got b={quantizer.b}")
 
         self.dataset, self.test = dataset, test
         self.shards, self.cnn_cfg = shards, cnn_cfg
@@ -267,6 +285,12 @@ class VectorizedFLEngine:
         self.params = init_cnn(jax.random.PRNGKey(fl.seed), cnn_cfg)
         flat0, self.spec = flatten_pytree(self.params)
         self.d = int(flat0.size)
+        if self.engine_cfg.aggregation == "wire" and self.d >= 2 ** 24:
+            # the threshold encode's f32 high-res count is exact only
+            # to 2**24 — fail at construction, not mid-run in the jit
+            raise ValueError(
+                f"aggregation='wire' supports d < 2**24 (got d="
+                f"{self.d}); shard the model or use 'signplane'")
         self.qstate = quantizer.init_batched_state(self.K, self.d)
         self.comp_lat = computation_latency(fl.L, fl.dataset_size_for_comp,
                                             self.K)
@@ -342,10 +366,21 @@ class VectorizedFLEngine:
         aggregation + model update), returned UNJITTED so the replicate
         axis can vmap it before compilation."""
         q, spec, K = self.quantizer, self.spec, self.K
-        signplane = self.engine_cfg.aggregation == "signplane"
+        aggregation = self.engine_cfg.aggregation
 
         def step(params, qstate, xs, ys, weights, active):
             flat = self._batched_local(params, xs, ys)
+            if aggregation == "wire":
+                # fully fused quantize-to-wire: reductions, packed
+                # planes and the weighted dequant-reduce all happen in
+                # the mixed-res kernel suite; no dense recon, and no
+                # quantizer state (mixed-resolution is stateless)
+                agg, bits, aux = _wire_aggregate(flat, weights,
+                                                 q.lambda_, q.b)
+                params = jax.tree_util.tree_map(
+                    lambda p, u: p + u, params,
+                    unflatten_pytree(agg, spec))
+                return params, qstate, bits, aux
             res, new_qstate = q.batched(flat, qstate)
             if new_qstate is not None:
                 # absent users did not transmit: freeze their state
@@ -354,7 +389,7 @@ class VectorizedFLEngine:
                         jnp.reshape(active, (K,) + (1,) * (n.ndim - 1))
                         > 0, n, o),
                     new_qstate, qstate)
-            if signplane:
+            if aggregation == "signplane":
                 agg = _signplane_aggregate(flat, res.recon,
                                            res.aux["dw_q"], weights)
             else:
@@ -366,12 +401,17 @@ class VectorizedFLEngine:
         return step
 
     def _jit_fused_step(self, step):
+        # params and quantizer state are round-to-round carries: donate
+        # them so XLA reuses their buffers instead of copying every
+        # round (start_run hands the step private copies, so the
+        # engine's own init arrays survive repeated runs)
         if self._user_sharding is not None:
             us, rs = self._user_sharding, self._repl_sharding
             # params replicated; every stacked [K, ...] arg (quantizer
             # state, minibatches, weights, activity mask) user-sharded
-            return jax.jit(step, in_shardings=(rs, us, us, us, us, us))
-        return jax.jit(step)
+            return jax.jit(step, in_shardings=(rs, us, us, us, us, us),
+                           donate_argnums=(0, 1))
+        return jax.jit(step, donate_argnums=(0, 1))
 
     def _replicated_step(self, R: int):
         """The per-round step over a leading replicate axis R — ONE
@@ -410,19 +450,23 @@ class VectorizedFLEngine:
                 if mode == "auto":
                     mode = "vmap" if jax.default_backend() in (
                         "tpu", "gpu") else "map"
-                if self.engine_cfg.aggregation == "signplane":
+                if self.engine_cfg.aggregation in ("signplane", "wire"):
                     # the Pallas wire-format kernels expect their
                     # unbatched [G*W, 128] windows — never vmap them
                     mode = "map"
+                # the stacked params/qstate carries are donated round
+                # to round, same as the unreplicated fused step
                 if mode == "map":
                     # on-device loop INSIDE the one jitted dispatch:
                     # per-replicate convs keep the fast unbatched CPU
                     # lowering (see EngineConfig.replicate_batching)
                     self._repl_step_cache[R] = jax.jit(
                         lambda p, q, xs, ys, w, a: jax.lax.map(
-                            lambda args: fn(*args), (p, q, xs, ys, w, a)))
+                            lambda args: fn(*args), (p, q, xs, ys, w, a)),
+                        donate_argnums=(0, 1))
                 else:
-                    self._repl_step_cache[R] = jax.jit(jax.vmap(fn))
+                    self._repl_step_cache[R] = jax.jit(
+                        jax.vmap(fn), donate_argnums=(0, 1))
         return self._repl_step_cache[R]
 
     # ----------------------------------------------------------- rounds
@@ -472,8 +516,13 @@ class VectorizedFLEngine:
     # host solve of stage 3 with one batched device solve per round.
     def start_run(self) -> RunState:
         fl = self.fl
+        # private copies: the fused step donates its params/qstate
+        # inputs, and the engine's init arrays must survive re-runs
+        copy = lambda tr: jax.tree_util.tree_map(
+            lambda x: jnp.asarray(x).copy(), tr)
         return RunState(
-            params=self.params, qstate=self.qstate, chan=self.chan,
+            params=copy(self.params), qstate=copy(self.qstate),
+            chan=self.chan,
             rng=np.random.default_rng(fl.seed),   # sequential-loop stream
             part_rng=np.random.default_rng((fl.seed, 0x5EED)),
             test_x=jnp.asarray(self.test.x),

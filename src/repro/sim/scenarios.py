@@ -216,5 +216,13 @@ register_scenario(Scenario(
                 "signpack/sign_dequant_reduce wire format",
     M=None, K=20, T=40, aggregation="signplane"))
 
+register_scenario(Scenario(
+    name="fused-wire",
+    description="paper default on the fully fused quantize-to-wire "
+                "path: mixed-res encode, packed planes and weighted "
+                "dequant-reduce all in the streaming kernel suite "
+                "(kernels/mixed_res.py, DESIGN.md section 9)",
+    M=None, K=20, T=40, aggregation="wire"))
+
 for _scn in grid_scenarios():
     register_scenario(_scn)

@@ -1,0 +1,301 @@
+"""Parity battery for the fused mixed-resolution wire kernels
+(kernels/mixed_res.py + the ops.py wrappers) against the pure-jnp
+reference ``mixed_resolution_quantize`` / ``mixed_recon`` paths.
+
+Numerics contract (DESIGN.md section 9):
+
+* the packed wire planes (signs, hi mask, codes) and the scalar header
+  (inf, dw_q, step, dbar) are BIT-EXACT across the Pallas interpret
+  lowering, the jnp lowering, and the eager reference's reductions;
+* ``bits`` accounting is exact (dbar is an exact integer count);
+* the decoded reconstruction is bit-exact on the jnp lowering and
+  within 2 ulp of ``||x||_inf`` on the Pallas lowering (FMA
+  contraction of ``dw_q + code * step`` inside the kernel).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.quantize import pack_signs, unpack_codes, unpack_signs
+from repro.core.quantize.mixed_resolution import mixed_resolution_quantize
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.mixed_res import (H_DBAR, H_DWQ, H_INF, code_width,
+                                     code_words_per_row,
+                                     mixed_res_reduce)
+
+ULP_BOUND = 2  # Pallas-lowering recon bound, in ulps of ||x||_inf
+
+
+def heavy_tail(seed, U, d):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((U, d)).astype(np.float32)
+    spikes = rng.choice(d, size=max(1, d // 64), replace=False)
+    x[:, spikes] *= 50.0
+    return jnp.asarray(x)
+
+
+def reference(x, lam, b):
+    """Per-user eager reference results for stacked [U, d] deltas."""
+    return [mixed_resolution_quantize(x[u], lam, b)
+            for u in range(x.shape[0])]
+
+
+# --------------------------------------------------------------- pass A
+@pytest.mark.parametrize("d,lam", [(4096, 0.2), (1000, 0.05),
+                                   (257, 0.0), (8192, 0.9)])
+def test_reduce_matches_reference_exactly(d, lam):
+    """inf / dw_q / dbar from the streaming reduction == the jnp
+    reference's reductions, bit for bit (max/min are associative; the
+    count is an exact integer), including padded (d % tile != 0)."""
+    x = heavy_tail(0, 3, d)
+    x3 = ops.wire_view(x)
+    stats = mixed_res_reduce(x3, lam, d, interpret=True)
+    stats_ref = kref.mixed_res_reduce_ref(x3, lam, d)
+    np.testing.assert_array_equal(np.asarray(stats),
+                                  np.asarray(stats_ref))
+    refs = reference(x, lam, 8)
+    for u, r in enumerate(refs):
+        assert float(stats[u, H_INF]) == float(r.aux["inf"])
+        dwq_raw = float(stats[u, H_DWQ])
+        dwq = dwq_raw if np.isfinite(dwq_raw) else 0.0
+        assert dwq == float(r.aux["dw_q"])
+        assert int(stats[u, H_DBAR]) == int(r.aux["dbar"])
+
+
+# ------------------------------------------------- wire-format layout
+def test_wire_planes_match_core_packing():
+    """The emitted planes ARE the core/quantize/packing.py layouts:
+    signs unpack with unpack_signs, codes with unpack_codes."""
+    d, lam, b = 1000, 0.2, 8
+    x = heavy_tail(1, 2, d)
+    wire = ops.mixed_res_encode(x, lam, b, interpret=True,
+                                use_kernel=True)
+    assert wire.codes.shape[-1] == code_words_per_row(b)
+    bw = code_width(b)
+    for u in range(2):
+        np.testing.assert_array_equal(
+            np.asarray(wire.signs[u]).reshape(-1)[: -(-d // 32)],
+            np.asarray(pack_signs(x[u])))
+        signs = unpack_signs(wire.signs[u].reshape(-1), d)
+        np.testing.assert_array_equal(np.asarray(signs),
+                                      np.where(np.asarray(x[u]) > 0,
+                                               1.0, -1.0))
+        codes = unpack_codes(wire.codes[u].reshape(-1), bw,
+                             x.shape[1])
+        him = unpack_codes(wire.hi[u].reshape(-1), 1, d) > 0
+        r = mixed_resolution_quantize(x[u], lam, b)
+        absx = np.abs(np.asarray(x[u]))
+        inf = float(r.aux["inf"])
+        hi_ref = absx / inf >= lam
+        np.testing.assert_array_equal(np.asarray(him), hi_ref)
+        # hi codes reproduce the reference's rounded grid codes
+        step = float(r.aux["r"]) / (2 ** b - 1)
+        want = np.round((absx - float(r.aux["dw_q"]))
+                        / (step if step > 0 else 1.0))
+        np.testing.assert_array_equal(
+            np.asarray(codes[:d])[hi_ref], want[hi_ref].astype(np.uint32))
+
+
+def test_code_width_selection():
+    assert [code_width(b) for b in (2, 3, 4, 8, 10, 16)] == \
+        [2, 4, 4, 8, 16, 16]
+    with pytest.raises(ValueError):
+        code_width(17)
+
+
+# ----------------------------------------------------------- roundtrip
+@pytest.mark.parametrize("d,lam,b", [(4096, 0.2, 10), (1000, 0.05, 8),
+                                     (256, 0.0, 4), (513, 0.9, 2),
+                                     (2048, 0.3, 16)])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_roundtrip_matches_reference(d, lam, b, use_kernel):
+    """encode -> dequant(weight 1) == mixed_resolution_quantize.recon:
+    bit-exact on the jnp lowering, <= ULP_BOUND ulp on Pallas."""
+    x = heavy_tail(2, 1, d)
+    wire = ops.mixed_res_encode(x, lam, b, interpret=True,
+                                use_kernel=use_kernel)
+    out = ops.mixed_res_wire_reduce(wire, jnp.ones(1), b, d,
+                                    interpret=True,
+                                    use_kernel=use_kernel)
+    r = mixed_resolution_quantize(x[0], lam, b)
+    got, want = np.asarray(out), np.asarray(r.recon)
+    if use_kernel:
+        tol = ULP_BOUND * np.spacing(np.float32(r.aux["inf"]))
+        np.testing.assert_allclose(got, want, rtol=0, atol=tol)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_bits_accounting_exact(use_kernel):
+    """Payload bits replay the paper formula d(bs + 1 - s) + 32
+    bit-for-bit against the reference (incl. the all-zero branch)."""
+    d, lam, b = 3000, 0.2, 10
+    x = np.array(heavy_tail(3, 4, d))
+    x[2] = 0.0                                    # all-sign fallback
+    x[3, :] = -0.75                               # step == 0 grid
+    fx = jnp.asarray(x)
+    _, bits, aux = ops.mixed_res_wire_aggregate(
+        fx, jnp.full(4, 0.25), lam, b, interpret=True,
+        use_kernel=use_kernel)
+    refs = reference(fx, lam, b)
+    np.testing.assert_array_equal(
+        np.asarray(bits), np.asarray([float(r.bits) for r in refs]))
+    np.testing.assert_array_equal(
+        np.asarray(aux["s"]),
+        np.asarray([float(r.aux["s"]) for r in refs]))
+    np.testing.assert_array_equal(
+        np.asarray(aux["dw_q"]),
+        np.asarray([float(r.aux["dw_q"]) for r in refs]))
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_weighted_aggregate_matches_dense_einsum(use_kernel):
+    """sum_k w_k * deq(wire_k) from packed buffers == the dense
+    einsum over reference reconstructions (to the documented bound)."""
+    d, lam, b, U = 2048, 0.15, 8, 5
+    x = heavy_tail(4, U, d)
+    w = jnp.asarray(np.random.default_rng(4).uniform(0.05, 0.4, U),
+                    jnp.float32)
+    agg, _, _ = ops.mixed_res_wire_aggregate(x, w, lam, b,
+                                             interpret=True,
+                                             use_kernel=use_kernel)
+    refs = reference(x, lam, b)
+    want = jnp.einsum("k,kd->d", w, jnp.stack([r.recon for r in refs]))
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+
+
+# -------------------------------------------------- hypothesis battery
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(0.0, 0.99),
+       st.sampled_from([2, 4, 8, 10, 16]),
+       st.sampled_from([96, 257, 512, 1000, 1300]),
+       st.sampled_from(["normal", "zero", "constant", "one-spike"]))
+def test_roundtrip_property(seed, lam, b, d, shape):
+    """Edge-case sweep: all-zero deltas, step == 0 grids (constant
+    magnitudes), single-spike spectra, d not a multiple of the tile."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(d).astype(np.float32)
+    if shape == "zero":
+        x[:] = 0.0
+    elif shape == "constant":
+        x = np.sign(x) * 2.5
+        x[x == 0] = 2.5
+    elif shape == "one-spike":
+        x[:] = 0.0
+        x[int(rng.integers(d))] = 7.0
+    fx = jnp.asarray(x)[None]
+    wire = ops.mixed_res_encode(fx, lam, b, interpret=True,
+                                use_kernel=True)
+    wire_ref = ops.mixed_res_encode(fx, lam, b, use_kernel=False)
+    for a, bb in zip(wire, wire_ref):             # planes bit-exact
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+    out = ops.mixed_res_wire_reduce(wire, jnp.ones(1), b, d,
+                                    interpret=True, use_kernel=True)
+    r = mixed_resolution_quantize(fx[0], lam, b)
+    tol = ULP_BOUND * np.spacing(np.float32(max(float(r.aux["inf"]),
+                                                1e-30)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r.recon),
+                               rtol=0, atol=tol)
+
+
+# -------------------------------------------- anchored (repro.dist) path
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_anchored_matches_mixed_recon(use_kernel):
+    """The static-budget (top-k anchored) emit + fused dequant-mean
+    equals the dist reference mixed_recon roundtrip mean."""
+    from repro.dist.compressor import (CompressorConfig, budget_k,
+                                       mixed_recon, _rank_k_values)
+    G, d = 4, 2048
+    comp = CompressorConfig("mixed", s_budget=0.03, bits=8,
+                            exact_topk=True)
+    x = heavy_tail(5, G, d)
+    k = budget_k(d, comp.s_budget)
+    inf, dw_q = _rank_k_values(jnp.abs(x), k, True)
+    wire = ops.mixed_res_encode_anchored(x, inf, dw_q, comp.bits,
+                                         interpret=True,
+                                         use_kernel=use_kernel)
+    got = ops.mixed_res_wire_reduce(wire, jnp.full(G, 1.0 / G),
+                                    comp.bits, d, interpret=True,
+                                    use_kernel=use_kernel)
+    recon, _ = mixed_recon(x, comp)
+    want = jnp.mean(recon, axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-6, atol=2e-6)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_anchored_underestimated_inf_stays_element_local(use_kernel):
+    """An approx-top-k anchor can underestimate inf; overflowing codes
+    must clamp to the grid top instead of spilling shifted bits into
+    NEIGHBORING packed code slots (regression: unclamped emit
+    corrupted other elements' decoded values)."""
+    d, b = 256, 8
+    x = np.full(d, 0.5, np.float32)
+    x[5] = 100.0                       # true max, missed by the anchor
+    x[6] = 9.0                         # neighbor in the same code word
+    fx = jnp.asarray(x)[None]
+    inf, dw_q = jnp.asarray([10.0]), jnp.asarray([1.0])
+    wire = ops.mixed_res_encode_anchored(fx, inf, dw_q, b,
+                                         interpret=True,
+                                         use_kernel=use_kernel)
+    out = np.asarray(ops.mixed_res_wire_reduce(
+        wire, jnp.ones(1), b, d, interpret=True,
+        use_kernel=use_kernel))
+    step = (10.0 - 1.0) / (2 ** b - 1)
+    # neighbor decodes from ITS OWN code, unaffected by the overflow
+    np.testing.assert_allclose(
+        out[6], 1.0 + np.round((9.0 - 1.0) / step) * step, rtol=1e-6)
+    # the overflowing element caps at the grid top (element-local)
+    np.testing.assert_allclose(out[5], 1.0 + (2 ** b - 1) * step,
+                               rtol=1e-6)
+
+
+def test_threshold_encode_rejects_d_past_exact_count():
+    """The f32 dbar count is exact only to 2**24 — the threshold
+    encode must refuse identically on every backend/lowering."""
+    big = jnp.zeros((1, 2 ** 24), jnp.float32)
+    with pytest.raises(ValueError, match="2\\*\\*24"):
+        ops.mixed_res_encode(big, 0.2, 8, use_kernel=False)
+
+
+def test_dist_fused_wire_matches_reference_path():
+    """aggregate_flat_stacked: wire_path='fused' == 'reference' to
+    float32 roundoff (different reduce fusion, same arithmetic)."""
+    import dataclasses
+
+    from repro.dist.compressor import (CompressorConfig,
+                                       aggregate_flat_stacked)
+    x = heavy_tail(6, 6, 1500)
+    comp = CompressorConfig("mixed", s_budget=0.02, bits=4,
+                            exact_topk=True)
+    fused = aggregate_flat_stacked(x, comp)
+    refp = aggregate_flat_stacked(
+        x, dataclasses.replace(comp, wire_path="reference"))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(refp),
+                               rtol=2e-6, atol=2e-6)
+
+
+# ------------------------------------------------------- TPU tiling
+def test_kernel_tiling_is_tpu_shaped():
+    """The Pallas launches keep the quant_pack.py conventions: 128-lane
+    last dims, uint32 word planes, and VMEM-bounded tiles."""
+    from repro.kernels.mixed_res import BLOCK_ROWS, HEADER_LANES
+    d, b = 128 * 1024, 10
+    x = ops.wire_view(jnp.zeros((1, d), jnp.float32))
+    U, W, lanes = x.shape
+    assert lanes == 128 and W % BLOCK_ROWS == 0
+    bm = min(BLOCK_ROWS, W)
+    bw = code_width(b)
+    # per-tile VMEM residency: x tile + sign/hi/code tiles + header
+    tile_bytes = (bm * 128 * 4 + 2 * bm * 4 * 4
+                  + bm * code_words_per_row(b) * 4 + HEADER_LANES * 4)
+    assert tile_bytes < 2 ** 20            # well under ~16 MB VMEM
+    assert 128 * bw % 32 == 0              # code words tile the row
+    wire = ops.mixed_res_encode(jnp.ones((1, d)), 0.2, b,
+                                interpret=True, use_kernel=True)
+    assert wire.signs.dtype == jnp.uint32
+    assert wire.codes.shape == (1, W, code_words_per_row(b))

@@ -139,6 +139,26 @@ def test_topq_keeps_largest():
     np.testing.assert_allclose(jnp.where(mask, x, 0.0), res.recon)
 
 
+def test_topq_topk_threshold_matches_sort():
+    """The O(d log k) lax.top_k threshold equals the old full-sort
+    k-th order statistic — same recon/bits at small d, ties included."""
+    from repro.core.quantize.topq import topq_quantize
+    for seed, d, q in [(0, 97, 0.05), (1, 256, 0.01), (2, 512, 0.1)]:
+        x = rand_vec(seed, d=d)
+        res = topq_quantize(x, q)
+        absx = jnp.abs(x)
+        k = max(1, int(math.ceil(q * d)))
+        thresh_sort = jnp.sort(absx)[d - k]
+        recon_sort = jnp.where(absx >= thresh_sort, x, 0.0)
+        np.testing.assert_array_equal(np.asarray(res.recon),
+                                      np.asarray(recon_sort))
+    # explicit tie at rank k: both formulations keep every tied element
+    x = jnp.asarray([3.0, -3.0, 3.0, 0.5, -0.1, 0.0], jnp.float32)
+    res = topq_quantize(x, 2 / 6)
+    np.testing.assert_array_equal(
+        np.asarray(res.recon), np.asarray([3.0, -3.0, 3.0, 0, 0, 0]))
+
+
 def test_laq_skips_and_state():
     qz = LAQQuantizer(b=4, xi=1e6)  # huge xi -> always lazy after round 1
     x = rand_vec(0, d=256)

@@ -145,6 +145,52 @@ def test_signplane_aggregation_matches_dense(problem):
         np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
 
 
+def test_wire_aggregation_matches_dense(problem):
+    """The fully fused quantize-to-wire path (mixed-res kernel suite:
+    streaming reductions -> packed planes -> fused dequant+reduce, no
+    dense recon) reproduces the fused dense path: payload bits
+    bit-for-bit (exact integer dbar), params to float32 roundoff."""
+    train, test, cfg = problem
+    K = 6
+    shards = partition_iid(train, K)
+    fl = FLConfig(L=2, T=2, batch_size=16, alpha=0.02, eval_every=2,
+                  seed=0)
+    q = MixedResolutionQuantizer(lambda_=0.2, b=10)
+    dense = VectorizedFLEngine(
+        train, test, shards, cfg, q, None, None, fl,
+        engine=EngineConfig(fused=True)).run()
+    wire = VectorizedFLEngine(
+        train, test, shards, cfg, q, None, None, fl,
+        engine=EngineConfig(aggregation="wire")).run()
+    np.testing.assert_array_equal(dense.logs[0].bits_per_user,
+                                  wire.logs[0].bits_per_user)
+    for a, b in zip(_leaves(dense.params), _leaves(wire.params)):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
+
+
+def test_fused_step_donation_reusable_and_warning_free(problem):
+    """The fused step donates its params/qstate carries; the engine
+    must stay re-runnable (start_run hands it private copies) and the
+    donation must be clean — no 'donated buffer' XLA warnings."""
+    import warnings as _warnings
+
+    train, test, cfg = problem
+    shards = partition_iid(train, 4)
+    fl = FLConfig(L=1, T=2, batch_size=8, eval_every=2, seed=0)
+    eng = VectorizedFLEngine(
+        train, test, shards, cfg, MixedResolutionQuantizer(0.2, 10),
+        None, None, fl, engine=EngineConfig(fused=True))
+    with _warnings.catch_warnings(record=True) as caught:
+        _warnings.simplefilter("always")
+        first = eng.run()
+        second = eng.run()          # donated inputs must not leak back
+    donated = [str(w.message) for w in caught
+               if "donat" in str(w.message).lower()]
+    assert donated == [], donated
+    for a, b in zip(_leaves(first.params), _leaves(second.params)):
+        np.testing.assert_array_equal(a, b)
+
+
 def test_signplane_rejects_non_mixed_quantizer(problem):
     train, test, cfg = problem
     shards = partition_iid(train, 4)
@@ -168,7 +214,7 @@ def test_scenario_registry_contents():
     # paper operating points + the new workloads + the K/M grid
     for expected in ["paper-table2", "paper-table3", "churn-0.7",
                      "monte-carlo-channel", "hetero-data",
-                     "signplane-wire", "grid-K20-M16"]:
+                     "signplane-wire", "fused-wire", "grid-K20-M16"]:
         assert expected in names, expected
     with pytest.raises(KeyError):
         get_scenario("does-not-exist")

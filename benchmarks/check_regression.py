@@ -28,7 +28,11 @@ import sys
 def _load(path: str) -> dict:
     with open(path) as f:
         data = json.load(f)
-    return {r["name"]: r for r in data["benches"]}
+    # tolerate schema growth: unknown top-level keys (env metadata in
+    # "meta", future sections) and records without a name are ignored —
+    # the gate only contracts on named bench records
+    return {r["name"]: r for r in data.get("benches", [])
+            if isinstance(r, dict) and "name" in r}
 
 
 def main() -> None:

@@ -9,11 +9,19 @@ columns — that the workflow uploads as an artifact and feeds to
 ``benchmarks.sweep_sanity`` (which also gates on CI-width finiteness):
 
     PYTHONPATH=src python -m benchmarks.mc_sweep runs/mc_sweep.csv
+
+The sweep runs under an obs session (repro.obs): next to the CSV it
+writes ``<base>_trace.jsonl`` (the raw event stream) and
+``<base>_phases.txt`` (the rendered phase-time breakdown + per-round
+table), both uploaded by the weekly workflow.
 """
 from __future__ import annotations
 
+import os
 import sys
 
+from repro import obs
+from repro.obs.report import load_events, render_report
 from repro.sim import run_grid_batched
 
 SCENARIOS = ["monte-carlo-channel", "churn-0.7"]
@@ -24,8 +32,16 @@ REPLICATES = 4
 
 
 def main(out_csv: str = "runs/mc_sweep.csv") -> None:
-    results = run_grid_batched(SCENARIOS, QUANTIZERS, POWERS, quick=True,
-                               out_csv=out_csv, replicates=REPLICATES)
+    base = os.path.splitext(out_csv)[0]
+    trace = base + "_trace.jsonl"
+    with obs.session(jsonl=trace, memory=False):
+        results = run_grid_batched(SCENARIOS, QUANTIZERS, POWERS,
+                                   quick=True, out_csv=out_csv,
+                                   replicates=REPLICATES)
+    report = render_report(load_events(trace))
+    with open(base + "_phases.txt", "w") as f:
+        f.write(report + "\n")
+    print(report)
     for r in results:
         row = r.row()
         print(f"{row['scenario']},{row['quantizer']},{row['power']}: "
@@ -33,7 +49,7 @@ def main(out_csv: str = "runs/mc_sweep.csv") -> None:
               f"total_latency={row['total_latency_s']:.3f}s"
               f"±{row['total_latency_s_ci95']:.3f} "
               f"(R={row['replicates']:.0f}) max_p={row['max_p']:.4f}")
-    print(f"wrote {len(results)} rows to {out_csv}")
+    print(f"wrote {len(results)} rows to {out_csv}, trace to {trace}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,34 @@
+"""Tier-1 observability trace — the CI ``obs`` job's entry point.
+
+Runs one quick batched-driver cell (paper-table3, mixed-resolution
+quantizer, bisection-LP power control) under an obs session and writes
+the JSONL event stream CI uploads as the ``tier1-obs-trace`` artifact,
+then prints the rendered report (per-round phase timings, straggler
+percentiles, payload bits, solver iteration counts) so the job log is
+readable without downloading anything:
+
+    PYTHONPATH=src python -m benchmarks.obs_trace runs/tier1_trace.jsonl
+"""
+from __future__ import annotations
+
+import sys
+
+from repro import obs
+from repro.obs.report import load_events, render_report
+from repro.sim import run_grid_batched
+
+SCENARIOS = ["paper-table3"]
+QUANTIZERS = {"mixed": ("mixed-resolution", {"lambda_": 0.2, "b": 10})}
+POWERS = {"ours": "bisection-lp"}
+
+
+def main(trace: str = "runs/tier1_trace.jsonl") -> None:
+    with obs.session(jsonl=trace, memory=False):
+        results = run_grid_batched(SCENARIOS, QUANTIZERS, POWERS,
+                                   quick=True)
+    print(render_report(load_events(trace)))
+    print(f"\n{len(results)} cells; trace written to {trace}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

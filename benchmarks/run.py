@@ -24,6 +24,24 @@ import time
 import traceback
 
 
+def _env_meta() -> dict:
+    """Environment stamp for emitted JSON: which jax/backend produced
+    the numbers (regression diffs across environments are expected, and
+    the gate needs to see that in the artifact, not guess)."""
+    import platform
+
+    meta = {"python": platform.python_version()}
+    try:
+        import jax
+        meta.update(jax_version=jax.__version__,
+                    backend=jax.default_backend(),
+                    device_count=jax.device_count(),
+                    x64=bool(jax.config.jax_enable_x64))
+    except Exception as e:          # stamp what we can, never crash
+        meta["jax_error"] = repr(e)[:200]
+    return meta
+
+
 def _parse_row(line: str) -> dict:
     name, us, derived = line.split(",", 2)
     try:
@@ -90,8 +108,8 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"benches": records,
-                       "meta": {"quick": quick,
-                                "groups": selected}}, f, indent=2)
+                       "meta": {"quick": quick, "groups": selected,
+                                **_env_meta()}}, f, indent=2)
         return   # statuses recorded; the gate owns pass/fail
     if failed:
         sys.exit(1)

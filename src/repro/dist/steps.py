@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs as _obs
 from repro.launch.inputs import serving_window
 from repro.models.config import InputShape, ModelConfig
 from repro.models.sharding_ctx import logical_axis_rules
@@ -62,6 +63,12 @@ def microbatch(batch: Any, L: int) -> Any:
                 f"global batch {B} not divisible by L_local={L}")
         return leaf.reshape((L, B // L) + leaf.shape[1:])
     return jax.tree_util.tree_map(one, batch)
+
+
+# per-build retrace-probe ordinal: each built step gets its own probe
+# name, so two builds (different configs) don't read as one step
+# silently retracing
+_STEP_ORDINAL = [0]
 
 
 def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
@@ -129,9 +136,15 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
                 "wire_bits_per_replica": info["wire_bits_per_replica"],
                 "delta_dim": info["d"],
             }
+            _obs.jit_tap("dist.train_step",
+                         {"loss": metrics["loss"],
+                          "wire_bits_per_replica":
+                              metrics["wire_bits_per_replica"],
+                          "replicas": G})
             return new_params, metrics
 
-    return step
+    _STEP_ORDINAL[0] += 1
+    return _obs.retrace_probe(f"dist.train_step{_STEP_ORDINAL[0]}")(step)
 
 
 def build_prefill_step(cfg: ModelConfig, mesh: Mesh,

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 
 from typing import NamedTuple
 
+from repro import obs as _obs
+
 from . import ref as _ref
 from .flash_decode import flash_decode as _flash_decode
 from .mixed_res import (H_DBAR, H_DWQ, H_INF, H_LAM, H_STEP,
@@ -111,6 +113,25 @@ class MixedResWire(NamedTuple):
     head: jnp.ndarray
 
 
+def _tap_wire(name: str, users: int, dense_bytes: int,
+              wire: "MixedResWire") -> None:
+    """Stream the wire path's traffic to the active obs session: bytes
+    in/out per fused encode/decode launch (static shape products, so
+    the tap carries no device values beyond the callback token; the
+    report CLI turns totals into attained vs roofline bandwidth).
+    Trace-time gated — stages nothing without a session."""
+    if not _obs.jit_stream_enabled():
+        return
+    packed = sum(int(a.size) * a.dtype.itemsize
+                 for a in (wire.signs, wire.hi, wire.codes, wire.head))
+    if name == "wire.encode":
+        _obs.jit_tap(name, {"bytes_in": dense_bytes,
+                            "bytes_out": packed, "users": users})
+    else:
+        _obs.jit_tap(name, {"bytes_in": packed,
+                            "bytes_out": dense_bytes, "users": users})
+
+
 def wire_view(flat: jnp.ndarray):
     """[U, d] f32 -> zero-padded [U, W, 128] rows (W per sign_pad_len,
     so the kernels' block partition is always valid)."""
@@ -157,7 +178,9 @@ def mixed_res_encode(flat: jnp.ndarray, lambda_: float, b: int, *,
                                           interpret=interp)
     else:
         signs, hi, codes = _ref.mixed_res_emit_ref(x3, head, b, d)
-    return MixedResWire(signs=signs, hi=hi, codes=codes, head=head)
+    wire = MixedResWire(signs=signs, hi=hi, codes=codes, head=head)
+    _tap_wire("wire.encode", int(U), flat.size * 4, wire)
+    return wire
 
 
 def mixed_res_encode_anchored(flat: jnp.ndarray, inf: jnp.ndarray,
@@ -182,7 +205,9 @@ def mixed_res_encode_anchored(flat: jnp.ndarray, inf: jnp.ndarray,
     else:
         signs, hi, codes = _ref.mixed_res_emit_ref(x3, head, b, d,
                                                    anchored=True)
-    return MixedResWire(signs=signs, hi=hi, codes=codes, head=head)
+    wire = MixedResWire(signs=signs, hi=hi, codes=codes, head=head)
+    _tap_wire("wire.encode", int(U), flat.size * 4, wire)
+    return wire
 
 
 def mixed_res_wire_reduce(wire: MixedResWire, weights: jnp.ndarray,
@@ -200,6 +225,7 @@ def mixed_res_wire_reduce(wire: MixedResWire, weights: jnp.ndarray,
     else:
         out = _ref.mixed_res_dequant_reduce_ref(
             wire.signs, wire.hi, wire.codes, wire.head, w, b)
+    _tap_wire("wire.decode", int(wire.head.shape[0]), d * 4, wire)
     return out.reshape(-1)[:d]
 
 

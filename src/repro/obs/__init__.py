@@ -1,0 +1,33 @@
+"""repro.obs — jit-safe structured telemetry (DESIGN.md §10).
+
+Quickstart::
+
+    from repro import obs
+
+    with obs.session(jsonl="runs/trace.jsonl") as sess:
+        results = run_grid_batched(...)      # instrumented layers emit
+    # then: python -m repro.obs.report runs/trace.jsonl
+
+Host-side API: :func:`record` (one event), :func:`counter`
+(accumulating), :func:`scope` (phase wall-clock with a
+``block_until_ready`` boundary), :func:`context` (tag everything in a
+block), :func:`round_scope` (round tag + optional ``jax.profiler``
+capture).  In-jit API: :func:`jit_tap` — streams values out of a
+compiled step via ``jax.debug.callback``, gated at trace time so that
+with no active session the compiled program is bit-identical to
+uninstrumented code (the zero-overhead contract).
+
+``retrace_probe`` wraps step functions before ``jax.jit`` and counts
+compilations, flagging silent retrace storms.
+"""
+from .core import (ObsSession, active_session, context, counter, enabled,
+                   jit_stream_enabled, jit_tap, record, session)
+from .trace import (reset_retrace_counts, retrace_counts, retrace_probe,
+                    round_scope, scope)
+
+__all__ = [
+    "ObsSession", "active_session", "context", "counter", "enabled",
+    "jit_stream_enabled", "jit_tap", "record", "reset_retrace_counts",
+    "retrace_counts", "retrace_probe", "round_scope", "scope",
+    "session",
+]

@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
+
 from .channel import ChannelBatch, uplink_latency_batch
 
 
@@ -164,6 +166,7 @@ def eta_upper_bound_batch(cb: ChannelBatch, bits: jnp.ndarray,
 
 # --------------------------------------------------------- bisection-LP
 @partial(jax.jit, static_argnames=("max_iters",))
+@_obs.retrace_probe("phy.bisection_core")
 def _bisection_core(cb: ChannelBatch, bits, mask, eps_rel, max_iters):
     B_tau = cb.pre_log
     K = cb.K
@@ -214,8 +217,12 @@ def _bisection_core(cb: ChannelBatch, bits, mask, eps_rel, max_iters):
               jnp.zeros_like(hi0), jnp.zeros_like(hi0, dtype=jnp.int32))
     lo, hi, best_p, best_eta, iters = jax.lax.while_loop(cond, body,
                                                          state0)
+    # convergence state for telemetry/diagnostics: a cell that still had
+    # gap > eps when the shared loop stopped hit max_iters
     return best_p, {"eta": best_eta,
-                    "bisection_iters": iters.astype(bits.dtype)}
+                    "bisection_iters": iters.astype(bits.dtype),
+                    "bisection_gap": hi - lo,
+                    "bisection_converged": (hi - lo) <= eps}
 
 
 def bisection_solve(cb: ChannelBatch, bits: jnp.ndarray,
@@ -235,6 +242,7 @@ def bisection_solve(cb: ChannelBatch, bits: jnp.ndarray,
 
 # ----------------------------------------------------------- dinkelbach
 @partial(jax.jit, static_argnames=("outer", "inner", "grad_mode"))
+@_obs.retrace_probe("phy.dinkelbach_core")
 def _dinkelbach_core(cb: ChannelBatch, bits, mask, p_circuit_w, lr, tol,
                      outer, inner, grad_mode):
     grad = _grad_fn(grad_mode)
@@ -247,7 +255,7 @@ def _dinkelbach_core(cb: ChannelBatch, bits, mask, p_circuit_w, lr, tol,
     lam0 = numer(p0) / denom(p0)
 
     def outer_step(carry, _):
-        p, lam, p_best, lam_best, done, used = carry
+        p, lam, p_best, lam_best, done, used, f_last, safeguard = carry
 
         # inner: max_p numer(p) - lam * denom(p) by projected ascent
         # (lam is [B]; the FD perturbation axis is vmapped out, so q
@@ -274,14 +282,24 @@ def _dinkelbach_core(cb: ChannelBatch, bits, mask, p_circuit_w, lr, tol,
         improved = ~done & (lam_new > lam_best)
         p_best = jnp.where(improved[..., None], p, p_best)
         lam_best = jnp.where(improved, lam_new, lam_best)
+        # diagnostics (read-only w.r.t. the p/lam trajectory): the last
+        # Dinkelbach residual |f| before convergence and how often the
+        # best-iterate safeguard had to reject a non-improving step
+        f_last = jnp.where(done, f_last, jnp.abs(f))
+        safeguard = safeguard + jnp.where(~done & ~improved, 1.0, 0.0)
         done = done | (~done & (jnp.abs(f) < tol))
-        return (p, lam, p_best, lam_best, done, used), lam_best
+        return (p, lam, p_best, lam_best, done, used, f_last,
+                safeguard), lam_best
 
     carry0 = (p0, lam0, p0, lam0, jnp.zeros(lam0.shape, dtype=bool),
+              jnp.zeros_like(lam0), jnp.full_like(lam0, jnp.inf),
               jnp.zeros_like(lam0))
-    (_, _, p_best, lam_best, _, used), trace = jax.lax.scan(
-        outer_step, carry0, None, length=outer)
+    (_, _, p_best, lam_best, done, used, f_last, safeguard), trace = \
+        jax.lax.scan(outer_step, carry0, None, length=outer)
     info = {"energy_efficiency": lam_best, "dinkelbach_iters": used,
+            "dinkelbach_converged": done,
+            "dinkelbach_residual": f_last,
+            "dinkelbach_safeguard": safeguard,
             "ee_trace": jnp.moveaxis(trace, 0, -1)}  # [B, outer]
     return p_best, info
 
@@ -335,9 +353,11 @@ def _expand(cb: ChannelBatch, mask: jnp.ndarray):
 
 
 @partial(jax.jit, static_argnames=("iters", "grad_mode"))
+@_obs.retrace_probe("phy.maxsum_core")
 def _maxsum_core(cb: ChannelBatch, mask, starts, lr, iters, grad_mode):
     grad = _grad_fn(grad_mode)
-    cb_e, mask_e = _expand(_normalize(cb), mask)
+    cbn = _normalize(cb)
+    cb_e, mask_e = _expand(cbn, mask)
     obj = _sum_rate_obj(cb_e, mask_e)
 
     def ascent(_, p):
@@ -348,7 +368,15 @@ def _maxsum_core(cb: ChannelBatch, mask, starts, lr, iters, grad_mode):
     best = jnp.argmax(v, axis=-1)                        # first max wins
     p_best = jnp.take_along_axis(p_fin, best[..., None, None],
                                  axis=-2)[..., 0, :]
-    return p_best, {"sum_rate": jnp.max(v, axis=-1)}
+    # first-order stationarity of the winning restart (diagnostic only;
+    # computed at p_best, so the ascent trajectory is untouched)
+    g_best = grad(_sum_rate_obj(cbn, mask), p_best, mask)
+    return p_best, {"sum_rate": jnp.max(v, axis=-1),
+                    "maxsum_grad_norm":
+                        jnp.linalg.norm(g_best, axis=-1),
+                    "maxsum_iters":
+                        jnp.full(v.shape[:-1], float(iters),
+                                 dtype=starts.dtype)}
 
 
 def maxsum_solve(cb: ChannelBatch, bits: jnp.ndarray,

@@ -82,6 +82,7 @@ from repro.data.synthetic import ImageDataset
 from repro.dist.compressor import \
     signplane_weighted_aggregate as _signplane_aggregate
 from repro.kernels.ops import mixed_res_wire_aggregate as _wire_aggregate
+from repro import obs as _obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +128,12 @@ class EngineConfig:
     # single-device (default); ignored with a warning unless the
     # data-axis size divides K evenly.
     mesh: Optional[object] = None
+    # Round logging.  Every finished round is emitted to the active
+    # repro.obs session (no-op without one); verbose=True additionally
+    # prints the quickstart's per-eval-round console line (same as
+    # run(verbose=True)), throttled to every log_every-th eval round.
+    verbose: bool = False
+    log_every: int = 1
 
     @property
     def effective_fused(self) -> bool:
@@ -224,6 +231,12 @@ class ReplicatedRunState:
 _REPL_TAG = 0x4D43                  # "MC"
 _REPL_CHANNEL_SEED_STRIDE = 1 << 20
 
+# ordinal for per-instance obs retrace-probe names: a grid builds one
+# engine per quantizer and each one legitimately traces its step once,
+# so probe counts must not aggregate across instances (a shared name
+# would read as a retrace storm)
+_ENGINE_ORDINAL = [0]
+
 
 class VectorizedFLEngine:
     """Algorithm 1 with all K users vectorized into one step per round.
@@ -294,6 +307,8 @@ class VectorizedFLEngine:
         self.qstate = quantizer.init_batched_state(self.K, self.d)
         self.comp_lat = computation_latency(fl.L, fl.dataset_size_for_comp,
                                             self.K)
+        _ENGINE_ORDINAL[0] += 1
+        self._obs_name = f"engine{_ENGINE_ORDINAL[0]}[{quantizer.name}]"
         self._user_sharding, self._repl_sharding = self._user_shardings()
         if self.engine_cfg.effective_fused:
             self._train_flat = None
@@ -354,7 +369,8 @@ class VectorizedFLEngine:
         delta flattening -> [K, d].  Quantization/aggregation stay
         eager so the dense path replays the sequential loop's per-op
         rounding exactly (see module docstring)."""
-        fn = lambda params, xs, ys: self._batched_local(params, xs, ys)
+        fn = _obs.retrace_probe(f"sim.train_flat/{self._obs_name}")(
+            lambda params, xs, ys: self._batched_local(params, xs, ys))
         if self._user_sharding is not None:
             return jax.jit(fn, in_shardings=(
                 self._repl_sharding, self._user_sharding,
@@ -368,6 +384,25 @@ class VectorizedFLEngine:
         q, spec, K = self.quantizer, self.spec, self.K
         aggregation = self.engine_cfg.aggregation
 
+        # per-round straggler/payload stats streamed from INSIDE the
+        # compiled step via jax.debug.callback (repro.obs jit tap) —
+        # gated at trace time, so without an active session the step
+        # compiles to the identical program (tests/test_obs.py)
+        def tap(bits, aux, active):
+            # same masking as RoundWork.bits_np: absent users carry 0
+            masked = bits * active
+            stats = {"bits_min": jnp.min(masked),
+                     "bits_median": jnp.median(masked),
+                     "bits_p95": jnp.percentile(masked, 95.0),
+                     "bits_mean": jnp.mean(masked),
+                     "active_frac": jnp.mean(active)}
+            if "s" in aux:
+                # high-res fraction averaged over ACTIVE users, as in
+                # RoundWork.mean_s
+                stats["mean_s"] = (jnp.sum(aux["s"] * active)
+                                   / jnp.maximum(jnp.sum(active), 1.0))
+            _obs.jit_tap("engine.jit_round", stats)
+
         def step(params, qstate, xs, ys, weights, active):
             flat = self._batched_local(params, xs, ys)
             if aggregation == "wire":
@@ -380,6 +415,7 @@ class VectorizedFLEngine:
                 params = jax.tree_util.tree_map(
                     lambda p, u: p + u, params,
                     unflatten_pytree(agg, spec))
+                tap(bits, aux, active)
                 return params, qstate, bits, aux
             res, new_qstate = q.batched(flat, qstate)
             if new_qstate is not None:
@@ -396,6 +432,7 @@ class VectorizedFLEngine:
                 agg = jnp.einsum("k,kd->d", weights, res.recon)
             params = jax.tree_util.tree_map(
                 lambda p, u: p + u, params, unflatten_pytree(agg, spec))
+            tap(res.bits, res.aux, active)
             return params, new_qstate, res.bits, res.aux
 
         return step
@@ -405,6 +442,8 @@ class VectorizedFLEngine:
         # them so XLA reuses their buffers instead of copying every
         # round (start_run hands the step private copies, so the
         # engine's own init arrays survive repeated runs)
+        step = _obs.retrace_probe(
+            f"sim.fused_step/{self._obs_name}")(step)
         if self._user_sharding is not None:
             us, rs = self._user_sharding, self._repl_sharding
             # params replicated; every stacked [K, ...] arg (quantizer
@@ -456,17 +495,20 @@ class VectorizedFLEngine:
                     mode = "map"
                 # the stacked params/qstate carries are donated round
                 # to round, same as the unreplicated fused step
+                probe = _obs.retrace_probe(
+                    f"sim.replicated_step/{self._obs_name}/R{R}")
                 if mode == "map":
                     # on-device loop INSIDE the one jitted dispatch:
                     # per-replicate convs keep the fast unbatched CPU
                     # lowering (see EngineConfig.replicate_batching)
                     self._repl_step_cache[R] = jax.jit(
-                        lambda p, q, xs, ys, w, a: jax.lax.map(
-                            lambda args: fn(*args), (p, q, xs, ys, w, a)),
+                        probe(lambda p, q, xs, ys, w, a: jax.lax.map(
+                            lambda args: fn(*args),
+                            (p, q, xs, ys, w, a))),
                         donate_argnums=(0, 1))
                 else:
                     self._repl_step_cache[R] = jax.jit(
-                        jax.vmap(fn), donate_argnums=(0, 1))
+                        probe(jax.vmap(fn)), donate_argnums=(0, 1))
         return self._repl_step_cache[R]
 
     # ----------------------------------------------------------- rounds
@@ -706,11 +748,34 @@ class VectorizedFLEngine:
                                    self.comp_lat, state.cum_latency,
                                    work.mean_s, acc))
         state.rounds_done = t
-        if verbose and acc is not None:
-            print(f"[round {t:4d}] acc={acc:.4f} "
-                  f"bits/user={work.bits_np.mean():.3e} "
-                  f"cum_lat={state.cum_latency:.2f}s")
+        self._log_round(t, acc, work, uplink, state.cum_latency,
+                        verbose)
         return not self.budget_spent(state.cum_latency)
+
+    def _log_round(self, t: int, acc, work, uplink: float,
+                   cum_latency: float, verbose: bool) -> None:
+        """Round logging: every round goes to the active obs session;
+        the console line (the quickstart's old ``print``) appears only
+        under verbose, throttled by EngineConfig.log_every."""
+        ecfg = self.engine_cfg
+        if _obs.enabled():
+            budget = self.fl.latency_budget_s
+            _obs.record(
+                "engine.round", t=t,
+                acc=None if acc is None else float(acc),
+                bits_mean=float(work.bits_np.mean()),
+                uplink_s=float(uplink), comp_s=float(self.comp_lat),
+                cum_latency_s=float(cum_latency),
+                mean_s=float(work.mean_s),
+                active_users=int(np.sum(work.active > 0)),
+                budget_remaining_s=None if budget is None
+                else float(budget - cum_latency))
+        if (verbose or ecfg.verbose) and acc is not None:
+            every = max(1, ecfg.log_every)
+            if (t // self.fl.eval_every) % every == 0 or t == self.fl.T:
+                print(f"[round {t:4d}] acc={acc:.4f} "
+                      f"bits/user={work.bits_np.mean():.3e} "
+                      f"cum_lat={cum_latency:.2f}s")
 
     def result(self, state: RunState):
         from repro.fl.loop import FLResult
@@ -720,10 +785,16 @@ class VectorizedFLEngine:
     def run(self, verbose: bool = False):
         state = self.start_run()
         for t in range(1, self.fl.T + 1):
-            work = self.train_round(state, t)
-            uplink = self.solve_uplink_host(state.chan, work.bits_np,
-                                            work.active)
-            if not self.finish_round(state, work, uplink,
-                                     verbose=verbose):
+            with _obs.round_scope(t, quantizer=self.quantizer.name):
+                with _obs.scope("train_round") as sc:
+                    work = self.train_round(state, t)
+                    sc.block(state.params)
+                with _obs.scope("solve_uplink"):
+                    uplink = self.solve_uplink_host(
+                        state.chan, work.bits_np, work.active)
+                with _obs.scope("finish_round"):
+                    more = self.finish_round(state, work, uplink,
+                                             verbose=verbose)
+            if not more:
                 break
         return self.result(state)

@@ -52,8 +52,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Mapping, Optional, Tuple, Union
 
+import jax
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.power import PowerController
 from repro.phy import (batched_solver, bundle_from_realization_grid,
                        bundle_from_realizations)
@@ -128,6 +130,32 @@ class _ReplCell:
 _BundleCache = Dict[str, Tuple[List[object], object]]
 
 
+def _emit_solve_event(plabel: str, sol, mask: np.ndarray,
+                      stragglers: np.ndarray) -> None:
+    """Host-side ``phy.solve`` diagnostics for one power group's batched
+    solve: user-rate percentiles over active users, straggler spread,
+    and every per-cell solver info key (iteration counts, convergence
+    flags, safeguard activations) reduced to mean/max."""
+    rates = np.asarray(sol.rates, np.float64)
+    act = rates[np.asarray(mask) > 0]
+    fields: Dict[str, object] = {
+        "power": plabel, "cells": int(rates.shape[0]),
+        "straggler_s_max": float(np.max(stragglers)),
+        "straggler_s_min": float(np.min(stragglers)),
+    }
+    if act.size:
+        fields["rate_min"] = float(np.min(act))
+        fields["rate_median"] = float(np.median(act))
+        fields["rate_p95"] = float(np.percentile(act, 95.0))
+    for k, v in sol.info.items():
+        a = np.asarray(v)
+        if a.ndim <= 1 and (np.issubdtype(a.dtype, np.number)
+                            or a.dtype == np.bool_):
+            fields[f"{k}_mean"] = float(np.mean(a))
+            fields[f"{k}_max"] = float(np.max(a))
+    _obs.record("phy.solve", **fields)
+
+
 def _solve_round_batched(cells: List[_Cell], works: List[RoundWork],
                          cache: _BundleCache) -> List[float]:
     """One batched device solve per distinct power spec; returns the
@@ -159,6 +187,8 @@ def _solve_round_batched(cells: List[_Cell], works: List[RoundWork],
         sol = batched_solver(cells[idx[0]].power)(cb, bits, mask=mask)
         stragglers = np.asarray(sol.straggler_latency, np.float64)
         p_max_round = np.asarray(np.max(sol.p, axis=-1), np.float64)
+        if _obs.enabled():
+            _emit_solve_event(plabel, sol, mask, stragglers)
         for row, i in enumerate(idx):
             uplinks[i] = float(stragglers[row])
             cells[i].max_p = max(cells[i].max_p, float(p_max_round[row]))
@@ -172,19 +202,34 @@ def _run_scenario_lockstep(scn: Scenario, tracks: List[_Track],
         live_tracks = [tr for tr in tracks if tr.alive]
         if not live_tracks:
             break
-        # ONE jitted training step per quantizer, shared by its cells
-        track_work = {id(tr): tr.engine.train_round(tr.state, t)
-                      for tr in live_tracks}
-        live = [c for tr in live_tracks for c in tr.cells if c.alive]
-        works = [track_work[id(c.track)] for c in live]
-        uplinks = _solve_round_batched(live, works, cache)
-        for cell, work, uplink in zip(live, works, uplinks):
-            # accounting sees the shared trajectory's current params
-            # (snapshotted here, so a budget-stopped cell keeps the
-            # params of ITS final round even as the track trains on)
-            cell.acct.params = cell.track.state.params
-            cell.alive = cell.track.engine.finish_round(
-                cell.acct, work, uplink, verbose=verbose)
+        with _obs.round_scope(t):
+            # ONE jitted training step per quantizer, shared by cells
+            track_work = {}
+            with _obs.scope("train_round"):
+                for tr in live_tracks:
+                    with _obs.context(quantizer=tr.cells[0].qlabel):
+                        track_work[id(tr)] = tr.engine.train_round(
+                            tr.state, t)
+                        if _obs.enabled():
+                            # deliver this track's jit taps under its
+                            # quantizer tag (and time real compute)
+                            jax.block_until_ready(tr.state.params)
+            live = [c for tr in live_tracks for c in tr.cells
+                    if c.alive]
+            works = [track_work[id(c.track)] for c in live]
+            with _obs.scope("solve_uplink"):
+                uplinks = _solve_round_batched(live, works, cache)
+            with _obs.scope("finish_round"):
+                for cell, work, uplink in zip(live, works, uplinks):
+                    # accounting sees the shared trajectory's current
+                    # params (snapshotted here, so a budget-stopped
+                    # cell keeps the params of ITS final round even as
+                    # the track trains on)
+                    cell.acct.params = cell.track.state.params
+                    with _obs.context(quantizer=cell.qlabel,
+                                      power=cell.plabel):
+                        cell.alive = cell.track.engine.finish_round(
+                            cell.acct, work, uplink, verbose=verbose)
 
 
 def _solve_round_replicated(cells: List[_ReplCell],
@@ -219,6 +264,8 @@ def _solve_round_replicated(cells: List[_ReplCell],
         sol = batched_solver(cells[idx[0]].power)(cb, bits, mask=mask)
         stragglers = np.asarray(sol.straggler_latency,
                                 np.float64).reshape(len(idx), R)
+        if _obs.enabled():
+            _emit_solve_event(plabel, sol, mask, stragglers)
         p_max_round = np.asarray(np.max(sol.p, axis=-1),
                                  np.float64).reshape(len(idx), R)
         for row, i in enumerate(idx):
@@ -235,59 +282,92 @@ def _solve_round_replicated(cells: List[_ReplCell],
 def _run_scenario_lockstep_replicated(scn: Scenario,
                                       tracks: List[_ReplTrack], R: int,
                                       verbose: bool) -> None:
-    from repro.fl.loop import RoundLog
-
     cache: _BundleCache = {}
     for t in range(1, scn.T + 1):
         live_tracks = [tr for tr in tracks if tr.alive]
         if not live_tracks:
             break
-        # ONE jitted training step per quantizer for all R replicates
-        track_work = {id(tr): tr.engine.train_round_replicated(tr.state, t)
-                      for tr in live_tracks}
-        live = [c for tr in live_tracks for c in tr.cells
-                if c.alive.any()]
-        works = [track_work[id(c.track)] for c in live]
-        uplinks = _solve_round_replicated(live, works, cache, R)
-        # per-replicate accuracy, once per track on eval rounds —
-        # only for replicates some cell still accounts (a replicate
-        # dead in EVERY cell of the track is never logged again)
-        track_acc: Dict[int, Optional[np.ndarray]] = {}
-        for tr in live_tracks:
-            track_acc[id(tr)] = (
-                tr.engine.eval_accuracy_replicated(
-                    tr.state,
-                    alive=np.logical_or.reduce(
-                        [c.alive for c in tr.cells]))
-                if tr.engine.eval_due(t) else None)
-        for cell, work, uplink in zip(live, works, uplinks):
-            eng = cell.track.engine
-            comp_lat = eng.comp_lat
-            accs = track_acc[id(cell.track)]
-            for r in np.flatnonzero(cell.alive):
-                cell.cum_latency[r] += uplink[r] + comp_lat
-                acc = None if accs is None else float(accs[r])
-                cell.logs[r].append(RoundLog(
-                    t, work.bits_np[r], float(uplink[r]), comp_lat,
-                    float(cell.cum_latency[r]), float(work.mean_s[r]),
-                    acc))
-                cell.rounds_done[r] = t
-                if eng.budget_spent(cell.cum_latency[r]):
-                    cell.alive[r] = False
-                    # budget exhausted: snapshot THIS replicate's
-                    # params at its final round while the track trains on
-                    cell.params[r] = eng.replicate_params(
-                        cell.track.state, int(r))
-            if verbose and accs is not None:
-                # dead replicates carry NaN — average the live ones
-                print(f"[round {t:4d}] {cell.qlabel}/{cell.plabel} "
-                      f"acc={np.nanmean(accs):.4f}±"
-                      f"{np.nanstd(accs):.4f} (R={R})")
+        with _obs.round_scope(t):
+            # ONE jitted training step per quantizer, all R replicates
+            track_work = {}
+            with _obs.scope("train_round"):
+                for tr in live_tracks:
+                    with _obs.context(quantizer=tr.cells[0].qlabel):
+                        track_work[id(tr)] = \
+                            tr.engine.train_round_replicated(tr.state, t)
+                        if _obs.enabled():
+                            jax.block_until_ready(tr.state.params)
+            live = [c for tr in live_tracks for c in tr.cells
+                    if c.alive.any()]
+            works = [track_work[id(c.track)] for c in live]
+            with _obs.scope("solve_uplink"):
+                uplinks = _solve_round_replicated(live, works, cache, R)
+            # per-replicate accuracy, once per track on eval rounds —
+            # only for replicates some cell still accounts (a replicate
+            # dead in EVERY cell of the track is never logged again)
+            track_acc: Dict[int, Optional[np.ndarray]] = {}
+            with _obs.scope("eval"):
+                for tr in live_tracks:
+                    track_acc[id(tr)] = (
+                        tr.engine.eval_accuracy_replicated(
+                            tr.state,
+                            alive=np.logical_or.reduce(
+                                [c.alive for c in tr.cells]))
+                        if tr.engine.eval_due(t) else None)
+            with _obs.scope("finish_round"):
+                for cell, work, uplink in zip(live, works, uplinks):
+                    _finish_replicated_cell(cell, work, uplink,
+                                            track_acc, t, R, verbose)
     for tr in tracks:
         for cell in tr.cells:
             for r in np.flatnonzero(cell.alive):
                 cell.params[r] = tr.engine.replicate_params(
                     tr.state, int(r))
+
+
+def _finish_replicated_cell(cell: _ReplCell, work: ReplicatedRoundWork,
+                            uplink: np.ndarray,
+                            track_acc: Dict[int, Optional[np.ndarray]],
+                            t: int, R: int, verbose: bool) -> None:
+    from repro.fl.loop import RoundLog
+
+    eng = cell.track.engine
+    comp_lat = eng.comp_lat
+    accs = track_acc[id(cell.track)]
+    for r in np.flatnonzero(cell.alive):
+        cell.cum_latency[r] += uplink[r] + comp_lat
+        acc = None if accs is None else float(accs[r])
+        cell.logs[r].append(RoundLog(
+            t, work.bits_np[r], float(uplink[r]), comp_lat,
+            float(cell.cum_latency[r]), float(work.mean_s[r]),
+            acc))
+        cell.rounds_done[r] = t
+        if eng.budget_spent(cell.cum_latency[r]):
+            cell.alive[r] = False
+            # budget exhausted: snapshot THIS replicate's
+            # params at its final round while the track trains on
+            cell.params[r] = eng.replicate_params(
+                cell.track.state, int(r))
+    if _obs.enabled():
+        budget = eng.fl.latency_budget_s
+        cum = cell.cum_latency[cell.alive] if cell.alive.any() \
+            else cell.cum_latency
+        _obs.record(
+            "engine.round", t=t, quantizer=cell.qlabel,
+            power=cell.plabel, replicates=R,
+            alive_replicates=int(np.sum(cell.alive)),
+            acc=None if accs is None else float(np.nanmean(accs)),
+            bits_mean=float(work.bits_np.mean()),
+            uplink_s=float(np.mean(uplink)),
+            cum_latency_s=float(np.max(cell.cum_latency)),
+            mean_s=float(np.mean(work.mean_s)),
+            budget_remaining_s=None if budget is None
+            else float(budget - np.min(cum)))
+    if verbose and accs is not None:
+        # dead replicates carry NaN — average the live ones
+        print(f"[round {t:4d}] {cell.qlabel}/{cell.plabel} "
+              f"acc={np.nanmean(accs):.4f}±"
+              f"{np.nanstd(accs):.4f} (R={R})")
 
 
 def _to_replicated_result(scn: Scenario, cell: _ReplCell) -> SweepResult:
@@ -332,56 +412,70 @@ def run_grid_batched(scenarios: List[Union[str, Scenario]],
     results: List[SweepResult] = []
     for scenario in scenarios:
         scn = _resolve_scenario(scenario, quick, latency_budget_s)
-        R = replicates if replicates is not None \
-            else (scn.replicates if scn.replicates > 1 else None)
-        problem = build_problem(scn)
-        chan = problem[4]
-        if R is not None:
-            tracks_r: List[_ReplTrack] = []
-            for qlabel, qspec in quantizers.items():
-                engine = _make_engine(scn, problem, qspec, None,
-                                      mesh=mesh)
-                track = _ReplTrack(engine=engine,
-                                   state=engine.start_replicated_run(R))
-                for plabel, pspec in powers.items():
-                    pc = _make_power(pspec)
-                    track.cells.append(_ReplCell(
-                        track=track,
-                        power=pc if chan is not None else None,
-                        qlabel=qlabel, plabel=plabel,
-                        logs=[[] for _ in range(R)],
-                        cum_latency=np.zeros(R),
-                        alive=np.ones(R, dtype=bool),
-                        rounds_done=np.zeros(R, dtype=np.int64),
-                        params=[None] * R))
-                tracks_r.append(track)
-            _run_scenario_lockstep_replicated(scn, tracks_r, R, verbose)
-            for track in tracks_r:
-                for cell in track.cells:
-                    results.append(_to_replicated_result(scn, cell))
-            continue
-        tracks: List[_Track] = []
-        for qlabel, qspec in quantizers.items():
-            engine = _make_engine(scn, problem, qspec, None, mesh=mesh)
-            track = _Track(engine=engine, state=engine.start_run())
-            for plabel, pspec in powers.items():
-                pc = _make_power(pspec)
-                acct = dataclasses.replace(track.state, logs=[],
-                                           cum_latency=0.0,
-                                           rounds_done=0)
-                track.cells.append(_Cell(
-                    track=track,
-                    power=pc if chan is not None else None,
-                    qlabel=qlabel, plabel=plabel, acct=acct))
-            tracks.append(track)
-        _run_scenario_lockstep(scn, tracks, verbose)
-        for track in tracks:
-            for cell in track.cells:
-                res = _to_result(scn, track.engine,
-                                 track.engine.result(cell.acct),
-                                 (cell.qlabel, cell.plabel))
-                res.summary["max_p"] = cell.max_p
-                results.append(res)
+        with _obs.context(scenario=scn.name):
+            n_before = len(results)
+            R = replicates if replicates is not None \
+                else (scn.replicates if scn.replicates > 1 else None)
+            problem = build_problem(scn)
+            chan = problem[4]
+            if R is not None:
+                tracks_r: List[_ReplTrack] = []
+                for qlabel, qspec in quantizers.items():
+                    engine = _make_engine(scn, problem, qspec, None,
+                                          mesh=mesh)
+                    track = _ReplTrack(
+                        engine=engine,
+                        state=engine.start_replicated_run(R))
+                    for plabel, pspec in powers.items():
+                        pc = _make_power(pspec)
+                        track.cells.append(_ReplCell(
+                            track=track,
+                            power=pc if chan is not None else None,
+                            qlabel=qlabel, plabel=plabel,
+                            logs=[[] for _ in range(R)],
+                            cum_latency=np.zeros(R),
+                            alive=np.ones(R, dtype=bool),
+                            rounds_done=np.zeros(R, dtype=np.int64),
+                            params=[None] * R))
+                    tracks_r.append(track)
+                _run_scenario_lockstep_replicated(scn, tracks_r, R,
+                                                  verbose)
+                for track in tracks_r:
+                    for cell in track.cells:
+                        results.append(_to_replicated_result(scn, cell))
+            else:
+                tracks: List[_Track] = []
+                for qlabel, qspec in quantizers.items():
+                    engine = _make_engine(scn, problem, qspec, None,
+                                          mesh=mesh)
+                    track = _Track(engine=engine,
+                                   state=engine.start_run())
+                    for plabel, pspec in powers.items():
+                        pc = _make_power(pspec)
+                        acct = dataclasses.replace(track.state, logs=[],
+                                                   cum_latency=0.0,
+                                                   rounds_done=0)
+                        track.cells.append(_Cell(
+                            track=track,
+                            power=pc if chan is not None else None,
+                            qlabel=qlabel, plabel=plabel, acct=acct))
+                    tracks.append(track)
+                _run_scenario_lockstep(scn, tracks, verbose)
+                for track in tracks:
+                    for cell in track.cells:
+                        res = _to_result(scn, track.engine,
+                                         track.engine.result(cell.acct),
+                                         (cell.qlabel, cell.plabel))
+                        res.summary["max_p"] = cell.max_p
+                        results.append(res)
+            if _obs.enabled():
+                for res in results[n_before:]:
+                    _obs.record(
+                        "sweep.cell",
+                        quantizer=res.cell.quantizer_label,
+                        power=res.cell.power_label,
+                        **{k: v for k, v in res.summary.items()
+                           if isinstance(v, (int, float))})
     if out_csv:
         write_metrics_csv([r.row() for r in results], out_csv)
     return results

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
 
+from repro import obs as _obs
 from repro.core.power import PowerController, make_power_controller
 from repro.core.quantize import Quantizer, make_quantizer
 
@@ -117,7 +118,13 @@ def run_cell(scenario: Union[str, Scenario], quantizer: QuantSpec,
     scn = _resolve_scenario(scenario, quick, latency_budget_s)
     engine = _make_engine(scn, build_problem(scn), quantizer, power,
                           mesh=mesh)
-    return _to_result(scn, engine, engine.run(verbose=verbose), labels)
+    tags = {"scenario": scn.name,
+            "quantizer": labels[0] or engine.quantizer.name}
+    if labels[1]:
+        tags["power"] = labels[1]
+    with _obs.context(**tags):
+        return _to_result(scn, engine, engine.run(verbose=verbose),
+                          labels)
 
 
 def run_grid(scenarios: List[Union[str, Scenario]],
@@ -169,9 +176,11 @@ def run_grid(scenarios: List[Union[str, Scenario]],
                 else:
                     pc = _make_power(pspec)
                     engine.power = pc if chan is not None else None
-                results.append(_to_result(
-                    scn, engine, engine.run(verbose=verbose),
-                    (qlabel, plabel)))
+                with _obs.context(scenario=scn.name, quantizer=qlabel,
+                                  power=plabel):
+                    results.append(_to_result(
+                        scn, engine, engine.run(verbose=verbose),
+                        (qlabel, plabel)))
     if out_csv:
         write_metrics_csv([r.row() for r in results], out_csv)
     return results

@@ -52,11 +52,17 @@ class FLConfig:
 class RoundLog:
     round: int
     bits_per_user: np.ndarray
-    uplink_latency_s: float
+    uplink_latency_s: float       # async rounds: event-clock duration
     comp_latency_s: float
     cum_latency_s: float
     mean_s: float                 # mean high-res fraction (aux)
     test_acc: Optional[float]
+    # straggler/async accounting (defaults keep pre-async callers and
+    # the sequential reference loop unchanged)
+    straggler_gap_s: float = 0.0          # slowest - median completion
+    mean_staleness: float = 0.0           # over aggregated arrivals
+    effective_participation: float = 1.0  # aggregated users / K
+    dropped_uploads: int = 0              # stale- + churn-dropped
 
 
 @dataclasses.dataclass

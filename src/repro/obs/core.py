@@ -25,6 +25,28 @@ round-trip inside the step); delivery re-resolves the active session
 when the compiled step actually runs, so a step traced under one
 session keeps reporting to whichever session drives later runs (and
 drops events when none is active).
+
+Public API / invariants:
+
+* ``session(jsonl=..., memory=..., jit_stream=..., profile_round=...)``
+  — the one entry point; everything else is a no-op without it.
+* Emission: ``record(name, **fields)`` (host scalars),
+  ``counter(name, n)`` (accumulated, flushed once at close),
+  ``jit_tap(name, values)`` (in-jit, trace-time gated),
+  ``enabled()`` / ``jit_stream_enabled()`` (the gates).
+* Invariant 1 — zero cost when off: no active session means no staged
+  ops, no host callbacks, no allocations beyond one attribute check
+  per call site.
+* Invariant 2 — never blocks the hot path: in-jit taps use
+  ``ordered=False`` callbacks; phase scopes (repro.obs.trace) do the
+  blocking at phase boundaries instead.
+* Invariant 3 — the stream never holds a full tensor: array payloads
+  are scalarized (0-d -> item, size <= 64 -> list, larger ->
+  min/max/mean/size summary).
+* Consumers: ``python -m repro.obs.report`` renders a trace
+  (per-round table, phase breakdown, wire traffic, async rounds,
+  retraces); sessions nest via the module-level active-session slot
+  under ``_LOCK``.
 """
 from __future__ import annotations
 

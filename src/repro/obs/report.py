@@ -14,6 +14,10 @@ Sections (each present only when the trace carries its events):
 * wire traffic — bytes moved by the fused encode/decode kernels and
   the attained bandwidth over the train phase vs the roofline HBM
   bound ("is the wire path memory-bound yet");
+* async rounds — the event-clock telemetry from the async round
+  engine (``engine.async`` events): arrivals and staleness per round,
+  effective participation, straggler gap, buffer occupancy and
+  dropped-upload totals;
 * recompilation summary — per-step trace counts from the retrace
   probes, flagging silent retrace storms;
 * profiler captures — directories of ``jax.profiler`` traces armed via
@@ -78,6 +82,13 @@ _ROUND_FIELDS = [
      _mean),
     ("dink_iters", "event", "phy.solve", "dinkelbach_iters_mean",
      _mean),
+    ("gap_s", "event", "engine.round", "straggler_gap_s", max),
+    ("arrived", "event", "engine.async", "arrived", _mean),
+    ("staleness", "event", "engine.async", "mean_staleness", _mean),
+    ("eff_part", "event", "engine.async", "effective_participation",
+     _mean),
+    ("in_flight", "event", "engine.async", "in_flight", _mean),
+    ("dropped", "event", "engine.async", "dropped_stale", sum),
     ("acc", "event", "engine.round", "acc", max),
     ("cum_lat_s", "event", "engine.round", "cum_latency_s", max),
     ("budget_left_s", "event", "engine.round", "budget_remaining_s",
@@ -134,6 +145,33 @@ def wire_summary(events: List[Dict]) -> Dict[str, float]:
     if train_s > 0:
         out["attained_gbps"] = total / train_s / 1e9
         out["roofline_fraction"] = (total / train_s) / HBM_BW
+    return out
+
+
+def async_summary(events: List[Dict]) -> Dict[str, float]:
+    """Aggregate the async round engine's event-clock telemetry
+    (``engine.async`` events): arrival/staleness distribution,
+    effective participation, buffer occupancy and dropped-upload
+    totals.  Empty for lockstep traces."""
+    evs = [e for e in events
+           if e.get("kind") == "event" and e.get("name") == "engine.async"]
+    if not evs:
+        return {}
+    def col(field):
+        return [v for v in (_num(e.get(field)) for e in evs)
+                if v is not None]
+    out = {
+        "async_rounds": float(len(evs)),
+        "mean_arrivals_per_round": _mean(col("arrived")),
+        "mean_staleness": _mean(col("mean_staleness")),
+        "max_staleness_observed": max(col("max_staleness") or [0.0]),
+        "mean_effective_participation":
+            _mean(col("effective_participation")),
+        "mean_straggler_gap_s": _mean(col("straggler_gap_s")),
+        "mean_in_flight": _mean(col("in_flight")),
+        "dropped_stale_total": sum(col("dropped_stale")),
+        "dropped_churn_total": sum(col("dropped_churn")),
+    }
     return out
 
 
@@ -200,6 +238,10 @@ def render_report(events: List[Dict],
     if wire:
         lines = [f"  {k}: {_fmt(v)}" for k, v in wire.items()]
         parts.append("== fused wire traffic ==\n" + "\n".join(lines))
+    async_ = async_summary(events)
+    if async_:
+        lines = [f"  {k}: {_fmt(v)}" for k, v in async_.items()]
+        parts.append("== async rounds ==\n" + "\n".join(lines))
     retraces = retrace_summary(events)
     if retraces:
         lines = [f"  {r['name']}: {r['count']} trace(s)"

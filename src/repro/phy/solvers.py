@@ -29,6 +29,27 @@ Absent-user masking (``mask`` of 0/1 per user) implements the
 engine's sub-channel semantics (sim/engine.py churn path): masked
 users get no power, contribute no interference, are excluded from the
 eta bound / objectives, and never become the straggler.
+
+Public API / invariants:
+
+* ``bisection_solve`` / ``dinkelbach_solve`` / ``maxsum_solve`` —
+  each takes a :class:`ChannelBatch` (leading batch axis B) + per-user
+  payload ``bits [B, K]`` (+ optional ``mask [B, K]``) and returns a
+  ``PowerSolution``: power coefficients ``p [B, K]`` in [0, 1], the
+  straggler ``latency_s [B]``, per-user completion times
+  ``latencies [B, K]`` (the async event clock's input — DESIGN.md
+  section 11; 0 where masked), and a solver ``info`` dict of
+  convergence telemetry.
+* Parity: every solver reproduces its ``core/power`` numpy reference
+  within the DESIGN.md section 7 tolerance contract (exact trajectory
+  in x64 with ``grad_mode="fd"``); masked-user semantics match the
+  engine's sub-channel restriction exactly.
+* Fixed iteration counts — no data-dependent python control flow, so
+  one trace serves every batch and jit caches never churn; early
+  exits are replayed with done masks inside the compiled loop.
+* obs taps (``phy.solve`` records, solver info scalars) are
+  trace-time gated: with no active session nothing is staged
+  (DESIGN.md section 10).
 """
 from __future__ import annotations
 

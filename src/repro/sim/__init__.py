@@ -13,10 +13,14 @@ simulation engine.
   (mean/ci95 summaries at one dispatch per quantizer per round);
 * :mod:`metrics` — round-log aggregation the benchmark tables consume.
 """
-from .engine import (EngineConfig, ReplicatedRoundWork, ReplicatedRunState,
-                     RoundWork, RunState, VectorizedFLEngine)
+from .engine import (AsyncClock, AsyncRoundInfo, EngineConfig,
+                     ReplicatedRoundWork, ReplicatedRunState, RoundWork,
+                     RunState, StalenessConfig, VectorizedFLEngine,
+                     advance_async_clock, staleness_weights,
+                     straggler_gap)
 from .metrics import summarize_logs, summarize_replicates, write_metrics_csv
 from .phy_driver import run_grid_batched
-from .scenarios import (SCENARIOS, Scenario, build_problem, get_scenario,
-                        grid_scenarios, list_scenarios, register_scenario)
+from .scenarios import (SCENARIOS, Scenario, async_scenarios,
+                        build_problem, get_scenario, grid_scenarios,
+                        list_scenarios, register_scenario)
 from .sweep import SweepCell, SweepResult, run_cell, run_grid

@@ -57,12 +57,45 @@ per-round device step vmapped over a leading R axis, so one jitted
 dispatch per round trains all R trajectories.  R = 1 routes through
 the IDENTICAL compiled step as the unreplicated path (no vmap), which
 is what makes the replicate-parity suite's bit-for-bit claim possible.
+
+Asynchronous mode (``EngineConfig(async_mode=True, staleness=...)``,
+DESIGN.md section 11): per-user upload-completion times from the power
+solve become a scheduling fact instead of a latency footnote.  Each
+round the server waits only until a deadline (fixed seconds or a
+quantile of the pending completion times), aggregates the uploads that
+arrived with staleness weights ``rho_j (1+staleness_j)^-alpha``
+renormalized into a convex combination, and parks the stragglers'
+payloads in a bounded-staleness buffer (at most one in-flight upload
+per user; dropped once ``staleness > max_staleness`` or when the user
+churns out mid-upload).  The per-round device work stays two jitted
+dispatches — one train+quantize call producing the fresh payloads
+(dense [K, d] recons or packed MixedResWire planes) and one
+aggregate+buffer-shuffle call — so the replicate axis and the fused
+Pallas wire path keep working unchanged.  The host event clock between
+them is pure numpy (``advance_async_clock``).
+
+Public API / invariants:
+
+* ``VectorizedFLEngine(...).run()`` — one-call driver; or the
+  round-stepping quartet ``start_run`` / ``train_round`` /
+  ``solve_uplink_host[_detailed]`` / ``finish_round`` (async inserts
+  ``complete_round_async`` between solve and finish — aggregation
+  happens there, never in ``finish_round``).
+* Replicated: ``start_replicated_run(R)`` / ``train_round_replicated``
+  (+ ``complete_round_replicated_async``); R=1 is bit-for-bit the
+  unreplicated path (same compiled step, squeezed).
+* ``async_mode=True`` with a sync StalenessConfig (no deadline — the
+  "alpha=0, infinite deadline" reduction) runs EXACTLY the lockstep
+  code path: bit-for-bit with async_mode=False by construction
+  (tests/test_async_engine.py pins it).
+* Sync mode never reads the async fields; all pre-async call sites
+  keep their behavior bit-for-bit.
 """
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import List, Optional
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -81,8 +114,59 @@ from repro.data.synthetic import ImageDataset
 # shared with repro.dist's cross-replica aggregation
 from repro.dist.compressor import \
     signplane_weighted_aggregate as _signplane_aggregate
+from repro.kernels.ops import (H_DBAR, H_DWQ, H_INF, MixedResWire,
+                               mixed_res_encode, mixed_res_wire_reduce)
 from repro.kernels.ops import mixed_res_wire_aggregate as _wire_aggregate
 from repro import obs as _obs
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessConfig:
+    """Async round-deadline + staleness-weighting policy.
+
+    The server closes a round at ``min(deadline, time all pending
+    uploads complete)`` where the deadline is either ``deadline_s``
+    (fixed seconds) or the ``deadline_quantile`` of this round's
+    pending completion times (fresh uploads' solve latencies plus
+    in-flight uploads' remaining times).  Exactly one of the two may
+    be set; with BOTH unset the config is "sync" (infinite deadline:
+    every round waits for its slowest upload — today's lockstep) and
+    ``EngineConfig.async_active`` stays False even under
+    ``async_mode=True``, which is the bit-for-bit sync reduction the
+    parity test pins.
+
+    Arrivals are averaged with weights ``rho_j (1+staleness_j)^-alpha``
+    renormalized to a convex combination (``staleness_weights``);
+    ``alpha=0`` weighs stale and fresh uploads alike.  A missed upload
+    waits in the buffer at most ``max_staleness`` rounds
+    (``max_staleness=0`` disables buffering: misses are dropped
+    outright).
+    """
+    deadline_s: Optional[float] = None
+    deadline_quantile: Optional[float] = None
+    alpha: float = 0.0
+    max_staleness: int = 2
+
+    def __post_init__(self):
+        if self.deadline_s is not None and self.deadline_quantile is not None:
+            raise ValueError("set deadline_s OR deadline_quantile, not both")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {self.deadline_s}")
+        if self.deadline_quantile is not None and not (
+                0.0 < self.deadline_quantile <= 1.0):
+            raise ValueError("deadline_quantile must be in (0, 1], got "
+                             f"{self.deadline_quantile}")
+        if self.alpha < 0:
+            raise ValueError(f"alpha must be >= 0, got {self.alpha}")
+        if self.max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {self.max_staleness}")
+
+    @property
+    def is_sync(self) -> bool:
+        """No finite deadline configured — the lockstep reduction."""
+        return (self.deadline_s is None or np.isinf(self.deadline_s)) \
+            and self.deadline_quantile is None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,10 +218,25 @@ class EngineConfig:
     # run(verbose=True)), throttled to every log_every-th eval round.
     verbose: bool = False
     log_every: int = 1
+    # Asynchronous rounds (DESIGN.md section 11): per-user upload
+    # completion times govern aggregation.  async_mode=True with a
+    # sync StalenessConfig (no deadline) runs the lockstep code path
+    # unchanged — see async_active.
+    async_mode: bool = False
+    staleness: StalenessConfig = dataclasses.field(
+        default_factory=StalenessConfig)
 
     @property
     def effective_fused(self) -> bool:
         return self.fused or self.aggregation in ("signplane", "wire")
+
+    @property
+    def async_active(self) -> bool:
+        """True only when async machinery actually engages: async_mode
+        AND a finite deadline.  ``async_mode=True`` with the default
+        (sync) StalenessConfig reduces to today's lockstep engine
+        bit-for-bit because this property gates EVERY async branch."""
+        return self.async_mode and not self.staleness.is_sync
 
 
 def _subchannel(chan: ChannelRealization, idx: np.ndarray
@@ -158,13 +257,169 @@ def _subchannel(chan: ChannelRealization, idx: np.ndarray
         I_M=chan.I_M[idx])
 
 
+# ------------------------------------------------- async event clock
+def staleness_weights(rho: np.ndarray, staleness: np.ndarray,
+                      arrived: np.ndarray, alpha: float) -> np.ndarray:
+    """Normalized aggregation weights ``rho_j (1+s_j)^-alpha`` over the
+    arrived set — a convex combination (non-negative, sums to 1 per
+    leading-batch row) whenever any upload arrived, all-zero otherwise.
+
+    rho: [K]; staleness/arrived: [..., K] (staleness in rounds, 0 for
+    fresh uploads).  Pure numpy — the hypothesis property battery in
+    tests/test_async_engine.py exercises it directly.
+    """
+    arr = np.asarray(arrived, bool)
+    raw = (np.asarray(rho, np.float64)
+           * (1.0 + np.asarray(staleness, np.float64)) ** (-float(alpha))
+           * arr)
+    tot = raw.sum(axis=-1, keepdims=True)
+    return np.divide(raw, tot, out=np.zeros_like(raw), where=tot > 0)
+
+
+def straggler_gap(per_user_s: np.ndarray, mask: np.ndarray) -> float:
+    """Slowest-minus-median upload completion time over ``mask`` users
+    — the round's straggler gap (0 when fewer than one uploader)."""
+    lat = np.asarray(per_user_s, np.float64)[np.asarray(mask) > 0]
+    if lat.size == 0:
+        return 0.0
+    return float(np.max(lat) - np.median(lat))
+
+
+class AsyncClockStep(NamedTuple):
+    """One ``advance_async_clock`` transition.  All arrays [B, K]
+    unless noted; B is the replicate axis (1 unreplicated)."""
+    round_s: np.ndarray            # [B] event-clock round duration
+    arrived: np.ndarray            # bool — aggregated this round
+    w_fresh: np.ndarray            # weights of arrived FRESH uploads
+    w_buf: np.ndarray              # weights of arrived BUFFERED uploads
+    move: np.ndarray               # fresh upload missed -> enters buffer
+    keep: np.ndarray               # buffered upload missed -> stays
+    in_flight: np.ndarray          # next round's busy mask (move|keep)
+    remaining_s: np.ndarray        # next round's remaining upload time
+    staleness: np.ndarray          # next round's buffer staleness
+    arrived_staleness: np.ndarray  # staleness of each arrival (0 fresh)
+    dropped_stale: np.ndarray      # [B] uploads dropped: staleness bound
+    dropped_churn: np.ndarray      # [B] uploads dropped: user churned out
+    straggler_gap_s: np.ndarray    # [B] max - median pending completion
+
+
+def advance_async_clock(in_flight: np.ndarray, remaining_s: np.ndarray,
+                        staleness: np.ndarray, ell: np.ndarray,
+                        fresh: np.ndarray, participating: np.ndarray,
+                        rho: np.ndarray, cfg: StalenessConfig
+                        ) -> AsyncClockStep:
+    """Pure host event-clock transition for one async round.
+
+    Inputs are [B, K]: ``in_flight``/``remaining_s``/``staleness`` the
+    buffer state, ``ell`` this round's per-user solve latencies (fresh
+    uploads), ``fresh`` the fresh-uploader mask and ``participating``
+    the churn mask.  Semantics:
+
+    * an in-flight upload whose user churned out is dropped — a user
+      who drops mid-upload must never be aggregated;
+    * the round closes at ``min(deadline, max pending completion)`` —
+      with every pending upload inside the deadline this equals the
+      lockstep straggler latency;
+    * arrivals (completion <= round_s) are weighted by
+      ``staleness_weights``; misses enter/stay in the buffer with
+      ``remaining_s`` decremented by the elapsed round and staleness
+      bumped, dropped once ``staleness > cfg.max_staleness``.
+    """
+    part = np.asarray(participating) > 0
+    fresh = np.asarray(fresh) > 0
+    churn_drop = in_flight & ~part
+    busy = in_flight & part
+    cand = np.where(fresh, np.asarray(ell, np.float64), np.inf)
+    cand = np.where(busy, remaining_s, cand)
+    pending = fresh | busy
+    B = cand.shape[0]
+    round_s = np.zeros(B)
+    gap = np.zeros(B)
+    for b in range(B):
+        pc = cand[b][pending[b]]
+        if pc.size == 0:
+            continue
+        if cfg.deadline_s is not None:
+            deadline = float(cfg.deadline_s)
+        else:
+            deadline = float(np.quantile(pc, cfg.deadline_quantile))
+        # a server that saw every pending upload land early closes the
+        # round then — deadline_s=inf therefore reduces to lockstep
+        round_s[b] = min(deadline, float(pc.max()))
+        gap[b] = float(pc.max() - np.median(pc))
+    arrived = pending & (cand <= round_s[:, None])
+    arr_stale = np.where(busy, staleness, 0)
+    w = staleness_weights(rho, arr_stale, arrived, cfg.alpha)
+    # misses: fresh ones enter the buffer at staleness 1 (dropped
+    # outright when max_staleness == 0); buffered ones age one round
+    miss_fresh = fresh & ~arrived
+    miss_buf = busy & ~arrived
+    stale_drop = miss_buf & (staleness + 1 > cfg.max_staleness)
+    keep = miss_buf & ~stale_drop
+    move = miss_fresh if cfg.max_staleness >= 1 \
+        else np.zeros_like(miss_fresh)
+    elapsed = round_s[:, None]
+    return AsyncClockStep(
+        round_s=round_s, arrived=arrived,
+        w_fresh=w * (fresh & arrived), w_buf=w * (busy & arrived),
+        move=move, keep=keep, in_flight=move | keep,
+        remaining_s=np.where(move, cand - elapsed,
+                             np.where(keep, remaining_s - elapsed, 0.0)),
+        staleness=np.where(move, 1, np.where(keep, staleness + 1, 0)),
+        arrived_staleness=np.where(arrived, arr_stale, 0),
+        dropped_stale=(stale_drop | (miss_fresh & ~move)).sum(axis=-1),
+        dropped_churn=churn_drop.sum(axis=-1),
+        straggler_gap_s=gap)
+
+
+@dataclasses.dataclass
+class AsyncClock:
+    """Mutable async buffer state threaded through a run.
+
+    Host arrays are [B, K] (B = 1 unreplicated, else R); ``buffer``
+    holds the parked device payloads — dense [(B,) K, d] recons or
+    stacked MixedResWire planes — aligned slot-per-user (at most one
+    in-flight upload per user).  ``payload`` stages the current
+    round's fresh device payload between ``train_round`` and
+    ``complete_round_async``."""
+    in_flight: np.ndarray
+    remaining_s: np.ndarray
+    staleness: np.ndarray
+    buffer: object
+    payload: object = None
+    uploads_started: int = 0
+    arrived_total: int = 0
+    dropped_stale: int = 0
+    dropped_churn: int = 0
+
+
+@dataclasses.dataclass
+class AsyncRoundInfo:
+    """Per-round async accounting (arrays [B]; B = 1 unreplicated)."""
+    round_uplink_s: np.ndarray     # event-clock round duration
+    n_arrived: np.ndarray          # arrivals aggregated this round
+    mean_staleness: np.ndarray     # mean staleness over arrivals
+    max_staleness_obs: np.ndarray  # max staleness over arrivals
+    straggler_gap_s: np.ndarray    # max - median pending completion
+    dropped_stale: np.ndarray
+    dropped_churn: np.ndarray
+    effective_participation: np.ndarray   # n_arrived / K
+    in_flight_next: np.ndarray     # buffer occupancy entering next round
+
+
 @dataclasses.dataclass
 class RoundWork:
-    """What one training round hands to the power-control stage."""
+    """What one training round hands to the power-control stage.
+
+    In async mode ``active`` is the FRESH-uploader mask (participating
+    and not mid-upload — the users whose payloads this round's power
+    solve carries) and ``participating`` the raw churn mask; in sync
+    mode they coincide and ``participating`` stays None."""
     t: int
     bits_np: np.ndarray            # [K] payload bits; 0 for absent users
     active: np.ndarray             # [K] 0/1 participation mask
     mean_s: float                  # mean high-res fraction (active users)
+    participating: Optional[np.ndarray] = None   # [K] churn mask (async)
 
 
 @dataclasses.dataclass
@@ -174,6 +429,7 @@ class ReplicatedRoundWork:
     bits_np: np.ndarray            # [R, K] payload bits; 0 for absent users
     active: np.ndarray             # [R, K] 0/1 participation masks
     mean_s: np.ndarray             # [R] mean high-res fraction per replicate
+    participating: Optional[np.ndarray] = None   # [R, K] churn masks (async)
 
 
 @dataclasses.dataclass
@@ -195,6 +451,7 @@ class RunState:
     logs: List
     cum_latency: float = 0.0
     rounds_done: int = 0
+    async_clock: Optional[AsyncClock] = None
 
 
 @dataclasses.dataclass
@@ -215,6 +472,7 @@ class ReplicatedRunState:
     test_x: object
     test_y: object
     rounds_done: int = 0
+    async_clock: Optional[AsyncClock] = None
 
     @property
     def R(self) -> int:
@@ -276,6 +534,21 @@ class VectorizedFLEngine:
             raise ValueError(
                 "the wire kernels store magnitude codes in <= 16 bits; "
                 f"got b={quantizer.b}")
+        if self.engine_cfg.async_active:
+            if not self.engine_cfg.effective_fused:
+                raise ValueError(
+                    "async rounds split the fused step into train and "
+                    "aggregate dispatches; configure "
+                    "EngineConfig(fused=True)")
+            if self.engine_cfg.aggregation == "signplane":
+                raise ValueError(
+                    "async rounds buffer packed payloads; use "
+                    "aggregation='wire' (full wire format) or 'dense'")
+            if self.engine_cfg.mesh is not None:
+                warnings.warn(
+                    "EngineConfig.mesh user-axis sharding is not "
+                    "supported in async mode; running unsharded",
+                    stacklevel=2)
 
         self.dataset, self.test = dataset, test
         self.shards, self.cnn_cfg = shards, cnn_cfg
@@ -320,6 +593,8 @@ class VectorizedFLEngine:
             self._fused_step = None
         # replicate-axis step cache: R -> jitted vmap of the fused step
         self._repl_step_cache = {}
+        # async step cache: R (None = unreplicated) -> (train, agg)
+        self._async_step_cache = {}
 
     # ------------------------------------------------------------ build
     def _user_shardings(self):
@@ -511,6 +786,184 @@ class VectorizedFLEngine:
                         probe(jax.vmap(fn)), donate_argnums=(0, 1))
         return self._repl_step_cache[R]
 
+    # ------------------------------------------------- async machinery
+    # The async round splits the fused step in two: a train+quantize
+    # dispatch producing the fresh device payloads (no aggregation, no
+    # param update) and, after the host event clock has decided who
+    # arrived, an aggregate+buffer-shuffle dispatch.  Still a constant
+    # number of jitted calls per round regardless of K and R
+    # (tests/test_async_engine.py counts them).
+    def _build_async_train_fn(self):
+        """Unjitted (params, qstate, xs, ys, commit) ->
+        (payload, new_qstate, bits, aux).  ``commit`` is the
+        fresh-uploader mask: only committing users' quantizer state
+        advances (busy/absent users did not transmit)."""
+        q, K, d = self.quantizer, self.K, self.d
+        aggregation = self.engine_cfg.aggregation
+
+        def tap(bits, aux, commit):
+            masked = bits * commit
+            stats = {"bits_min": jnp.min(masked),
+                     "bits_median": jnp.median(masked),
+                     "bits_p95": jnp.percentile(masked, 95.0),
+                     "bits_mean": jnp.mean(masked),
+                     "active_frac": jnp.mean(commit)}
+            if "s" in aux:
+                stats["mean_s"] = (jnp.sum(aux["s"] * commit)
+                                   / jnp.maximum(jnp.sum(commit), 1.0))
+            _obs.jit_tap("engine.jit_round", stats)
+
+        def train(params, qstate, xs, ys, commit):
+            flat = self._batched_local(params, xs, ys)
+            if aggregation == "wire":
+                wire = mixed_res_encode(flat, q.lambda_, q.b)
+                inf = wire.head[:, H_INF]
+                s = wire.head[:, H_DBAR] / d
+                bits = d * (q.b * s + 1.0 - s) + 32.0
+                bits = jnp.where(inf > 0, bits, float(d) + 32.0)
+                aux = {"s": s,
+                       "dbar": wire.head[:, H_DBAR].astype(jnp.int32),
+                       "r": inf - wire.head[:, H_DWQ],
+                       "dw_q": wire.head[:, H_DWQ], "inf": inf}
+                tap(bits, aux, commit)
+                return wire, qstate, bits, aux
+            res, new_qstate = q.batched(flat, qstate)
+            if new_qstate is not None:
+                new_qstate = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(
+                        jnp.reshape(commit, (K,) + (1,) * (n.ndim - 1))
+                        > 0, n, o),
+                    new_qstate, qstate)
+            tap(res.bits, res.aux, commit)
+            return res.recon, new_qstate, res.bits, res.aux
+
+        return train
+
+    def _build_async_agg_fn(self):
+        """Unjitted (params, fresh, buf, w_fresh, w_buf, move, keep) ->
+        (params, new_buf): staleness-weighted aggregation over the
+        arrived fresh + buffered payloads (all-zero weights mean no
+        arrivals — params pass through unchanged) and the buffer
+        shuffle (missed fresh payloads move in, retained misses stay,
+        everything else zeroes out)."""
+        q, spec, K, d = self.quantizer, self.spec, self.K, self.d
+        aggregation = self.engine_cfg.aggregation
+
+        def agg(params, fresh, buf, w_fresh, w_buf, move, keep):
+            if aggregation == "wire":
+                stacked = jax.tree_util.tree_map(
+                    lambda f, bu: jnp.concatenate([f, bu], axis=0),
+                    fresh, buf)
+                w = jnp.concatenate([w_fresh, w_buf], axis=0)
+                upd = mixed_res_wire_reduce(stacked, w, q.b, d)
+            else:
+                upd = (jnp.einsum("k,kd->d", w_fresh, fresh)
+                       + jnp.einsum("k,kd->d", w_buf, buf))
+            params = jax.tree_util.tree_map(
+                lambda p, u: p + u, params, unflatten_pytree(upd, spec))
+
+            def shuffle(f, bu):
+                m = jnp.reshape(move, (K,) + (1,) * (f.ndim - 1)) > 0
+                kp = jnp.reshape(keep, (K,) + (1,) * (f.ndim - 1)) > 0
+                return jnp.where(m, f, jnp.where(kp, bu,
+                                                 jnp.zeros_like(bu)))
+
+            new_buf = jax.tree_util.tree_map(shuffle, fresh, buf)
+            _obs.jit_tap("engine.async_agg",
+                         {"w_fresh_sum": jnp.sum(w_fresh),
+                          "w_buf_sum": jnp.sum(w_buf),
+                          "buf_occupancy": jnp.mean(move + keep)})
+            return params, new_buf
+
+        return agg
+
+    def _async_steps(self, R: Optional[int] = None) -> Tuple:
+        """(train, agg) jitted async dispatches for replicate count R
+        (None = unreplicated).  R=1 routes through the SAME compiled
+        functions as the unreplicated path via squeeze/expand — the
+        same idiom (and for the same bit-for-bit reason) as
+        ``_replicated_step``."""
+        if R not in self._async_step_cache:
+            train_fn = self._build_async_train_fn()
+            agg_fn = self._build_async_agg_fn()
+            probe_t = _obs.retrace_probe(
+                f"sim.async_train/{self._obs_name}"
+                + ("" if R is None else f"/R{R}"))
+            probe_a = _obs.retrace_probe(
+                f"sim.async_agg/{self._obs_name}"
+                + ("" if R is None else f"/R{R}"))
+            if R is None:
+                # params survive the train dispatch (the agg dispatch
+                # still needs them), so only qstate is donated there;
+                # the agg dispatch donates its params + buffer carries
+                # (the fresh payload is not donated: only one
+                # buffer-shaped output exists for XLA to alias)
+                self._async_step_cache[R] = (
+                    jax.jit(probe_t(train_fn), donate_argnums=(1,)),
+                    jax.jit(probe_a(agg_fn), donate_argnums=(0, 2)))
+            elif R == 1:
+                train1, agg1 = self._async_steps(None)
+
+                def sq(tr):
+                    return jax.tree_util.tree_map(lambda x: x[0], tr)
+
+                def ex(tr):
+                    return jax.tree_util.tree_map(lambda x: x[None], tr)
+
+                def train_r1(params, qstate, xs, ys, commit):
+                    pay, qs, bits, aux = train1(sq(params), sq(qstate),
+                                                xs[0], ys[0], commit[0])
+                    return ex(pay), ex(qs), bits[None], ex(aux)
+
+                def agg_r1(params, fresh, buf, w_fresh, w_buf, move,
+                           keep):
+                    p, nb = agg1(sq(params), sq(fresh), sq(buf),
+                                 w_fresh[0], w_buf[0], move[0], keep[0])
+                    return ex(p), ex(nb)
+
+                self._async_step_cache[R] = (train_r1, agg_r1)
+            else:
+                mode = self.engine_cfg.replicate_batching
+                if mode == "auto":
+                    mode = "vmap" if jax.default_backend() in (
+                        "tpu", "gpu") else "map"
+                if self.engine_cfg.aggregation == "wire":
+                    mode = "map"    # Pallas kernels: unbatched windows
+                if mode == "map":
+                    batch = lambda fn: (lambda *args: jax.lax.map(
+                        lambda a: fn(*a), args))
+                else:
+                    batch = jax.vmap
+                self._async_step_cache[R] = (
+                    jax.jit(probe_t(batch(train_fn)),
+                            donate_argnums=(1,)),
+                    jax.jit(probe_a(batch(agg_fn)),
+                            donate_argnums=(0, 2)))
+        return self._async_step_cache[R]
+
+    def _init_async_clock(self, R: Optional[int] = None) -> AsyncClock:
+        """Empty bounded-staleness buffer: host masks all-clear, device
+        payload slots all-zero (a zero slot with weight zero contributes
+        exactly nothing to the aggregate)."""
+        B = 1 if R is None else R
+        K, d = self.K, self.d
+        if self.engine_cfg.aggregation == "wire":
+            shapes = jax.eval_shape(
+                lambda z: mixed_res_encode(z, self.quantizer.lambda_,
+                                           self.quantizer.b),
+                jax.ShapeDtypeStruct((K, d), jnp.float32))
+            zero = lambda sd: jnp.zeros(sd.shape if R is None
+                                        else (R,) + sd.shape, sd.dtype)
+            buffer = jax.tree_util.tree_map(zero, shapes)
+        else:
+            buffer = jnp.zeros((K, d) if R is None else (R, K, d),
+                               jnp.float32)
+        return AsyncClock(
+            in_flight=np.zeros((B, K), bool),
+            remaining_s=np.zeros((B, K)),
+            staleness=np.zeros((B, K), np.int64),
+            buffer=buffer)
+
     # ----------------------------------------------------------- rounds
     def _dense_round(self, params, qstate, xs, ys, weights, active_np):
         """Eager quantize + user-ordered weighted aggregation: replays
@@ -568,7 +1021,9 @@ class VectorizedFLEngine:
             rng=np.random.default_rng(fl.seed),   # sequential-loop stream
             part_rng=np.random.default_rng((fl.seed, 0x5EED)),
             test_x=jnp.asarray(self.test.x),
-            test_y=jnp.asarray(self.test.y), logs=[])
+            test_y=jnp.asarray(self.test.y), logs=[],
+            async_clock=self._init_async_clock()
+            if self.engine_cfg.async_active else None)
 
     def train_round(self, state: RunState, t: int) -> RoundWork:
         """Stage 1-2: channel redraw, minibatch draw, the jitted local
@@ -588,6 +1043,25 @@ class VectorizedFLEngine:
         xs = jnp.asarray(self.dataset.x[sel])
         ys = jnp.asarray(self.dataset.y[sel])
         active = self._draw_active(state.part_rng)
+        if ecfg.async_active:
+            # async: busy users (mid-upload) keep transmitting their
+            # old payload — only participating, non-busy users start a
+            # FRESH upload this round; the aggregation happens later in
+            # complete_round_async, once arrivals are known
+            clock = state.async_clock
+            fresh = active * (~clock.in_flight[0]).astype(np.float64)
+            train_step, _ = self._async_steps(None)
+            clock.payload, state.qstate, bits, aux = train_step(
+                state.params, state.qstate, xs, ys,
+                jnp.asarray(fresh, jnp.float32))
+            clock.uploads_started += int(fresh.sum())
+            bits_np = np.asarray(bits, np.float64) * fresh
+            s_np = np.asarray(aux["s"], np.float64) if "s" in aux \
+                else np.ones(self.K)
+            fb = fresh.astype(bool)
+            mean_s = float(np.mean(s_np[fb])) if fb.any() else 0.0
+            return RoundWork(t=t, bits_np=bits_np, active=fresh,
+                             mean_s=mean_s, participating=active)
         weights = self._round_weights(active)
         if not ecfg.effective_fused:
             state.params, state.qstate, bits, aux = self._dense_round(
@@ -641,7 +1115,9 @@ class VectorizedFLEngine:
                            (fl.seed, 0x5EED, _REPL_TAG, r))
                        for r in range(R)],
             test_x=jnp.asarray(self.test.x),
-            test_y=jnp.asarray(self.test.y))
+            test_y=jnp.asarray(self.test.y),
+            async_clock=self._init_async_clock(R)
+            if self.engine_cfg.async_active else None)
 
     def train_round_replicated(self, state: ReplicatedRunState, t: int
                                ) -> ReplicatedRoundWork:
@@ -667,6 +1143,24 @@ class VectorizedFLEngine:
         ys = jnp.asarray(self.dataset.y[sel])
         active = np.stack([self._draw_active(prng)
                            for prng in state.part_rngs])      # [R, K]
+        if ecfg.async_active:
+            clock = state.async_clock
+            fresh = active * (~clock.in_flight).astype(np.float64)
+            train_step, _ = self._async_steps(R)
+            clock.payload, state.qstate, bits, aux = train_step(
+                state.params, state.qstate, xs, ys,
+                jnp.asarray(fresh, jnp.float32))
+            clock.uploads_started += int(fresh.sum())
+            state.rounds_done = t
+            bits_np = np.asarray(bits, np.float64) * fresh
+            s_np = np.asarray(aux["s"], np.float64) if "s" in aux \
+                else np.ones((R, self.K))
+            mean_s = np.array([
+                float(np.mean(s_np[r][fresh[r].astype(bool)]))
+                if fresh[r].any() else 0.0 for r in range(R)])
+            return ReplicatedRoundWork(t=t, bits_np=bits_np,
+                                       active=fresh, mean_s=mean_s,
+                                       participating=active)
         weights = np.stack([self._round_weights(a) for a in active])
         step = self._replicated_step(R)
         state.params, state.qstate, bits, aux = step(
@@ -681,6 +1175,27 @@ class VectorizedFLEngine:
                            for r in range(R)])
         return ReplicatedRoundWork(t=t, bits_np=bits_np, active=active,
                                    mean_s=mean_s)
+
+    def complete_round_replicated_async(
+            self, state: ReplicatedRunState, work: ReplicatedRoundWork,
+            per_user_s: np.ndarray) -> AsyncRoundInfo:
+        """Replicated async stage 3.5: R event clocks advance host-side
+        and ONE jitted aggregate dispatch updates all R replicates'
+        params + buffers.  ``per_user_s``: [R, K] solve latencies."""
+        R = state.R
+        clock = state.async_clock
+        step, info = self._advance_clock(
+            clock, work.active, work.participating,
+            np.asarray(per_user_s, np.float64))
+        _, agg_step = self._async_steps(R)
+        f32 = lambda a: jnp.asarray(a, jnp.float32)
+        state.params, clock.buffer = agg_step(
+            state.params, clock.payload, clock.buffer,
+            f32(step.w_fresh), f32(step.w_buf),
+            f32(step.move), f32(step.keep))
+        clock.payload = None
+        self._record_async(work.t, info)
+        return info
 
     def replicate_params(self, state: ReplicatedRunState, r: int):
         """Replicate r's current param pytree (device view)."""
@@ -718,11 +1233,27 @@ class VectorizedFLEngine:
                           bits_np: np.ndarray, active: np.ndarray
                           ) -> float:
         """Stage 3 (host reference path): per-cell numpy power solve."""
+        return self.solve_uplink_host_detailed(chan, bits_np, active)[0]
+
+    def solve_uplink_host_detailed(
+            self, chan: Optional[ChannelRealization],
+            bits_np: np.ndarray, active: np.ndarray
+            ) -> Tuple[float, np.ndarray]:
+        """Host power solve returning ``(straggler_s, per_user_s [K])``
+        — per-user upload-completion times scattered back to the full
+        user axis (0 for absent users), the async event clock's input.
+        """
+        per_user = np.zeros(self.K)
         if self.power is None or chan is None:
-            return 0.0
+            return 0.0, per_user
         act_idx = np.flatnonzero(active)
+        if len(act_idx) == 0:
+            # async corner: every participating user is mid-upload, so
+            # nobody transmits fresh payload this round
+            return 0.0, per_user
         if len(act_idx) == self.K:
             sol = self.power.solve(chan, np.maximum(bits_np, 1.0))
+            per_user = np.asarray(sol.latencies, np.float64)
         else:
             # churn: only active users transmit — solve the
             # power-control problem on the sub-channel so
@@ -730,30 +1261,125 @@ class VectorizedFLEngine:
             sol = self.power.solve(
                 _subchannel(chan, act_idx),
                 np.maximum(bits_np[act_idx], 1.0))
-        return sol.straggler_latency
+            per_user[act_idx] = np.asarray(sol.latencies, np.float64)
+        return sol.straggler_latency, per_user
+
+    # -------------------------------------------------- async complete
+    def _advance_clock(self, clock: AsyncClock, active: np.ndarray,
+                       participating: np.ndarray, ell: np.ndarray
+                       ) -> Tuple[AsyncClockStep, AsyncRoundInfo]:
+        """Run the host event clock and fold the transition into the
+        clock's host state + cumulative drop counters.  All inputs
+        leading-batched [B, K]."""
+        step = advance_async_clock(
+            clock.in_flight, clock.remaining_s, clock.staleness, ell,
+            active, participating, self.rho, self.engine_cfg.staleness)
+        clock.in_flight = step.in_flight
+        clock.remaining_s = step.remaining_s
+        clock.staleness = step.staleness
+        clock.dropped_stale += int(step.dropped_stale.sum())
+        clock.dropped_churn += int(step.dropped_churn.sum())
+        clock.arrived_total += int(step.arrived.sum())
+        n_arr = step.arrived.sum(axis=-1)
+        stale_sum = step.arrived_staleness.sum(axis=-1)
+        info = AsyncRoundInfo(
+            round_uplink_s=step.round_s,
+            n_arrived=n_arr,
+            mean_staleness=np.divide(
+                stale_sum, n_arr, out=np.zeros_like(step.round_s),
+                where=n_arr > 0),
+            max_staleness_obs=step.arrived_staleness.max(axis=-1),
+            straggler_gap_s=step.straggler_gap_s,
+            dropped_stale=step.dropped_stale,
+            dropped_churn=step.dropped_churn,
+            effective_participation=n_arr / float(self.K),
+            in_flight_next=step.in_flight.sum(axis=-1))
+        return step, info
+
+    def complete_round_async(self, state: RunState, work: RoundWork,
+                             per_user_s: np.ndarray) -> AsyncRoundInfo:
+        """Async stage 3.5: host event clock + the jitted
+        aggregate+buffer-shuffle dispatch.  MUST be called on the
+        TRAINING state (the one ``train_round`` advanced) — it updates
+        ``state.params``; ``finish_round`` never aggregates."""
+        clock = state.async_clock
+        step, info = self._advance_clock(
+            clock, work.active[None], work.participating[None],
+            np.asarray(per_user_s, np.float64)[None])
+        _, agg_step = self._async_steps(None)
+        f32 = lambda a: jnp.asarray(a[0], jnp.float32)
+        state.params, clock.buffer = agg_step(
+            state.params, clock.payload, clock.buffer,
+            f32(step.w_fresh), f32(step.w_buf),
+            f32(step.move), f32(step.keep))
+        clock.payload = None
+        self._record_async(work.t, info)
+        return info
+
+    def _record_async(self, t: int, info: AsyncRoundInfo) -> None:
+        if not _obs.enabled():
+            return
+        _obs.record(
+            "engine.async", round=t,
+            round_uplink_s=float(np.mean(info.round_uplink_s)),
+            arrived=float(np.mean(info.n_arrived)),
+            mean_staleness=float(np.mean(info.mean_staleness)),
+            max_staleness=int(np.max(info.max_staleness_obs)),
+            straggler_gap_s=float(np.mean(info.straggler_gap_s)),
+            dropped_stale=int(np.sum(info.dropped_stale)),
+            dropped_churn=int(np.sum(info.dropped_churn)),
+            effective_participation=float(
+                np.mean(info.effective_participation)),
+            in_flight=float(np.mean(info.in_flight_next)))
 
     def finish_round(self, state: RunState, work: RoundWork,
-                     uplink: float, verbose: bool = False) -> bool:
+                     uplink: float, verbose: bool = False,
+                     async_info: Optional[AsyncRoundInfo] = None,
+                     per_user_s: Optional[np.ndarray] = None) -> bool:
         """Stage 4: latency accounting, eval, logging.  Returns False
-        once the latency budget is exhausted (stop stepping)."""
+        once the latency budget is exhausted (stop stepping).
+
+        Never aggregates — async callers run ``complete_round_async``
+        first and pass its ``async_info`` here, so the latency/budget
+        burn-down uses the async event clock (the round costs the
+        deadline the server actually waited, not the slowest user), and
+        the log rows carry staleness/arrival columns.  ``per_user_s``
+        (sync path) feeds the straggler-gap metric."""
         from repro.fl.cnn import cnn_accuracy
         from repro.fl.loop import RoundLog
 
         t = work.t
+        if async_info is not None:
+            uplink = float(async_info.round_uplink_s[0])
+            gap = float(async_info.straggler_gap_s[0])
+            eff = float(async_info.effective_participation[0])
+            stale = float(async_info.mean_staleness[0])
+            dropped = int(async_info.dropped_stale[0]
+                          + async_info.dropped_churn[0])
+        else:
+            gap = 0.0 if per_user_s is None \
+                else straggler_gap(per_user_s, work.active)
+            eff = float(np.sum(work.active > 0)) / self.K
+            stale, dropped = 0.0, 0
         state.cum_latency += uplink + self.comp_lat
         acc = None
         if self.eval_due(t):
             acc = cnn_accuracy(state.params, state.test_x, state.test_y)
         state.logs.append(RoundLog(t, work.bits_np, uplink,
                                    self.comp_lat, state.cum_latency,
-                                   work.mean_s, acc))
+                                   work.mean_s, acc,
+                                   straggler_gap_s=gap,
+                                   mean_staleness=stale,
+                                   effective_participation=eff,
+                                   dropped_uploads=dropped))
         state.rounds_done = t
         self._log_round(t, acc, work, uplink, state.cum_latency,
-                        verbose)
+                        verbose, gap=gap)
         return not self.budget_spent(state.cum_latency)
 
     def _log_round(self, t: int, acc, work, uplink: float,
-                   cum_latency: float, verbose: bool) -> None:
+                   cum_latency: float, verbose: bool,
+                   gap: float = 0.0) -> None:
         """Round logging: every round goes to the active obs session;
         the console line (the quickstart's old ``print``) appears only
         under verbose, throttled by EngineConfig.log_every."""
@@ -768,6 +1394,7 @@ class VectorizedFLEngine:
                 cum_latency_s=float(cum_latency),
                 mean_s=float(work.mean_s),
                 active_users=int(np.sum(work.active > 0)),
+                straggler_gap_s=float(gap),
                 budget_remaining_s=None if budget is None
                 else float(budget - cum_latency))
         if (verbose or ecfg.verbose) and acc is not None:
@@ -783,6 +1410,7 @@ class VectorizedFLEngine:
                         rounds_completed=state.rounds_done)
 
     def run(self, verbose: bool = False):
+        async_on = self.engine_cfg.async_active
         state = self.start_run()
         for t in range(1, self.fl.T + 1):
             with _obs.round_scope(t, quantizer=self.quantizer.name):
@@ -790,11 +1418,18 @@ class VectorizedFLEngine:
                     work = self.train_round(state, t)
                     sc.block(state.params)
                 with _obs.scope("solve_uplink"):
-                    uplink = self.solve_uplink_host(
+                    uplink, per_user = self.solve_uplink_host_detailed(
                         state.chan, work.bits_np, work.active)
+                info = None
+                if async_on:
+                    with _obs.scope("complete_async"):
+                        info = self.complete_round_async(state, work,
+                                                         per_user)
                 with _obs.scope("finish_round"):
                     more = self.finish_round(state, work, uplink,
-                                             verbose=verbose)
+                                             verbose=verbose,
+                                             async_info=info,
+                                             per_user_s=per_user)
             if not more:
                 break
         return self.result(state)

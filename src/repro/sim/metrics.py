@@ -5,7 +5,10 @@ either the vectorized engine or the sequential reference loop) to the
 scalar metrics reported in the paper's tables: best/final accuracy,
 rounds completed (T_max under a budget), mean payload bits, mean
 high-resolution fraction s, cumulative latency and straggler
-percentiles.
+percentiles — plus the straggler-gap (slowest minus median upload
+completion) and async-round columns (mean staleness over aggregated
+arrivals, effective participation, dropped-upload totals), which stay
+at their sync defaults for lockstep runs.
 
 ``summarize_replicates`` lifts that row over the Monte-Carlo replicate
 axis: each replicate's log list is summarized independently, every
@@ -42,6 +45,19 @@ def summarize_logs(logs: List) -> Dict[str, float]:
         "mean_uplink_s": float(uplinks.mean()) if logs else 0.0,
         "p95_uplink_s": float(np.percentile(uplinks, 95))
         if logs else 0.0,
+        # straggler/async columns (PR 7): getattr defaults keep logs
+        # from pre-async code paths summarizable
+        "mean_straggler_gap_s": float(np.mean(
+            [getattr(l, "straggler_gap_s", 0.0) for l in logs]))
+        if logs else 0.0,
+        "mean_staleness": float(np.mean(
+            [getattr(l, "mean_staleness", 0.0) for l in logs]))
+        if logs else 0.0,
+        "effective_participation": float(np.mean(
+            [getattr(l, "effective_participation", 1.0) for l in logs]))
+        if logs else float("nan"),
+        "dropped_uploads": float(sum(
+            getattr(l, "dropped_uploads", 0) for l in logs)),
     }
 
 
@@ -75,7 +91,9 @@ def summarize_replicates(replicate_logs: Sequence[List]
 # <= p_max) and left blank by the host-solve path.
 METRIC_FIELDS = ["rounds", "best_acc", "final_acc", "mean_bits_per_user",
                  "mean_s", "total_latency_s", "mean_uplink_s",
-                 "p95_uplink_s", "max_p"]
+                 "p95_uplink_s", "mean_straggler_gap_s",
+                 "mean_staleness", "effective_participation",
+                 "dropped_uploads", "max_p"]
 
 # the replicated driver's extra columns (summarize_replicates); written
 # only when some row carries them, so unreplicated sweep CSVs keep

@@ -46,6 +46,16 @@ ChannelBatch).  Summaries become across-replicate means with
 the per-replicate FLResult list.  ``replicates=1`` exercises the same
 machinery and reproduces the unreplicated driver bit-for-bit on
 training metrics (tests/test_mc_replicates.py).
+
+Async scenarios (``Scenario.async_active``, DESIGN.md section 11) keep
+the lockstep structure but NOT the shared-training-state dedup: the
+event clock's arrival times depend on the power solve, so each
+(quantizer, power) cell gets its own track.  The batched solve still
+groups cells by power label — one device solve per power spec per
+round — and after it each async cell runs the host event clock plus
+ONE jitted aggregate dispatch (``complete_round_async``) before the
+usual finish/accounting stage, whose latency burn-down then uses the
+event-clock round duration instead of the slowest user.
 """
 from __future__ import annotations
 
@@ -157,10 +167,15 @@ def _emit_solve_event(plabel: str, sol, mask: np.ndarray,
 
 
 def _solve_round_batched(cells: List[_Cell], works: List[RoundWork],
-                         cache: _BundleCache) -> List[float]:
+                         cache: _BundleCache
+                         ) -> Tuple[List[float], List[np.ndarray]]:
     """One batched device solve per distinct power spec; returns the
-    per-cell straggler latency for this round."""
+    per-cell straggler latency and per-user completion times [K]
+    (zeros without a channel — the async event clock's input) for
+    this round."""
     uplinks = [0.0] * len(cells)
+    K0 = cells[0].track.engine.K if cells else 0
+    per_user = [np.zeros(K0) for _ in cells]
     # group cells by power label (one spec per label within a grid)
     groups: Dict[str, List[int]] = {}
     for i, cell in enumerate(cells):
@@ -186,13 +201,15 @@ def _solve_round_batched(cells: List[_Cell], works: List[RoundWork],
                                  np.maximum(works[i].bits_np, 1.0), 1.0)
         sol = batched_solver(cells[idx[0]].power)(cb, bits, mask=mask)
         stragglers = np.asarray(sol.straggler_latency, np.float64)
+        latencies = np.asarray(sol.latencies, np.float64)
         p_max_round = np.asarray(np.max(sol.p, axis=-1), np.float64)
         if _obs.enabled():
             _emit_solve_event(plabel, sol, mask, stragglers)
         for row, i in enumerate(idx):
             uplinks[i] = float(stragglers[row])
+            per_user[i] = latencies[row]
             cells[i].max_p = max(cells[i].max_p, float(p_max_round[row]))
-    return uplinks
+    return uplinks, per_user
 
 
 def _run_scenario_lockstep(scn: Scenario, tracks: List[_Track],
@@ -218,27 +235,42 @@ def _run_scenario_lockstep(scn: Scenario, tracks: List[_Track],
                     if c.alive]
             works = [track_work[id(c.track)] for c in live]
             with _obs.scope("solve_uplink"):
-                uplinks = _solve_round_batched(live, works, cache)
+                uplinks, per_user = _solve_round_batched(live, works,
+                                                         cache)
             with _obs.scope("finish_round"):
-                for cell, work, uplink in zip(live, works, uplinks):
-                    # accounting sees the shared trajectory's current
-                    # params (snapshotted here, so a budget-stopped
-                    # cell keeps the params of ITS final round even as
-                    # the track trains on)
-                    cell.acct.params = cell.track.state.params
+                for cell, work, uplink, pu in zip(live, works, uplinks,
+                                                  per_user):
+                    eng = cell.track.engine
+                    info = None
                     with _obs.context(quantizer=cell.qlabel,
                                       power=cell.plabel):
-                        cell.alive = cell.track.engine.finish_round(
-                            cell.acct, work, uplink, verbose=verbose)
+                        if eng.engine_cfg.async_active:
+                            # async tracks are per-(quantizer, power)
+                            # cell (run_grid_batched), so completing on
+                            # the TRACK's training state is exact
+                            info = eng.complete_round_async(
+                                cell.track.state, work, pu)
+                        # accounting sees the shared trajectory's
+                        # current params (snapshotted here, so a
+                        # budget-stopped cell keeps the params of ITS
+                        # final round even as the track trains on)
+                        cell.acct.params = cell.track.state.params
+                        cell.alive = eng.finish_round(
+                            cell.acct, work, uplink, verbose=verbose,
+                            async_info=info, per_user_s=pu)
 
 
 def _solve_round_replicated(cells: List[_ReplCell],
                             works: List[ReplicatedRoundWork],
-                            cache: _BundleCache, R: int) -> np.ndarray:
+                            cache: _BundleCache, R: int
+                            ) -> Tuple[np.ndarray, np.ndarray]:
     """One batched device solve per distinct power spec over the
     flattened R x cells axis; returns per-(cell, replicate) straggler
-    latencies [n_cells, R]."""
+    latencies [n_cells, R] and per-user completion times
+    [n_cells, R, K]."""
     uplinks = np.zeros((len(cells), R))
+    K0 = cells[0].track.engine.K if cells else 0
+    per_user = np.zeros((len(cells), R, K0))
     groups: Dict[str, List[int]] = {}
     for i, cell in enumerate(cells):
         if cell.power is None or cell.track.state.chans[0] is None:
@@ -264,19 +296,22 @@ def _solve_round_replicated(cells: List[_ReplCell],
         sol = batched_solver(cells[idx[0]].power)(cb, bits, mask=mask)
         stragglers = np.asarray(sol.straggler_latency,
                                 np.float64).reshape(len(idx), R)
+        latencies = np.asarray(sol.latencies,
+                               np.float64).reshape(len(idx), R, K)
         if _obs.enabled():
             _emit_solve_event(plabel, sol, mask, stragglers)
         p_max_round = np.asarray(np.max(sol.p, axis=-1),
                                  np.float64).reshape(len(idx), R)
         for row, i in enumerate(idx):
             uplinks[i] = stragglers[row]
+            per_user[i] = latencies[row]
             # max_p only over replicates still accounting (alive);
             # dead replicates' rows ride along for shape stability
             if cells[i].alive.any():
                 cells[i].max_p = max(
                     cells[i].max_p,
                     float(np.max(p_max_round[row][cells[i].alive])))
-    return uplinks
+    return uplinks, per_user
 
 
 def _run_scenario_lockstep_replicated(scn: Scenario,
@@ -301,7 +336,19 @@ def _run_scenario_lockstep_replicated(scn: Scenario,
                     if c.alive.any()]
             works = [track_work[id(c.track)] for c in live]
             with _obs.scope("solve_uplink"):
-                uplinks = _solve_round_replicated(live, works, cache, R)
+                uplinks, per_user = _solve_round_replicated(
+                    live, works, cache, R)
+            # async cells aggregate BEFORE eval (sync cells aggregated
+            # inside the train step, so the eval ordering matches)
+            infos: List[Optional[object]] = [None] * len(live)
+            for i, (cell, work) in enumerate(zip(live, works)):
+                eng = cell.track.engine
+                if eng.engine_cfg.async_active:
+                    with _obs.scope("complete_async"), \
+                         _obs.context(quantizer=cell.qlabel,
+                                      power=cell.plabel):
+                        infos[i] = eng.complete_round_replicated_async(
+                            cell.track.state, work, per_user[i])
             # per-replicate accuracy, once per track on eval rounds —
             # only for replicates some cell still accounts (a replicate
             # dead in EVERY cell of the track is never logged again)
@@ -315,9 +362,12 @@ def _run_scenario_lockstep_replicated(scn: Scenario,
                                 [c.alive for c in tr.cells]))
                         if tr.engine.eval_due(t) else None)
             with _obs.scope("finish_round"):
-                for cell, work, uplink in zip(live, works, uplinks):
+                for cell, work, uplink, pu, info in zip(
+                        live, works, uplinks, per_user, infos):
                     _finish_replicated_cell(cell, work, uplink,
-                                            track_acc, t, R, verbose)
+                                            track_acc, t, R, verbose,
+                                            async_info=info,
+                                            per_user=pu)
     for tr in tracks:
         for cell in tr.cells:
             for r in np.flatnonzero(cell.alive):
@@ -328,19 +378,40 @@ def _run_scenario_lockstep_replicated(scn: Scenario,
 def _finish_replicated_cell(cell: _ReplCell, work: ReplicatedRoundWork,
                             uplink: np.ndarray,
                             track_acc: Dict[int, Optional[np.ndarray]],
-                            t: int, R: int, verbose: bool) -> None:
+                            t: int, R: int, verbose: bool,
+                            async_info=None,
+                            per_user: Optional[np.ndarray] = None
+                            ) -> None:
     from repro.fl.loop import RoundLog
+
+    from .engine import straggler_gap
 
     eng = cell.track.engine
     comp_lat = eng.comp_lat
     accs = track_acc[id(cell.track)]
+    K = eng.K
     for r in np.flatnonzero(cell.alive):
-        cell.cum_latency[r] += uplink[r] + comp_lat
+        if async_info is not None:
+            # async: the event clock's round duration burns the budget
+            up = float(async_info.round_uplink_s[r])
+            gap = float(async_info.straggler_gap_s[r])
+            eff = float(async_info.effective_participation[r])
+            stale = float(async_info.mean_staleness[r])
+            dropped = int(async_info.dropped_stale[r]
+                          + async_info.dropped_churn[r])
+        else:
+            up = float(uplink[r])
+            gap = 0.0 if per_user is None else straggler_gap(
+                per_user[r], work.active[r])
+            eff = float(np.sum(work.active[r] > 0)) / K
+            stale, dropped = 0.0, 0
+        cell.cum_latency[r] += up + comp_lat
         acc = None if accs is None else float(accs[r])
         cell.logs[r].append(RoundLog(
-            t, work.bits_np[r], float(uplink[r]), comp_lat,
+            t, work.bits_np[r], up, comp_lat,
             float(cell.cum_latency[r]), float(work.mean_s[r]),
-            acc))
+            acc, straggler_gap_s=gap, mean_staleness=stale,
+            effective_participation=eff, dropped_uploads=dropped))
         cell.rounds_done[r] = t
         if eng.budget_spent(cell.cum_latency[r]):
             cell.alive[r] = False
@@ -352,6 +423,14 @@ def _finish_replicated_cell(cell: _ReplCell, work: ReplicatedRoundWork,
         budget = eng.fl.latency_budget_s
         cum = cell.cum_latency[cell.alive] if cell.alive.any() \
             else cell.cum_latency
+        if async_info is not None:
+            gap_mean = float(np.mean(async_info.straggler_gap_s))
+        elif per_user is not None:
+            gap_mean = float(np.mean(
+                [straggler_gap(per_user[r], work.active[r])
+                 for r in range(R)]))
+        else:
+            gap_mean = 0.0
         _obs.record(
             "engine.round", t=t, quantizer=cell.qlabel,
             power=cell.plabel, replicates=R,
@@ -361,6 +440,7 @@ def _finish_replicated_cell(cell: _ReplCell, work: ReplicatedRoundWork,
             uplink_s=float(np.mean(uplink)),
             cum_latency_s=float(np.max(cell.cum_latency)),
             mean_s=float(np.mean(work.mean_s)),
+            straggler_gap_s=gap_mean,
             budget_remaining_s=None if budget is None
             else float(budget - np.min(cum)))
     if verbose and accs is not None:
@@ -418,26 +498,35 @@ def run_grid_batched(scenarios: List[Union[str, Scenario]],
                 else (scn.replicates if scn.replicates > 1 else None)
             problem = build_problem(scn)
             chan = problem[4]
+            # sync cells share one training state per quantizer (power
+            # never feeds back into training); async arrival times DO
+            # feed back, so async scenarios build one track per
+            # (quantizer, power) cell.  The batched solve still groups
+            # by power label, so it stays one device solve per power
+            # spec per round either way.
+            pgroups = ([[item] for item in powers.items()]
+                       if scn.async_active else [list(powers.items())])
             if R is not None:
                 tracks_r: List[_ReplTrack] = []
                 for qlabel, qspec in quantizers.items():
-                    engine = _make_engine(scn, problem, qspec, None,
-                                          mesh=mesh)
-                    track = _ReplTrack(
-                        engine=engine,
-                        state=engine.start_replicated_run(R))
-                    for plabel, pspec in powers.items():
-                        pc = _make_power(pspec)
-                        track.cells.append(_ReplCell(
-                            track=track,
-                            power=pc if chan is not None else None,
-                            qlabel=qlabel, plabel=plabel,
-                            logs=[[] for _ in range(R)],
-                            cum_latency=np.zeros(R),
-                            alive=np.ones(R, dtype=bool),
-                            rounds_done=np.zeros(R, dtype=np.int64),
-                            params=[None] * R))
-                    tracks_r.append(track)
+                    for group in pgroups:
+                        engine = _make_engine(scn, problem, qspec, None,
+                                              mesh=mesh)
+                        track = _ReplTrack(
+                            engine=engine,
+                            state=engine.start_replicated_run(R))
+                        for plabel, pspec in group:
+                            pc = _make_power(pspec)
+                            track.cells.append(_ReplCell(
+                                track=track,
+                                power=pc if chan is not None else None,
+                                qlabel=qlabel, plabel=plabel,
+                                logs=[[] for _ in range(R)],
+                                cum_latency=np.zeros(R),
+                                alive=np.ones(R, dtype=bool),
+                                rounds_done=np.zeros(R, dtype=np.int64),
+                                params=[None] * R))
+                        tracks_r.append(track)
                 _run_scenario_lockstep_replicated(scn, tracks_r, R,
                                                   verbose)
                 for track in tracks_r:
@@ -446,20 +535,22 @@ def run_grid_batched(scenarios: List[Union[str, Scenario]],
             else:
                 tracks: List[_Track] = []
                 for qlabel, qspec in quantizers.items():
-                    engine = _make_engine(scn, problem, qspec, None,
-                                          mesh=mesh)
-                    track = _Track(engine=engine,
-                                   state=engine.start_run())
-                    for plabel, pspec in powers.items():
-                        pc = _make_power(pspec)
-                        acct = dataclasses.replace(track.state, logs=[],
-                                                   cum_latency=0.0,
-                                                   rounds_done=0)
-                        track.cells.append(_Cell(
-                            track=track,
-                            power=pc if chan is not None else None,
-                            qlabel=qlabel, plabel=plabel, acct=acct))
-                    tracks.append(track)
+                    for group in pgroups:
+                        engine = _make_engine(scn, problem, qspec, None,
+                                              mesh=mesh)
+                        track = _Track(engine=engine,
+                                       state=engine.start_run())
+                        for plabel, pspec in group:
+                            pc = _make_power(pspec)
+                            acct = dataclasses.replace(
+                                track.state, logs=[], cum_latency=0.0,
+                                rounds_done=0)
+                            track.cells.append(_Cell(
+                                track=track,
+                                power=pc if chan is not None else None,
+                                qlabel=qlabel, plabel=plabel,
+                                acct=acct))
+                        tracks.append(track)
                 _run_scenario_lockstep(scn, tracks, verbose)
                 for track in tracks:
                     for cell in track.cells:

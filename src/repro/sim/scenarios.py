@@ -11,7 +11,10 @@ sequential seed loop could not reach at useful speed:
   (Monte-Carlo averaging over fading geometry, as in Vu et al.);
 * ``hetero-data``    — Zipf-distributed shard sizes (device
   heterogeneity, as in Mahmoudi et al.);
-* ``grid-*``         — K x M network-shape sweep points.
+* ``grid-*``         — K x M network-shape sweep points;
+* ``async-*``        — asynchronous straggler-faithful rounds (event
+  clock, bounded-staleness buffer; ``async_scenarios`` generates the
+  alpha x deadline-quantile x buffer-depth sweep axes).
 
 Every scenario carries paper-scale parameters; sweep/quick mode scales
 K, T and the dataset down uniformly so the full grid runs on a laptop
@@ -29,7 +32,7 @@ from repro.core.channel import CFmMIMOConfig, make_channel
 from repro.data import (make_image_classification, partition_dirichlet,
                         partition_iid, partition_powerlaw)
 
-from .engine import EngineConfig
+from .engine import EngineConfig, StalenessConfig
 
 _DATASETS: Dict[str, Tuple[PaperCNNConfig, int]] = {
     "cifar10-syn": (CIFAR10, 10),
@@ -72,6 +75,18 @@ class Scenario:
     # vmapped through one jitted train step per round — and report
     # mean/ci95 summaries.  1 = point estimate (unreplicated driver).
     replicates: int = 1
+    # Asynchronous rounds (DESIGN.md section 11): per-user upload
+    # completion times govern aggregation.  async_mode=True with
+    # neither deadline set is the documented sync reduction (runs the
+    # lockstep path bit-for-bit).  deadline_quantile closes each round
+    # at that quantile of the pending completion times;
+    # staleness_alpha weighs arrivals by (1+staleness)^-alpha;
+    # max_staleness bounds the in-flight buffer depth.
+    async_mode: bool = False
+    deadline_s: Optional[float] = None
+    deadline_quantile: Optional[float] = None
+    staleness_alpha: float = 0.0
+    max_staleness: int = 2
 
     def scaled(self, quick: bool = True) -> "Scenario":
         """Quick-mode variant: reduced K/T/data for CPU CI runs."""
@@ -92,7 +107,20 @@ class Scenario:
                             fused=self.fused,
                             participation=self.participation,
                             redraw_channel_every=self.redraw_channel_every,
-                            channel_seed=self.seed)
+                            channel_seed=self.seed,
+                            async_mode=self.async_mode,
+                            staleness=StalenessConfig(
+                                deadline_s=self.deadline_s,
+                                deadline_quantile=self.deadline_quantile,
+                                alpha=self.staleness_alpha,
+                                max_staleness=self.max_staleness))
+
+    @property
+    def async_active(self) -> bool:
+        """Mirrors EngineConfig.async_active: the batched driver needs
+        this before any engine exists (async trajectories depend on the
+        power controller, so tracks cannot be shared across cells)."""
+        return self.engine_config().async_active
 
 
 def build_problem(scn: Scenario):
@@ -167,6 +195,32 @@ def grid_scenarios(Ks=(10, 20, 40), Ms=(16, 36, 64),
     return out
 
 
+def async_scenarios(alphas=(0.0, 1.0), quantiles=(0.5, 0.9),
+                    depths=(1, 2), base: Optional[Scenario] = None
+                    ) -> List[Scenario]:
+    """The staleness sweep axes: alpha x deadline-quantile x
+    buffer-depth variants of ``base`` (default: the ``async-q50``
+    operating point).  Returned UNREGISTERED — pass the Scenario
+    objects straight to run_grid / run_grid_batched (both accept
+    instances as well as registry names)."""
+    base = base or SCENARIOS.get("async-q50") or Scenario(
+        name="async-base", description="async sweep point",
+        K=20, T=40, async_mode=True, deadline_quantile=0.5)
+    out = []
+    for alpha in alphas:
+        for q in quantiles:
+            for depth in depths:
+                out.append(dataclasses.replace(
+                    base, name=f"async-a{alpha:g}-q{q:g}-d{depth}",
+                    description=(f"async sweep point alpha={alpha:g}, "
+                                 f"deadline quantile {q:g}, buffer "
+                                 f"depth {depth}"),
+                    async_mode=True, deadline_s=None,
+                    deadline_quantile=q, staleness_alpha=alpha,
+                    max_staleness=depth))
+    return out
+
+
 register_scenario(Scenario(
     name="paper-table2",
     description="Table II operating point: K=20, L=5, IID/convergence "
@@ -223,6 +277,30 @@ register_scenario(Scenario(
                 "dequant-reduce all in the streaming kernel suite "
                 "(kernels/mixed_res.py, DESIGN.md section 9)",
     M=None, K=20, T=40, aggregation="wire"))
+
+register_scenario(Scenario(
+    name="async-q50",
+    description="asynchronous rounds: each round closes at the median "
+                "pending completion time; misses wait in a depth-2 "
+                "staleness buffer with (1+s)^-0.5 down-weighting",
+    K=20, T=40, async_mode=True, deadline_quantile=0.5,
+    staleness_alpha=0.5, max_staleness=2))
+
+register_scenario(Scenario(
+    name="async-churn",
+    description="async rounds under user churn (participation 0.7): "
+                "users dropping mid-upload are evicted from the "
+                "staleness buffer, never aggregated",
+    K=20, T=40, async_mode=True, deadline_quantile=0.5,
+    staleness_alpha=1.0, max_staleness=2, participation=0.7,
+    partition="dirichlet"))
+
+register_scenario(Scenario(
+    name="async-sync-reduction",
+    description="async_mode=True with no deadline — the documented "
+                "sync reduction: runs the lockstep engine bit-for-bit "
+                "(the parity test's operating point)",
+    K=20, T=40, async_mode=True))
 
 for _scn in grid_scenarios():
     register_scenario(_scn)

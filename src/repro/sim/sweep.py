@@ -15,6 +15,14 @@ Each cell builds its problem once, runs the engine, and summarizes the
 round logs via repro.sim.metrics.  Quantizer/power specs are either
 registry names (with optional kwargs) or ready instances, so the
 benchmarks can pass their calibrated objects straight through.
+
+Async scenarios (``async_mode=True`` with a deadline; see
+``repro.sim.scenarios.async_scenarios`` for the staleness sweep axes)
+run fine through this host-solve runner, but the batched driver
+(``repro.sim.run_grid_batched``) is the production path: it keeps one
+training track per (quantizer, power) cell — required because async
+trajectories depend on the power controller — while still batching the
+device power solves.
 """
 from __future__ import annotations
 

@@ -1,0 +1,466 @@
+"""Async straggler-faithful round engine (repro.sim, DESIGN.md §11).
+
+The contract the ISSUE pins:
+
+* sync reduction — ``async_mode=True`` with no deadline runs the
+  lockstep engine BIT-FOR-BIT (the async machinery is gated on
+  ``EngineConfig.async_active``, so the code path is identical); a
+  huge finite deadline reduces semantically (every upload beats the
+  deadline, so the event clock reproduces lockstep weights/latency);
+* staleness weights are a convex combination — non-negative, sum to 1
+  over the arrived set whenever anything arrived (all-zero otherwise);
+* churn-during-upload — a user who drops mid-upload is evicted from
+  the in-flight buffer and never aggregated;
+* upload conservation — every started upload is eventually aggregated,
+  dropped (stale or churn) or still in flight;
+* O(1) device dispatches per round regardless of K and R;
+* the staleness sweep axes run through ``run_grid_batched`` with
+  finite ci95 columns (the replicate-axis acceptance criterion).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.sim import (StalenessConfig, VectorizedFLEngine,
+                       advance_async_clock, async_scenarios,
+                       get_scenario, run_grid_batched,
+                       staleness_weights, straggler_gap)
+from repro.sim.scenarios import build_problem
+
+from _hypothesis_compat import given, settings, st
+
+pytestmark = pytest.mark.skipif(
+    bool(jax.config.jax_enable_x64),
+    reason="engine trains in float32; x64 leg covers solver parity")
+
+QUANTIZERS = {"mixed": ("mixed-resolution", {"lambda_": 0.2, "b": 4}),
+              "classic": ("classic", {})}
+POWERS = {"ours": "bisection-lp", "maxsum": "max-sum-rate"}
+
+
+def _tiny(name, **overrides):
+    fields = dict(K=4, T=4, n_train=240, n_test=60, batch_size=8, L=1,
+                  name=f"{name}-tiny")
+    fields.update(overrides)
+    return dataclasses.replace(get_scenario(name), **fields)
+
+
+def _engine(scn):
+    from repro.core.power import make_power_controller
+    from repro.core.quantize import make_quantizer
+    from repro.fl.loop import FLConfig
+
+    train, test, shards, cnn_cfg, chan = build_problem(scn)
+    fl = FLConfig(L=scn.L, T=scn.T, batch_size=scn.batch_size,
+                  seed=scn.seed, eval_every=scn.effective_eval_every)
+    return VectorizedFLEngine(
+        train, test, shards, cnn_cfg,
+        make_quantizer("mixed-resolution", lambda_=0.2, b=4),
+        make_power_controller("bisection-lp"), chan, fl,
+        engine=scn.engine_config())
+
+
+def _assert_logs_identical(a, b):
+    assert len(a) == len(b)
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(la.bits_per_user, lb.bits_per_user)
+        assert la.test_acc == lb.test_acc
+        assert la.mean_s == lb.mean_s
+        assert la.uplink_latency_s == lb.uplink_latency_s
+        assert la.cum_latency_s == lb.cum_latency_s
+
+
+# ------------------------------------------------------ sync reduction
+@pytest.fixture(scope="module")
+def sync_reduction_runs():
+    base = _tiny("churn-0.7", participation=0.5)
+    async_ = dataclasses.replace(base, name="async-red-tiny",
+                                 async_mode=True)
+    lockstep = run_grid_batched([base], QUANTIZERS, POWERS, quick=False)
+    reduced = run_grid_batched([async_], QUANTIZERS, POWERS, quick=False)
+    return lockstep, reduced
+
+
+def test_sync_reduction_bit_for_bit(sync_reduction_runs):
+    """The acceptance criterion: async_mode=True with no deadline is
+    the lockstep engine bit-for-bit (same code path, gated on
+    ``EngineConfig.async_active``)."""
+    lockstep, reduced = sync_reduction_runs
+    assert len(lockstep) == len(reduced) == 4
+    for rl, rr in zip(lockstep, reduced):
+        assert (rl.cell.quantizer_label, rl.cell.power_label) \
+            == (rr.cell.quantizer_label, rr.cell.power_label)
+        _assert_logs_identical(rl.result.logs, rr.result.logs)
+
+
+def test_sync_reduction_bit_for_bit_replicated(sync_reduction_runs):
+    """Same reduction through the replicated (R=2) driver."""
+    base = _tiny("churn-0.7", participation=0.5)
+    async_ = dataclasses.replace(base, name="async-red2-tiny",
+                                 async_mode=True)
+    Q = {"mixed": QUANTIZERS["mixed"]}
+    P = {"ours": "bisection-lp"}
+    a = run_grid_batched([base], Q, P, quick=False, replicates=2)
+    b = run_grid_batched([async_], Q, P, quick=False, replicates=2)
+    for res_a, res_b in zip(a[0].result, b[0].result):
+        _assert_logs_identical(res_a.logs, res_b.logs)
+
+
+def test_infinite_deadline_is_sync():
+    """deadline_s=inf is the documented explicit spelling of the sync
+    reduction — StalenessConfig classifies it as sync."""
+    assert StalenessConfig(deadline_s=float("inf")).is_sync
+    assert StalenessConfig().is_sync
+    assert not StalenessConfig(deadline_s=1.0).is_sync
+    assert not StalenessConfig(deadline_quantile=0.5).is_sync
+
+
+def test_huge_finite_deadline_reduces_semantically():
+    """With a finite deadline no upload ever misses, the event clock's
+    round time equals the lockstep straggler latency and every weight
+    is a fresh arrival — lockstep semantics through the genuinely
+    async machinery (allclose, not bit-for-bit: aggregation order
+    differs)."""
+    base = _tiny("churn-0.7", participation=0.5, aggregation="dense")
+    async_ = dataclasses.replace(base, name="async-huge-tiny",
+                                 async_mode=True, deadline_s=1e9)
+    Q = {"mixed": QUANTIZERS["mixed"]}
+    P = {"ours": "bisection-lp"}
+    a = run_grid_batched([base], Q, P, quick=False)[0]
+    b = run_grid_batched([async_], Q, P, quick=False)[0]
+    for la, lb in zip(a.result.logs, b.result.logs):
+        np.testing.assert_array_equal(la.bits_per_user, lb.bits_per_user)
+        np.testing.assert_allclose(lb.uplink_latency_s,
+                                   la.uplink_latency_s, rtol=1e-6)
+    assert b.summary["mean_staleness"] == 0.0
+    assert b.summary["dropped_uploads"] == 0.0
+    np.testing.assert_allclose(b.summary["final_acc"],
+                               a.summary["final_acc"], atol=5e-2)
+
+
+# ------------------------------------------- staleness weight property
+def _check_convex(w, arrived):
+    assert np.all(w >= 0.0)
+    np.testing.assert_array_equal(w * ~np.asarray(arrived, bool), 0.0)
+    tot = w.sum(axis=-1)
+    any_arrived = np.asarray(arrived, bool).any(axis=-1)
+    np.testing.assert_allclose(tot[any_arrived], 1.0, rtol=1e-12)
+    np.testing.assert_array_equal(tot[~any_arrived], 0.0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 16),
+       st.floats(0.0, 8.0, allow_nan=False))
+def test_staleness_weights_convex_combination_hypothesis(seed, K, alpha):
+    """Property: for any rho > 0, staleness >= 0 and arrival mask, the
+    weights are a convex combination over the arrived set."""
+    rng = np.random.default_rng(seed)
+    rho = rng.uniform(0.05, 3.0, size=K)
+    staleness = rng.integers(0, 5, size=(3, K))
+    arrived = rng.uniform(size=(3, K)) < 0.5
+    _check_convex(staleness_weights(rho, staleness, arrived, alpha),
+                  arrived)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_staleness_weights_convex_combination_seeded(seed):
+    """The same property on a fixed seed battery, so the contract is
+    exercised even without hypothesis installed."""
+    rng = np.random.default_rng(seed)
+    K = int(rng.integers(1, 16))
+    alpha = float(rng.uniform(0.0, 8.0))
+    rho = rng.uniform(0.05, 3.0, size=K)
+    staleness = rng.integers(0, 5, size=(4, K))
+    arrived = rng.uniform(size=(4, K)) < 0.5
+    _check_convex(staleness_weights(rho, staleness, arrived, alpha),
+                  arrived)
+
+
+def test_staleness_weights_downweight_monotone():
+    """Higher staleness never gets a larger weight than lower
+    staleness at equal rho, and alpha=0 ignores staleness."""
+    rho = np.ones(3)
+    staleness = np.array([[0, 1, 2]])
+    arrived = np.ones((1, 3), bool)
+    w = staleness_weights(rho, staleness, arrived, alpha=1.0)[0]
+    assert w[0] > w[1] > w[2]
+    w0 = staleness_weights(rho, staleness, arrived, alpha=0.0)[0]
+    np.testing.assert_allclose(w0, 1.0 / 3.0)
+
+
+def test_straggler_gap_definition():
+    per_user = np.array([1.0, 5.0, 2.0, 9.0])
+    mask = np.array([1, 1, 1, 0])
+    assert straggler_gap(per_user, mask) == 5.0 - 2.0
+    assert straggler_gap(per_user, np.zeros(4)) == 0.0
+
+
+# --------------------------------------------------- event-clock unit
+def _cfg(**kw):
+    return StalenessConfig(**kw)
+
+
+def test_clock_deadline_closes_round_and_buffers_misses():
+    """Two fresh uploads, deadline between them: the fast one arrives,
+    the slow one enters the buffer with its remaining time."""
+    Z = np.zeros((1, 2))
+    step = advance_async_clock(
+        in_flight=Z.astype(bool), remaining_s=Z.copy(),
+        staleness=Z.astype(int), ell=np.array([[1.0, 4.0]]),
+        fresh=np.ones((1, 2), bool), participating=np.ones((1, 2), bool),
+        rho=np.ones(2), cfg=_cfg(deadline_s=2.0, max_staleness=2))
+    assert step.round_s[0] == 2.0
+    np.testing.assert_array_equal(step.arrived, [[True, False]])
+    np.testing.assert_array_equal(step.in_flight, [[False, True]])
+    np.testing.assert_allclose(step.remaining_s, [[0.0, 2.0]])
+    np.testing.assert_array_equal(step.staleness, [[0, 1]])
+    assert step.w_fresh[0, 0] == 1.0 and step.w_buf.sum() == 0.0
+
+
+def test_clock_buffered_upload_arrives_with_staleness_weight():
+    """A buffered upload finishing inside the deadline aggregates with
+    weight (1+s)^-alpha relative to a fresh arrival."""
+    step = advance_async_clock(
+        in_flight=np.array([[True, False]]),
+        remaining_s=np.array([[0.5, 0.0]]),
+        staleness=np.array([[1, 0]]), ell=np.array([[0.0, 1.0]]),
+        fresh=np.array([[False, True]]),
+        participating=np.ones((1, 2), bool), rho=np.ones(2),
+        cfg=_cfg(deadline_s=2.0, alpha=1.0, max_staleness=2))
+    np.testing.assert_array_equal(step.arrived, [[True, True]])
+    # fresh weight 1, buffered weight (1+1)^-1 = 0.5, normalized
+    np.testing.assert_allclose(step.w_buf[0, 0], 0.5 / 1.5)
+    np.testing.assert_allclose(step.w_fresh[0, 1], 1.0 / 1.5)
+    np.testing.assert_array_equal(step.arrived_staleness, [[1, 0]])
+
+
+def test_clock_churn_during_upload_drops_in_flight():
+    """The regression the ISSUE names: a user who drops out mid-upload
+    is evicted — never aggregated, never kept in the buffer."""
+    step = advance_async_clock(
+        in_flight=np.array([[True, False]]),
+        remaining_s=np.array([[0.1, 0.0]]),
+        staleness=np.array([[1, 0]]), ell=np.array([[0.0, 1.0]]),
+        fresh=np.array([[False, True]]),
+        participating=np.array([[False, True]]),   # user 0 churned out
+        rho=np.ones(2), cfg=_cfg(deadline_s=5.0, max_staleness=3))
+    assert step.dropped_churn[0] == 1
+    assert not step.arrived[0, 0] and not step.in_flight[0, 0]
+    assert step.w_buf[0, 0] == 0.0
+    assert step.arrived[0, 1]           # the fresh upload still lands
+
+
+def test_clock_bounded_staleness_drops():
+    """An upload that misses max_staleness deadlines is dropped, and
+    max_staleness=0 drops fresh misses outright."""
+    step = advance_async_clock(
+        in_flight=np.array([[True]]), remaining_s=np.array([[9.0]]),
+        staleness=np.array([[2]]), ell=np.array([[0.0]]),
+        fresh=np.array([[False]]), participating=np.array([[True]]),
+        rho=np.ones(1), cfg=_cfg(deadline_s=1.0, max_staleness=2))
+    assert step.dropped_stale[0] == 1 and not step.in_flight[0, 0]
+
+    step0 = advance_async_clock(
+        in_flight=np.zeros((1, 2), bool), remaining_s=np.zeros((1, 2)),
+        staleness=np.zeros((1, 2), int), ell=np.array([[1.0, 9.0]]),
+        fresh=np.ones((1, 2), bool), participating=np.ones((1, 2), bool),
+        rho=np.ones(2), cfg=_cfg(deadline_s=2.0, max_staleness=0))
+    assert step0.dropped_stale[0] == 1
+    assert not step0.in_flight.any()
+
+
+def test_clock_quantile_deadline_and_all_idle_round():
+    """deadline_quantile closes at that quantile of pending completion
+    times; a round with nothing pending is a zero-duration no-op."""
+    step = advance_async_clock(
+        in_flight=np.zeros((1, 4), bool), remaining_s=np.zeros((1, 4)),
+        staleness=np.zeros((1, 4), int),
+        ell=np.array([[1.0, 2.0, 3.0, 4.0]]),
+        fresh=np.ones((1, 4), bool), participating=np.ones((1, 4), bool),
+        rho=np.ones(4), cfg=_cfg(deadline_quantile=0.5, max_staleness=2))
+    np.testing.assert_allclose(step.round_s, [2.5])
+    assert step.arrived.sum() == 2
+    np.testing.assert_allclose(step.straggler_gap_s, [4.0 - 2.5])
+
+    idle = advance_async_clock(
+        in_flight=np.zeros((1, 2), bool), remaining_s=np.zeros((1, 2)),
+        staleness=np.zeros((1, 2), int), ell=np.zeros((1, 2)),
+        fresh=np.zeros((1, 2), bool),
+        participating=np.ones((1, 2), bool), rho=np.ones(2),
+        cfg=_cfg(deadline_quantile=0.5, max_staleness=2))
+    assert idle.round_s[0] == 0.0 and not idle.arrived.any()
+    assert idle.w_fresh.sum() == 0.0 and idle.w_buf.sum() == 0.0
+
+
+# --------------------------------------- integration: conservation law
+@pytest.mark.parametrize("aggregation", ["dense", "wire"])
+def test_upload_conservation_under_churn(aggregation):
+    """Every upload ever started is aggregated, dropped (stale/churn)
+    or still in flight at the end — nothing is double-counted, and a
+    churn run actually exercises the churn-drop branch."""
+    scn = _tiny("async-churn", T=6, aggregation=aggregation,
+                participation=0.6)
+    eng = _engine(scn)
+    state = eng.start_run()
+    for t in range(1, scn.T + 1):
+        work = eng.train_round(state, t)
+        up, pu = eng.solve_uplink_host_detailed(
+            state.chan, work.bits_np, work.active)
+        info = eng.complete_round_async(state, work, pu)
+        eng.finish_round(state, work, up, async_info=info,
+                         per_user_s=pu)
+    clock = state.async_clock
+    assert clock.uploads_started > 0
+    assert clock.uploads_started == (clock.arrived_total
+                                     + clock.dropped_stale
+                                     + clock.dropped_churn
+                                     + int(clock.in_flight.sum()))
+
+
+def test_busy_users_do_not_start_fresh_uploads():
+    """At most one in-flight upload per user: a user parked in the
+    buffer is excluded from the fresh-uploader mask."""
+    scn = _tiny("async-q50", T=5)
+    eng = _engine(scn)
+    state = eng.start_run()
+    for t in range(1, scn.T + 1):
+        busy_before = state.async_clock.in_flight[0].copy()
+        work = eng.train_round(state, t)
+        assert not np.any((work.active > 0) & busy_before)
+        up, pu = eng.solve_uplink_host_detailed(
+            state.chan, work.bits_np, work.active)
+        info = eng.complete_round_async(state, work, pu)
+        eng.finish_round(state, work, up, async_info=info,
+                         per_user_s=pu)
+    assert state.async_clock.arrived_total > 0
+
+
+def test_finish_round_uses_event_clock_latency():
+    """The latency-accounting fix: an async round's logged uplink
+    latency is the event-clock round duration, not the full straggler
+    solve latency."""
+    scn = _tiny("async-q50", T=3)
+    eng = _engine(scn)
+    state = eng.start_run()
+    work = eng.train_round(state, 1)
+    up, pu = eng.solve_uplink_host_detailed(
+        state.chan, work.bits_np, work.active)
+    info = eng.complete_round_async(state, work, pu)
+    eng.finish_round(state, work, up, async_info=info, per_user_s=pu)
+    log = state.logs[-1]
+    assert log.uplink_latency_s == float(info.round_uplink_s[0])
+    # quantile deadline < max completion => strictly under the
+    # lockstep straggler latency
+    assert log.uplink_latency_s < up
+    assert log.effective_participation == \
+        float(info.effective_participation[0])
+
+
+# -------------------------------------------------- dispatch counting
+@pytest.mark.parametrize("R", [None, 4])
+def test_async_constant_dispatches_per_round(monkeypatch, R):
+    """One async train dispatch + one aggregate dispatch per round
+    regardless of K and the replicate count."""
+    calls = {"train": 0, "agg": 0}
+    orig = VectorizedFLEngine._async_steps
+
+    def counting(self, n=None):
+        train, agg = orig(self, n)
+
+        def ctrain(*a, **k):
+            calls["train"] += 1
+            return train(*a, **k)
+
+        def cagg(*a, **k):
+            calls["agg"] += 1
+            return agg(*a, **k)
+        return ctrain, cagg
+
+    monkeypatch.setattr(VectorizedFLEngine, "_async_steps", counting)
+    T = 3
+    scn = _tiny("async-q50", T=T)
+    if R is None:
+        run_grid_batched([scn], {"mixed": QUANTIZERS["mixed"]},
+                         {"ours": "bisection-lp"}, quick=False)
+    else:
+        run_grid_batched([scn], {"mixed": QUANTIZERS["mixed"]},
+                         {"ours": "bisection-lp"}, quick=False,
+                         replicates=R)
+    assert calls["train"] == T
+    assert calls["agg"] == T
+
+
+# ---------------------------------------- sweep axes + ci95 (replicas)
+def test_async_sweep_axes_with_replicates():
+    """The acceptance criterion: the staleness sweep axes
+    (alpha x deadline-quantile x buffer-depth) run through
+    run_grid_batched(replicates=R) and report finite ci95 columns."""
+    base = _tiny("async-q50", T=3)
+    scns = async_scenarios(alphas=(0.0, 1.0), quantiles=(0.5,),
+                           depths=(1, 2), base=base)
+    assert [s.name for s in scns] == [
+        "async-a0-q0.5-d1", "async-a0-q0.5-d2",
+        "async-a1-q0.5-d1", "async-a1-q0.5-d2"]
+    res = run_grid_batched(scns, {"mixed": QUANTIZERS["mixed"]},
+                           {"ours": "bisection-lp"}, quick=False,
+                           replicates=2)
+    assert len(res) == 4
+    for r in res:
+        s = r.summary
+        assert s["replicates"] == 2.0
+        for key in ("final_acc", "total_latency_s", "mean_staleness",
+                    "effective_participation", "mean_straggler_gap_s"):
+            assert np.isfinite(s[key]), key
+            assert np.isfinite(s[key + "_ci95"]), key + "_ci95"
+        assert 0.0 < s["effective_participation"] <= 1.0
+
+
+def test_depth_axis_changes_drop_accounting():
+    """Buffer depth is a live axis: depth 0 (drop every miss) records
+    strictly more dropped uploads than a deep buffer on the same
+    workload."""
+    base = _tiny("async-q50", T=4)
+    shallow = dataclasses.replace(base, name="async-d0-tiny",
+                                  max_staleness=0)
+    deep = dataclasses.replace(base, name="async-d4-tiny",
+                               max_staleness=4)
+    Q = {"mixed": QUANTIZERS["mixed"]}
+    P = {"ours": "bisection-lp"}
+    rs = run_grid_batched([shallow], Q, P, quick=False)[0].summary
+    rd = run_grid_batched([deep], Q, P, quick=False)[0].summary
+    assert rs["dropped_uploads"] > rd["dropped_uploads"]
+    assert rs["mean_staleness"] == 0.0   # nothing survives to be stale
+
+
+# --------------------------------------------------------- validation
+def test_staleness_config_validation():
+    with pytest.raises(ValueError):
+        StalenessConfig(deadline_s=1.0, deadline_quantile=0.5)
+    with pytest.raises(ValueError):
+        StalenessConfig(deadline_s=-1.0)
+    with pytest.raises(ValueError):
+        StalenessConfig(deadline_quantile=1.5)
+    with pytest.raises(ValueError):
+        StalenessConfig(alpha=-0.1)
+    with pytest.raises(ValueError):
+        StalenessConfig(max_staleness=-1)
+
+
+def test_async_rejects_signplane_and_unfused():
+    from repro.sim import EngineConfig
+    scn = _tiny("async-q50", aggregation="signplane")
+    with pytest.raises(ValueError, match="wire"):
+        _engine(scn)
+    cfg = EngineConfig(async_mode=True, fused=False,
+                       staleness=StalenessConfig(deadline_quantile=0.5))
+    scn2 = _tiny("async-q50")
+    train, test, shards, cnn_cfg, chan = build_problem(scn2)
+    from repro.core.quantize import make_quantizer
+    from repro.fl.loop import FLConfig
+    with pytest.raises(ValueError, match="fused"):
+        VectorizedFLEngine(train, test, shards, cnn_cfg,
+                           make_quantizer("classic"), None, chan,
+                           FLConfig(L=1, T=1, batch_size=8, seed=0),
+                           engine=cfg)

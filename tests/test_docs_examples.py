@@ -1,0 +1,86 @@
+"""Every fenced python block in README.md and docs/*.md is living
+documentation — this suite keeps it that way.
+
+Two tiers:
+
+* **compile** (always on, fast) — every block must at least be valid
+  python (`compile()`), including ``# doc-only:`` blocks, which are
+  illustrative snippets exempt from execution (they need hardware or
+  state the doc page explains, e.g. an 8-device mesh).
+* **execute** (the docs CI job: ``RUN_DOC_EXAMPLES=1``) — every
+  non-doc-only block runs in a fresh subprocess with
+  ``PYTHONPATH=src`` from a temp cwd, exactly as a reader would
+  copy-paste it.  Skipped by default so tier-1 stays fast; the
+  `test/docs` matrix entry turns it on.
+"""
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = sorted([REPO / "README.md"] + list((REPO / "docs").glob("*.md")))
+_FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+RUN = os.environ.get("RUN_DOC_EXAMPLES", "") == "1"
+# generous: a block may jit-compile the engine from cold
+BLOCK_TIMEOUT_S = 900
+
+
+def _blocks():
+    out = []
+    for path in DOC_FILES:
+        rel = path.relative_to(REPO).as_posix()
+        for i, m in enumerate(_FENCE.finditer(path.read_text()), 1):
+            code = m.group(1).strip()
+            doc_only = code.splitlines()[0].startswith("# doc-only")
+            out.append(pytest.param(rel, code, doc_only,
+                                    id=f"{rel}:block{i}"))
+    return out
+
+
+BLOCKS = _blocks()
+
+
+def test_docs_have_examples():
+    """The handbook exists and actually carries executable examples."""
+    assert (REPO / "docs" / "architecture.md").is_file()
+    assert (REPO / "docs" / "wire-format.md").is_file()
+    assert (REPO / "docs" / "sweeps.md").is_file()
+    files_with_blocks = {p.split(":")[0] for p, *_ in
+                         (b.values for b in BLOCKS)}
+    assert "README.md" in files_with_blocks
+    assert "docs/architecture.md" in files_with_blocks
+    assert "docs/sweeps.md" in files_with_blocks
+
+
+def test_readme_links_handbook():
+    text = (REPO / "README.md").read_text()
+    for page in ("docs/architecture.md", "docs/wire-format.md",
+                 "docs/sweeps.md"):
+        assert page in text, f"README does not link {page}"
+
+
+@pytest.mark.parametrize("rel,code,doc_only", BLOCKS)
+def test_block_compiles(rel, code, doc_only):
+    compile(code, f"<{rel}>", "exec")
+
+
+@pytest.mark.parametrize("rel,code,doc_only", BLOCKS)
+def test_block_executes(rel, code, doc_only, tmp_path):
+    if not RUN:
+        pytest.skip("set RUN_DOC_EXAMPLES=1 (the docs CI job) to "
+                    "execute documentation examples")
+    if doc_only:
+        pytest.skip("doc-only block: compile-checked, not executed")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          cwd=tmp_path, env=env, capture_output=True,
+                          text=True, timeout=BLOCK_TIMEOUT_S)
+    assert proc.returncode == 0, (
+        f"{rel} block failed\n--- stdout ---\n{proc.stdout}"
+        f"\n--- stderr ---\n{proc.stderr}")

@@ -1,0 +1,128 @@
+"""Streaming-cohort user-axis scaling (PR 8, DESIGN.md §12).
+
+Two claims, measured:
+
+* **Memory**: the traced cohort step's largest d-carrying buffer is
+  the cohort stack [C, d] — device residency scales with C, not K.
+  Asserted STATICALLY by walking the step's jaxpr at K in {20, 2 000,
+  20 000} (tracing is cheap; nothing executes), so the 20 000-user
+  point is checked even in quick mode.
+* **Time**: one cohort round's wall clock at the K points that fit
+  the quick budget (K = 20 000 rides only in --full / the `scale` CI
+  suite; ~20-50 s on CPU).
+
+Rows:
+  cohort_scale/peak_K{K},0,peak_d_bytes=...;C=...;dense_Kd_bytes=...
+  cohort_scale/round_K{K},us_per_round,d=...;C=...;bits_mean=...
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs.paper_cnn import PaperCNNConfig
+from repro.core.quantize import MixedResolutionQuantizer
+from repro.data import make_image_classification
+from repro.fl import FLConfig
+from repro.sim import EngineConfig, VectorizedFLEngine, WirePath
+
+from .common import csv_row
+
+_COHORT = {20: 8, 2_000: 256, 20_000: 256}
+
+
+def _engine(K: int) -> VectorizedFLEngine:
+    ds = make_image_classification(n_samples=K + 200, hw=8, n_classes=2,
+                                   noise=0.3, seed=0)
+    train = dataclasses.replace(ds, x=ds.x[:K], y=ds.y[:K])
+    test = dataclasses.replace(ds, x=ds.x[K:], y=ds.y[K:])
+    shards = [np.array([i]) for i in range(K)]   # one sample per user
+    cnn = PaperCNNConfig(input_hw=8, channels=3, conv_filters=4,
+                         dense_units=8, n_classes=2)
+    fl = FLConfig(T=1, L=1, batch_size=1, seed=0, eval_every=1)
+    return VectorizedFLEngine(
+        train, test, shards, cnn, MixedResolutionQuantizer(0.2, 10),
+        None, None, fl,
+        engine=EngineConfig(wire=WirePath(plane="packed",
+                                          cohort_size=_COHORT[K])))
+
+
+def _walk(jaxpr, out):
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                out.append(aval)
+        for val in eqn.params.values():
+            if hasattr(val, "eqns"):
+                _walk(val, out)
+            elif hasattr(val, "jaxpr"):
+                _walk(val.jaxpr, out)
+            elif isinstance(val, (tuple, list)):
+                for v in val:
+                    if hasattr(v, "eqns"):
+                        _walk(v, out)
+                    elif hasattr(v, "jaxpr"):
+                        _walk(v.jaxpr, out)
+    return out
+
+
+def _peak_d_bytes(eng) -> int:
+    """Largest intermediate carrying the model dimension d, in bytes,
+    from the abstractly traced fused step (nothing executes)."""
+    import jax
+
+    sel = np.zeros((eng.K, eng.fl.L, eng.take), dtype=np.int64)
+    sds = lambda a: jax.ShapeDtypeStruct(np.shape(a),
+                                         np.asarray(a).dtype)
+    closed = jax.make_jaxpr(eng._fused_step_fn)(
+        jax.tree_util.tree_map(sds, eng.params),
+        jax.tree_util.tree_map(sds, eng.qstate),
+        sds(eng.dataset.x[sel]), sds(eng.dataset.y[sel]),
+        jax.ShapeDtypeStruct((eng.K,), np.float32),
+        jax.ShapeDtypeStruct((eng.K,), np.float32))
+    avals = _walk(closed.jaxpr, [])
+    d = eng.d
+    offenders = [a for a in avals if eng.K in a.shape and d in a.shape]
+    if offenders:
+        raise AssertionError(
+            f"[K, d] buffer materialized at K={eng.K}: "
+            f"{[a.shape for a in offenders]}")
+    return max(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in avals if d in a.shape)
+
+
+def run(quick: bool = True):
+    peaks = {}
+    for K in (20, 2_000, 20_000):
+        eng = _engine(K)
+        C, d = _COHORT[K], eng.d
+        peak = _peak_d_bytes(eng)
+        peaks[K] = peak
+        yield csv_row(f"cohort_scale/peak_K{K}", 0.0,
+                      f"peak_d_bytes={peak};C={C};d={d};"
+                      f"dense_Kd_bytes={K * d * 4}")
+    # the scaling claim itself: same cohort size -> same peak, 10x the
+    # users, and the peak is the [C, d] f32 stack, not [K, d]
+    assert peaks[2_000] == peaks[20_000], peaks
+    assert peaks[20_000] <= _COHORT[20_000] * _engine(20).d * 4, peaks
+
+    for K in (20, 2_000) + (() if quick else (20_000,)):
+        eng = _engine(K)
+        state = eng.start_run()
+        t0 = time.time()
+        work = eng.train_round(state, 1)
+        import jax
+        jax.block_until_ready(state.params)
+        dt = time.time() - t0
+        assert np.all(np.isfinite(work.bits_np))
+        yield csv_row(f"cohort_scale/round_K{K}", dt * 1e6,
+                      f"d={eng.d};C={_COHORT[K]};"
+                      f"bits_mean={work.bits_np.mean():.1f}")
+
+
+if __name__ == "__main__":
+    for line in run():
+        print(line)

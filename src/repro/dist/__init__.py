@@ -11,12 +11,17 @@ mixed-resolution encode/decode kernels (``repro.kernels.mixed_res``,
 DESIGN.md §9 — sign/hi/code planes straight to uint32 buffers, fused
 dequant+reduce, no dense recon), with the ``signpack`` /
 ``sign_dequant_reduce`` sign-plane path kept as the jnp-anchored
-reference (``CompressorConfig.wire_path``).
+reference.  Which realization runs — and whether manual mode gathers
+the packed buffers or ring-reduces them over ``collective_permute``
+hops — is named by the shared :class:`repro.kernels.WirePath` spec
+(``CompressorConfig.wire``; the legacy ``wire_path`` strings keep
+working through a deprecation shim).
 
 See DESIGN.md §6 for the mesh layout, sharding rules and wire format;
 tests/dist_checks.py exercises the whole surface on an 8-fake-device
 mesh.
 """
+from repro.kernels import WirePath  # the shared wire-path spec
 from repro.models.sharding_ctx import shard_map  # version-portable
 
 from .compressor import (CompressorConfig, aggregate_delta,
@@ -30,7 +35,7 @@ from .steps import (TrainHParams, build_decode_step, build_prefill_step,
                     build_train_step, microbatch)
 
 __all__ = [
-    "CompressorConfig", "TrainHParams", "aggregate_delta",
+    "CompressorConfig", "TrainHParams", "WirePath", "aggregate_delta",
     "aggregate_flat_manual", "aggregate_flat_stacked", "batch_shardings",
     "budget_k", "build_decode_step", "build_prefill_step",
     "build_train_step", "decode_cache_shape", "decode_shardings",

@@ -14,16 +14,23 @@ with the static-budget wire format (core/quantize/static_budget.py):
   additionally contributes one sign bit, reconstructed as
   ``± dw_q / 2`` outside the top-k support (low resolution).
 
-  ``wire_path`` selects the realization of that exchange:
+  ``wire`` (a :class:`repro.kernels.WirePath`, shared with the sim
+  engine; the legacy ``wire_path`` strings map onto it through a
+  deprecation shim) selects the realization of that exchange:
 
-  * ``"fused"`` (default) — the streaming mixed-res kernel suite
+  * plane ``"packed"`` (default; legacy ``"fused"``) — the streaming
+    mixed-res kernel suite
     (``kernels/mixed_res.py``, DESIGN.md §9): after the top-k anchor,
     one emit pass packs sign + hi-mask + b-bit code planes straight to
     uint32 wire buffers and ``mixed_res_dequant_reduce`` fuses the
     multi-peer decode with the weighted reduction — no dense
     reconstruction is ever materialized, and in manual mode the
-    ``all_gather`` moves exactly the packed wire buffers;
-  * ``"reference"`` — the original jnp path (``mixed_recon`` dense
+    collective moves exactly the packed wire buffers — one
+    ``all_gather`` (``WirePath.reduce="gather"``) or G-1
+    ``collective_permute`` ring hops folding through the chunked
+    accumulator (``reduce="ring"``, one peer buffer resident per hop);
+  * plane ``"signplane"`` (legacy ``"reference"``) — the original jnp
+    path (``mixed_recon`` dense
     roundtrip + packed 1-bit plane through ``signpack`` /
     ``sign_dequant_reduce`` + dense high-res correction), kept as the
     golden reference the fused path is tested against.
@@ -47,12 +54,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Sequence, Tuple
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.quantize.static_budget import wire_bits
+from repro.kernels import WirePath, from_wire_path
 from repro.kernels.ops import (mixed_res_encode_anchored,
                                mixed_res_wire_reduce,
                                packed_sign_weighted_sum)
@@ -65,25 +73,55 @@ class CompressorConfig:
     s_budget: float = 0.01       # high-resolution fraction (k = ceil(s*d))
     bits: int = 8                # grid width b; must divide 32
     exact_topk: bool = False     # False may use approx_max_k on TPU
-    wire_path: str = "fused"     # "fused" (mixed-res kernels) |
-                                 # "reference" (jnp golden path)
+    # DEPRECATED spelling of the wire-path plane: "fused" (packed
+    # mixed-res kernels) | "reference" (jnp golden signplane path).
+    # New call sites set ``wire=WirePath(...)``; None defers to it.
+    wire_path: Optional[str] = None
+    # The unified wire-path spec (repro.kernels.WirePath) shared with
+    # the sim engine.  plane="packed" is the fused kernel exchange,
+    # plane="signplane" the golden reference; reduce="ring" replaces
+    # manual mode's all_gather with G-1 collective_permute hops (one
+    # packed peer buffer resident per hop, folded through the chunked
+    # accumulate — DESIGN.md §12).  None + wire_path=None resolves to
+    # the packed default.
+    wire: Optional[WirePath] = None
+
+    def resolved_wire(self) -> WirePath:
+        """The WirePath this config runs: ``wire`` when set, else the
+        legacy ``wire_path`` string through its deprecation shim, else
+        the packed (fused) default."""
+        if self.wire is not None:
+            if self.wire_path is not None:
+                raise ValueError(
+                    "set CompressorConfig.wire OR the legacy wire_path "
+                    f"string, not both (wire={self.wire!r}, "
+                    f"wire_path={self.wire_path!r})")
+            return self.wire
+        if self.wire_path is not None:
+            return from_wire_path(self.wire_path)
+        return WirePath(plane="packed")
 
     def validate(self) -> None:
         if self.kind not in ("none", "mixed"):
             raise ValueError(f"unknown compressor kind {self.kind!r}")
-        if self.wire_path not in ("fused", "reference"):
-            raise ValueError(f"unknown wire_path {self.wire_path!r}")
+        wp = self.resolved_wire()   # raises on unknown legacy strings
         if self.kind == "mixed":
+            if wp.plane == "dense":
+                raise ValueError(
+                    "kind='mixed' moves a compressed plane; use "
+                    "WirePath(plane='packed') (fused kernels) or "
+                    "'signplane' (reference path)")
             if not (0.0 < self.s_budget <= 1.0):
                 raise ValueError(f"s_budget must be in (0, 1], got "
                                  f"{self.s_budget}")
             if self.bits < 2 or 32 % self.bits != 0:
                 raise ValueError(f"bits must divide 32 and be >= 2, got "
                                  f"{self.bits}")
-            if self.wire_path == "fused" and self.bits > 16:
+            if wp.plane == "packed" and self.bits > 16:
                 raise ValueError(
                     "the fused wire kernels store codes in <= 16 bits; "
-                    f"got bits={self.bits} (use wire_path='reference')")
+                    f"got bits={self.bits} (use the signplane "
+                    "reference plane)")
 
 
 def budget_k(d: int, s_budget: float) -> int:
@@ -172,41 +210,92 @@ def aggregate_flat_stacked(flat: jnp.ndarray, comp: CompressorConfig
     if comp.kind == "none":
         return jnp.mean(flat, axis=0)
     weights = jnp.full((G,), 1.0 / G, jnp.float32)
-    if comp.wire_path == "fused":
+    wp = comp.resolved_wire()
+    if wp.plane == "packed":
         # quantize-to-wire without a dense reconstruction: top-k picks
         # the per-replica anchor, the emit pass packs the wire planes,
         # and the decode+mean runs fused from the packed buffers
         k = budget_k(d, comp.s_budget)
         inf, dw_q = _rank_k_values(jnp.abs(flat), k, comp.exact_topk)
-        wire = mixed_res_encode_anchored(flat, inf, dw_q, comp.bits)
-        return mixed_res_wire_reduce(wire, weights, comp.bits, d)
+        wire = mixed_res_encode_anchored(flat, inf, dw_q, comp.bits,
+                                         path=wp)
+        return mixed_res_wire_reduce(wire, weights, comp.bits, d,
+                                     path=wp)
     recon, dw_q = mixed_recon(flat, comp)
     return signplane_weighted_aggregate(flat, recon, dw_q, weights)
 
 
+def _ring_wire_reduce(wire, comp: CompressorConfig, wp: WirePath,
+                      d: int, axes: Tuple[str, ...],
+                      axis_sizes: Optional[Mapping[str, int]]
+                      ) -> jnp.ndarray:
+    """Ring-reduce the packed wire exchange: G-1 ``ppermute`` hops move
+    each peer's packed buffers around the ring, and every hop folds the
+    arriving planes into the local [d] accumulator via the chunked
+    ``mixed_res_wire_reduce(acc=...)`` — exactly ONE peer's packed
+    buffer is resident per hop, so the gathered [G, ...] plane stack
+    (let alone a dense [G, d]) never exists.
+
+    Each shard folds the peers in its own rotated ring order, so shards
+    agree only to float32 roundoff (ulps), not bitwise — the documented
+    reassociation tradeoff of DESIGN.md §12; reduce="gather" keeps the
+    order-identical fold.  ``wire``: this shard's planes with leading
+    axis 1."""
+    if len(axes) != 1:
+        raise ValueError(
+            f"ring reduce runs over exactly one mesh axis, got {axes}")
+    if axis_sizes is None or axes[0] not in axis_sizes:
+        raise ValueError(
+            "ring reduce needs the static group size: pass "
+            f"axis_sizes={{{axes[0]!r}: <size>}} (jax cannot query an "
+            "axis size inside a manual shard_map region)")
+    G = int(axis_sizes[axes[0]])
+    w1 = jnp.full((1,), 1.0 / G, jnp.float32)
+    acc = mixed_res_wire_reduce(wire, w1, comp.bits, d, path=wp)
+    perm = [(i, (i + 1) % G) for i in range(G)]
+    traveling = wire
+    for _ in range(G - 1):
+        traveling = jax.tree_util.tree_map(
+            lambda x: jax.lax.ppermute(x, axes[0], perm), traveling)
+        acc = mixed_res_wire_reduce(traveling, w1, comp.bits, d,
+                                    acc=acc, path=wp)
+    return acc
+
+
 def aggregate_flat_manual(flat: jnp.ndarray, comp: CompressorConfig,
-                          axis_names: Sequence[str]) -> jnp.ndarray:
+                          axis_names: Sequence[str],
+                          axis_sizes: Optional[Mapping[str, int]] = None
+                          ) -> jnp.ndarray:
     """[d_local] replica-local flat delta -> [d_local] compressed mean
-    over the named (manual) mesh axes.  Call inside shard_map."""
+    over the named (manual) mesh axes.  Call inside shard_map.
+
+    ``axis_sizes`` maps axis name -> static group size; required only
+    by the ring reduce (``WirePath(reduce="ring")``), which cannot
+    query the axis size inside the manual region."""
     flat = flat.astype(jnp.float32)
     axes = tuple(axis_names)
     if comp.kind == "none":
         return jax.lax.pmean(flat, axes)
     d = flat.shape[0]
-    if comp.wire_path == "fused":
-        # encode the local shard to wire, then ALL-GATHER THE PACKED
-        # BUFFERS — the collective moves the uint32 planes + 8-lane
-        # header, i.e. exactly the accounted wire payload — and decode
-        # + mean locally in one fused kernel
+    wp = comp.resolved_wire()
+    if wp.plane == "packed":
+        # encode the local shard to wire; the collective then moves
+        # exactly the accounted wire payload (uint32 planes + 8-lane
+        # header), never a dense [G, d] stack
         k = budget_k(d, comp.s_budget)
         inf, dw_q = _rank_k_values(jnp.abs(flat), k, comp.exact_topk)
         wire = mixed_res_encode_anchored(flat[None], inf[None],
-                                         dw_q[None], comp.bits)
+                                         dw_q[None], comp.bits, path=wp)
+        if wp.reduce == "ring":
+            return _ring_wire_reduce(wire, comp, wp, d, axes, axis_sizes)
+        # gather: one all_gather of the packed buffers, one fused
+        # decode+mean over all G peers
         local = jax.tree_util.tree_map(lambda x: x[0], wire)
         g_wire = jax.lax.all_gather(local, axes)
         G = g_wire.head.shape[0]
         weights = jnp.full((G,), 1.0 / G, jnp.float32)
-        return mixed_res_wire_reduce(g_wire, weights, comp.bits, d)
+        return mixed_res_wire_reduce(g_wire, weights, comp.bits, d,
+                                     path=wp)
     recon, dw_q = mixed_recon(flat, comp)
     from repro.kernels.ops import _default_interpret, sign_pad_len
     from repro.kernels.quant_pack import sign_dequant_reduce, signpack
@@ -225,7 +314,8 @@ def aggregate_flat_manual(flat: jnp.ndarray, comp: CompressorConfig,
 
 
 def aggregate_delta(deltas: Any, specs: Any, axis_names: Sequence[str],
-                    comp: CompressorConfig
+                    comp: CompressorConfig,
+                    axis_sizes: Optional[Mapping[str, int]] = None
                     ) -> Tuple[Any, Dict[str, Any]]:
     """Compressed cross-replica mean of a delta pytree.
 
@@ -240,6 +330,8 @@ def aggregate_delta(deltas: Any, specs: Any, axis_names: Sequence[str],
                 arithmetic does not depend on it.
     axis_names: mesh axes to aggregate over (manual mode), or () / None.
     comp:       CompressorConfig.
+    axis_sizes: axis name -> static group size, required only for the
+                ring reduce in manual mode (see aggregate_flat_manual).
 
     Returns ``(aggregated, info)`` where ``aggregated`` mirrors
     ``deltas`` without the replica axis (stacked mode) / shard-local
@@ -259,7 +351,7 @@ def aggregate_delta(deltas: Any, specs: Any, axis_names: Sequence[str],
         sizes = [int(leaf.size) for leaf in leaves]
         flat = jnp.concatenate(
             [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
-        agg = aggregate_flat_manual(flat, comp, axis_names)
+        agg = aggregate_flat_manual(flat, comp, axis_names, axis_sizes)
     else:
         G = leaves[0].shape[0]
         sizes = [int(leaf.size) // G for leaf in leaves]

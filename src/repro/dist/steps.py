@@ -20,6 +20,14 @@ identical (local batches never mix), while XLA remains free to
 partition attention/MoE/SSM internals over the model axis — and the
 sort/top-k ops inside the compressor stay on the well-tested GSPMD
 batched path.
+
+Which wire realization the aggregation runs is named by the shared
+:class:`repro.kernels.WirePath` spec on ``TrainHParams.compressor``
+(``CompressorConfig.wire``); callers driving ``aggregate_delta``
+manually inside their own shard_map can additionally pick
+``WirePath(reduce="ring")`` and pass the static ``axis_sizes`` so the
+packed buffers ring-reduce over ``collective_permute`` hops instead of
+gathering.
 """
 from __future__ import annotations
 

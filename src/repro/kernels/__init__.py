@@ -1,3 +1,22 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""repro.kernels — the Pallas wire-format kernel suite + its jnp
+oracles, and the :class:`WirePath` spec that names which realization of
+the packed exchange runs (owned here; consumed by both repro.sim and
+repro.dist).
+
+Heavy wrappers stay importable from :mod:`repro.kernels.ops`; this
+package surface re-exports the spec plus the stable wire entrypoints so
+sim/dist/config code never reaches into per-module internals.
+"""
+from .ops import (H_DBAR, H_DWQ, H_INF, H_LAM, H_STEP, MixedResWire,
+                  mixed_res_encode, mixed_res_encode_anchored,
+                  mixed_res_wire_aggregate, mixed_res_wire_reduce,
+                  packed_sign_weighted_sum, sign_pad_len, wire_view)
+from .wire import WirePath, from_aggregation, from_wire_path
+
+__all__ = [
+    "H_DBAR", "H_DWQ", "H_INF", "H_LAM", "H_STEP", "MixedResWire",
+    "WirePath", "from_aggregation", "from_wire_path",
+    "mixed_res_encode", "mixed_res_encode_anchored",
+    "mixed_res_wire_aggregate", "mixed_res_wire_reduce",
+    "packed_sign_weighted_sum", "sign_pad_len", "wire_view",
+]

@@ -226,9 +226,15 @@ def mixed_res_emit(x: jnp.ndarray, head: jnp.ndarray, b: int,
 
 # ------------------------------------------------------------- decode
 def _dequant_reduce_kernel(signs_ref, hi_ref, codes_ref, head_ref,
-                           w_ref, out_ref, *, bw: int, bm: int):
+                           w_ref, *rest, bw: int, bm: int):
     """All G users' wire tiles -> one weighted-reduced f32 tile.  The
-    per-user dense reconstruction exists only as this VMEM tile."""
+    per-user dense reconstruction exists only as this VMEM tile.  With
+    an ``acc`` operand (cohort chunking) the tile is added on top of
+    the carried accumulator tile instead of overwriting it."""
+    if len(rest) == 2:
+        acc_ref, out_ref = rest
+    else:
+        acc_ref, (out_ref,) = None, rest
     G = signs_ref.shape[0]
     shifts32 = jnp.arange(32, dtype=jnp.uint32)[None, None, None, :]
     one = jnp.uint32(1)
@@ -249,21 +255,29 @@ def _dequant_reduce_kernel(signs_ref, hi_ref, codes_ref, head_ref,
     # eq. (7)/(8): b-bit grid magnitude on the hi support, dw_q/2 off it
     mag = jnp.where(hi, dw_q + code * step, dw_q * 0.5)
     recon = signs * mag
-    out_ref[...] = jnp.einsum(
+    red = jnp.einsum(
         "g,gwl->wl", w_ref[...].reshape(G), recon,
         preferred_element_type=jnp.float32)
+    out_ref[...] = red if acc_ref is None else acc_ref[...] + red
 
 
 def mixed_res_dequant_reduce(signs: jnp.ndarray, hi: jnp.ndarray,
                              codes: jnp.ndarray, head: jnp.ndarray,
                              weights: jnp.ndarray, b: int, *,
+                             acc: jnp.ndarray | None = None,
                              interpret: bool = False,
                              block_rows: int = BLOCK_ROWS) -> jnp.ndarray:
     """signs/hi: [G, W, 4] u32, codes: [G, W, 4*bw] u32, head: [G, 8]
     f32, weights: [G] f32 -> [W, 128] f32 = sum_g w_g * deq(wire_g).
 
     Fuses per-user wire decoding with the weighted multi-user reduce:
-    the G dense f32 reconstruction planes never hit HBM."""
+    the G dense f32 reconstruction planes never hit HBM.  ``acc``
+    ([W, 128] f32, optional) adds the reduce on top of a carried
+    accumulator tile-by-tile, so cohort chunks of a large user axis
+    fold through one resident plane (DESIGN.md §12: the kernel's
+    chunked sum is ``acc + einsum(chunk)``, ulp-level order-sensitive
+    across chunkings — the jnp oracle's sequential fold is the
+    chunking-invariant reference)."""
     G, W, _ = signs.shape
     bm = min(block_rows, W)
     assert W % bm == 0, (W, bm)
@@ -271,15 +285,21 @@ def mixed_res_dequant_reduce(signs: jnp.ndarray, hi: jnp.ndarray,
     cpr = code_words_per_row(b)
     assert codes.shape == (G, W, cpr), (codes.shape, cpr)
     kernel = functools.partial(_dequant_reduce_kernel, bw=bw, bm=bm)
+    in_specs = [pl.BlockSpec((G, bm, 4), lambda i: (0, i, 0)),
+                pl.BlockSpec((G, bm, 4), lambda i: (0, i, 0)),
+                pl.BlockSpec((G, bm, cpr), lambda i: (0, i, 0)),
+                pl.BlockSpec((G, HEADER_LANES), lambda i: (0, 0)),
+                pl.BlockSpec((G, 1), lambda i: (0, 0))]
+    args = [signs, hi, codes, head, weights.reshape(G, 1)]
+    if acc is not None:
+        assert acc.shape == (W, 128), acc.shape
+        in_specs.append(pl.BlockSpec((bm, 128), lambda i: (i, 0)))
+        args.append(acc.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=(W // bm,),
-        in_specs=[pl.BlockSpec((G, bm, 4), lambda i: (0, i, 0)),
-                  pl.BlockSpec((G, bm, 4), lambda i: (0, i, 0)),
-                  pl.BlockSpec((G, bm, cpr), lambda i: (0, i, 0)),
-                  pl.BlockSpec((G, HEADER_LANES), lambda i: (0, 0)),
-                  pl.BlockSpec((G, 1), lambda i: (0, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, 128), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((W, 128), jnp.float32),
         interpret=interpret,
-    )(signs, hi, codes, head, weights.reshape(G, 1))
+    )(*args)

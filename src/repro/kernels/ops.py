@@ -21,6 +21,7 @@ from .mixed_res import (H_DBAR, H_DWQ, H_INF, H_LAM, H_STEP,
                         mixed_res_reduce)
 from .quant_pack import sign_dequant_reduce as _sdr
 from .quant_pack import signpack as _signpack
+from .wire import WirePath
 
 
 def _default_interpret() -> bool:
@@ -37,6 +38,19 @@ def _default_use_kernel(use_kernel: bool | None) -> bool:
     if use_kernel is None:
         return jax.default_backend() == "tpu"
     return use_kernel
+
+
+def _resolve_lowering(path: WirePath | None, interpret: bool | None,
+                      use_kernel: bool | None) -> tuple:
+    """One shared lowering decision for every wire op: a WirePath spec
+    wins; the legacy per-call ``interpret``/``use_kernel`` booleans are
+    honored when no spec is given (they remain the kernel test suite's
+    harness knobs)."""
+    if path is not None:
+        return (path.interpret() if interpret is None else interpret,
+                path.use_kernel() if use_kernel is None else use_kernel)
+    return (_default_interpret() if interpret is None else interpret,
+            _default_use_kernel(use_kernel))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -144,7 +158,8 @@ def wire_view(flat: jnp.ndarray):
 
 def mixed_res_encode(flat: jnp.ndarray, lambda_: float, b: int, *,
                      interpret: bool | None = None,
-                     use_kernel: bool | None = None) -> MixedResWire:
+                     use_kernel: bool | None = None,
+                     path: WirePath | None = None) -> MixedResWire:
     """Threshold-rule (paper eq. 6) encode of U stacked deltas straight
     to the packed wire format — two streaming passes, no dense recon.
 
@@ -160,8 +175,7 @@ def mixed_res_encode(flat: jnp.ndarray, lambda_: float, b: int, *,
             f"mixed_res_encode: d={d} >= 2**24 would make the f32 "
             "dbar count inexact; shard the delta first")
     x3 = wire_view(flat)
-    interp = _default_interpret() if interpret is None else interpret
-    kern = _default_use_kernel(use_kernel)
+    interp, kern = _resolve_lowering(path, interpret, use_kernel)
     if kern:
         stats = mixed_res_reduce(x3, lambda_, d, interpret=interp)
     else:
@@ -186,7 +200,8 @@ def mixed_res_encode(flat: jnp.ndarray, lambda_: float, b: int, *,
 def mixed_res_encode_anchored(flat: jnp.ndarray, inf: jnp.ndarray,
                               dw_q: jnp.ndarray, b: int, *,
                               interpret: bool | None = None,
-                              use_kernel: bool | None = None
+                              use_kernel: bool | None = None,
+                              path: WirePath | None = None
                               ) -> MixedResWire:
     """Static-budget (``|x| >= dw_q``) encode used by repro.dist: the
     grid anchor comes from an upstream top-k, so only the emit pass
@@ -198,8 +213,8 @@ def mixed_res_encode_anchored(flat: jnp.ndarray, inf: jnp.ndarray,
     head = jnp.zeros((U, 8), jnp.float32)
     head = head.at[:, H_INF].set(inf).at[:, H_DWQ].set(dw_q) \
                .at[:, H_STEP].set(step)
-    interp = _default_interpret() if interpret is None else interpret
-    if _default_use_kernel(use_kernel):
+    interp, kern = _resolve_lowering(path, interpret, use_kernel)
+    if kern:
         signs, hi, codes = mixed_res_emit(x3, head, b, d, anchored=True,
                                           interpret=interp)
     else:
@@ -212,19 +227,31 @@ def mixed_res_encode_anchored(flat: jnp.ndarray, inf: jnp.ndarray,
 
 def mixed_res_wire_reduce(wire: MixedResWire, weights: jnp.ndarray,
                           b: int, d: int, *,
+                          acc: jnp.ndarray | None = None,
                           interpret: bool | None = None,
-                          use_kernel: bool | None = None) -> jnp.ndarray:
+                          use_kernel: bool | None = None,
+                          path: WirePath | None = None) -> jnp.ndarray:
     """Fused decode + weighted reduce: sum_g weights_g * deq(wire_g)
-    -> [d] f32, entirely from the packed buffers."""
-    interp = _default_interpret() if interpret is None else interpret
+    -> [d] f32, entirely from the packed buffers.
+
+    ``acc`` ([d] f32, optional) chains the reduce across cohort chunks:
+    the result is ``acc + sum_g w_g * deq(wire_g)`` folded so the
+    chunked accumulation over a partitioned user axis reproduces the
+    one-shot reduce's summation order (jnp lowering exactly; Pallas
+    kernel to chunking-order ulps — DESIGN.md §12)."""
+    interp, kern = _resolve_lowering(path, interpret, use_kernel)
     w = weights.astype(jnp.float32)
-    if _default_use_kernel(use_kernel):
+    acc3 = None
+    if acc is not None:
+        # view the carried [d] plane in the kernels' [W, 128] layout
+        acc3 = wire_view(acc.astype(jnp.float32)[None])[0]
+    if kern:
         out = mixed_res_dequant_reduce(wire.signs, wire.hi, wire.codes,
-                                       wire.head, w, b,
+                                       wire.head, w, b, acc=acc3,
                                        interpret=interp)
     else:
         out = _ref.mixed_res_dequant_reduce_ref(
-            wire.signs, wire.hi, wire.codes, wire.head, w, b)
+            wire.signs, wire.hi, wire.codes, wire.head, w, b, acc=acc3)
     _tap_wire("wire.decode", int(wire.head.shape[0]), d * 4, wire)
     return out.reshape(-1)[:d]
 
@@ -232,7 +259,8 @@ def mixed_res_wire_reduce(wire: MixedResWire, weights: jnp.ndarray,
 def mixed_res_wire_aggregate(flat: jnp.ndarray, weights: jnp.ndarray,
                              lambda_: float, b: int, *,
                              interpret: bool | None = None,
-                             use_kernel: bool | None = None):
+                             use_kernel: bool | None = None,
+                             path: WirePath | None = None):
     """The whole quantize-to-wire aggregation of the paper's scheme:
     encode U stacked deltas (two streaming passes) and reduce
     ``sum_g w_g * deq(wire_g)`` from the packed buffers.
@@ -244,10 +272,10 @@ def mixed_res_wire_aggregate(flat: jnp.ndarray, weights: jnp.ndarray,
     reconstructions are never materialized."""
     U, d = flat.shape
     wire = mixed_res_encode(flat, lambda_, b, interpret=interpret,
-                            use_kernel=use_kernel)
+                            use_kernel=use_kernel, path=path)
     agg = mixed_res_wire_reduce(wire, weights, b, d,
                                 interpret=interpret,
-                                use_kernel=use_kernel)
+                                use_kernel=use_kernel, path=path)
     inf = wire.head[:, H_INF]
     dw_q = wire.head[:, H_DWQ]
     dbar = wire.head[:, H_DBAR]

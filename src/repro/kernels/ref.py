@@ -99,10 +99,19 @@ def mixed_res_emit_ref(x: jnp.ndarray, head: jnp.ndarray, b: int,
 
 def mixed_res_dequant_reduce_ref(signs: jnp.ndarray, hi: jnp.ndarray,
                                  codes: jnp.ndarray, head: jnp.ndarray,
-                                 weights: jnp.ndarray, b: int
+                                 weights: jnp.ndarray, b: int,
+                                 acc: jnp.ndarray | None = None
                                  ) -> jnp.ndarray:
     """Packed wire planes of G users -> [W, 128] f32 weighted reduce
-    (see mixed_res_dequant_reduce)."""
+    (see mixed_res_dequant_reduce).
+
+    ``acc`` ([W, 128] f32, optional) seeds the left fold with a carried
+    accumulator so the reduction chains across cohort chunks:
+    ``((acc + u_0) + u_1) + ...``.  Because the no-acc fold is the same
+    left-to-right chain started at ``u_0``, folding a partition of the
+    user axis chunk by chunk through ``acc`` reproduces the one-shot
+    fold's float32 values exactly (only the sign of exact zeros can
+    differ from the zeros init — invisible to ``==``; DESIGN.md §12)."""
     from .mixed_res import H_DWQ, H_STEP, code_width
     G, W, _ = signs.shape
     shifts32 = jnp.arange(32, dtype=jnp.uint32)
@@ -130,7 +139,7 @@ def mixed_res_dequant_reduce_ref(signs: jnp.ndarray, hi: jnp.ndarray,
         mag = jnp.where(him, wdq + code * wst, wdq * 0.5)
         return jnp.where(sb, mag, -mag)              # mag >= 0
 
-    out = one(0)
+    out = one(0) if acc is None else acc + one(0)
     for g in range(1, G):
         out = out + one(g)
     return out

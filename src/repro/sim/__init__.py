@@ -13,14 +13,28 @@ simulation engine.
   (mean/ci95 summaries at one dispatch per quantizer per round);
 * :mod:`metrics` — round-log aggregation the benchmark tables consume.
 """
+from repro.kernels import WirePath  # the shared wire-path spec
+
 from .engine import (AsyncClock, AsyncRoundInfo, EngineConfig,
                      ReplicatedRoundWork, ReplicatedRunState, RoundWork,
-                     RunState, StalenessConfig, VectorizedFLEngine,
-                     advance_async_clock, staleness_weights,
-                     straggler_gap)
+                     RunState, StalenessConfig, UplinkSolution,
+                     VectorizedFLEngine, advance_async_clock,
+                     staleness_weights, straggler_gap)
 from .metrics import summarize_logs, summarize_replicates, write_metrics_csv
 from .phy_driver import run_grid_batched
 from .scenarios import (SCENARIOS, Scenario, async_scenarios,
                         build_problem, get_scenario, grid_scenarios,
                         list_scenarios, register_scenario)
 from .sweep import SweepCell, SweepResult, run_cell, run_grid
+
+__all__ = [
+    "AsyncClock", "AsyncRoundInfo", "EngineConfig",
+    "ReplicatedRoundWork", "ReplicatedRunState", "RoundWork", "RunState",
+    "SCENARIOS", "Scenario", "StalenessConfig", "SweepCell",
+    "SweepResult", "UplinkSolution", "VectorizedFLEngine", "WirePath",
+    "advance_async_clock", "async_scenarios", "build_problem",
+    "get_scenario", "grid_scenarios", "list_scenarios",
+    "register_scenario", "run_cell", "run_grid", "run_grid_batched",
+    "staleness_weights", "straggler_gap", "summarize_logs",
+    "summarize_replicates", "write_metrics_csv",
+]

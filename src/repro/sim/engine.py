@@ -78,9 +78,22 @@ Public API / invariants:
 
 * ``VectorizedFLEngine(...).run()`` — one-call driver; or the
   round-stepping quartet ``start_run`` / ``train_round`` /
-  ``solve_uplink_host[_detailed]`` / ``finish_round`` (async inserts
-  ``complete_round_async`` between solve and finish — aggregation
-  happens there, never in ``finish_round``).
+  ``solve_uplink_host`` (returns an :class:`UplinkSolution`; the
+  ``_detailed`` spelling is a deprecated alias) / ``finish_round``
+  (async inserts ``complete_round_async`` between solve and finish —
+  aggregation happens there, never in ``finish_round``).
+
+Streaming cohorts (``EngineConfig(wire=WirePath(cohort_size=C))``,
+DESIGN.md section 12): the fused packed-plane step scans the K users
+in cohorts of C — each scan iteration trains C users, encodes their
+packed wire planes and folds the weighted dequant-reduce into a
+carried [d] accumulator, so the dense [K, d] gradient matrix never
+exists at any fan-in and device residency scales with C, not K.
+``cohort_size=None`` keeps today's fully vectorized step bit-for-bit.
+``WirePath(clusters=N)`` adds the two-level hierarchy: contiguous
+AP-cluster user groups aggregate into partial [d] planes on device
+(only one cluster's minibatches resident at a time), combined
+host-ordered before a single param update.
 * Replicated: ``start_replicated_run(R)`` / ``train_round_replicated``
   (+ ``complete_round_replicated_async``); R=1 is bit-for-bit the
   unreplicated path (same compiled step, squeezed).
@@ -114,6 +127,7 @@ from repro.data.synthetic import ImageDataset
 # shared with repro.dist's cross-replica aggregation
 from repro.dist.compressor import \
     signplane_weighted_aggregate as _signplane_aggregate
+from repro.kernels import WirePath, from_aggregation
 from repro.kernels.ops import (H_DBAR, H_DWQ, H_INF, MixedResWire,
                                mixed_res_encode, mixed_res_wire_reduce)
 from repro.kernels.ops import mixed_res_wire_aggregate as _wire_aggregate
@@ -172,9 +186,18 @@ class StalenessConfig:
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Engine-level knobs beyond the paper's Algorithm 1."""
-    # "dense" | "signplane" (packed 1-bit plane + dense correction) |
-    # "wire" (fully fused quantize-to-wire, kernels/mixed_res.py)
+    # DEPRECATED spelling of the wire-path plane — "dense" |
+    # "signplane" | "wire".  New call sites set ``wire=WirePath(...)``
+    # instead; the legacy strings keep working through
+    # repro.kernels.from_aggregation (DeprecationWarning).
     aggregation: str = "dense"
+    # The unified wire-path spec (repro.kernels.WirePath): which plane
+    # moves at the fan-in, which lowering runs it, and the streaming
+    # knobs (cohort_size — scan the K users in cohorts so no [K, d]
+    # buffer ever exists; clusters — two-level AP-cluster hierarchy).
+    # None defers to the legacy ``aggregation`` string; setting BOTH a
+    # non-default aggregation and wire is an error.
+    wire: Optional[WirePath] = None
     # fused=False (exact mode): only the K local AdaGrad runs share one
     # jit dispatch; quantization and aggregation replay the sequential
     # loop's eager per-op arithmetic — BIT-FOR-BIT equal to
@@ -228,7 +251,23 @@ class EngineConfig:
 
     @property
     def effective_fused(self) -> bool:
+        if self.wire is not None:
+            return self.fused or self.wire.plane != "dense"
         return self.fused or self.aggregation in ("signplane", "wire")
+
+    def wire_path(self) -> WirePath:
+        """The resolved WirePath: ``wire`` when set, else the legacy
+        ``aggregation`` string mapped through its deprecation shim
+        (silently for the "dense" default)."""
+        if self.wire is not None:
+            if self.aggregation != "dense":
+                raise ValueError(
+                    "set EngineConfig.wire OR the legacy aggregation "
+                    f"string, not both (wire={self.wire!r}, "
+                    f"aggregation={self.aggregation!r})")
+            return self.wire
+        return from_aggregation(self.aggregation,
+                                warn=self.aggregation != "dense")
 
     @property
     def async_active(self) -> bool:
@@ -407,6 +446,18 @@ class AsyncRoundInfo:
     in_flight_next: np.ndarray     # buffer occupancy entering next round
 
 
+class UplinkSolution(NamedTuple):
+    """Structured result of the uplink power solve (stage 3).
+
+    A NamedTuple so the legacy ``straggler_s, per_user_s = solve...``
+    unpacking keeps working; ``latencies`` is always populated ([K]
+    per-user upload-completion times, 0 for absent users — the async
+    event clock's input).  The batched driver's replicated variant
+    carries [R, K]."""
+    straggler_s: float
+    latencies: np.ndarray
+
+
 @dataclasses.dataclass
 class RoundWork:
     """What one training round hands to the power-control stage.
@@ -513,10 +564,13 @@ class VectorizedFLEngine:
         from repro.fl.cnn import init_cnn  # local: repro.fl imports us
 
         self.engine_cfg = engine or EngineConfig()
-        if self.engine_cfg.aggregation not in ("dense", "signplane",
-                                               "wire"):
-            raise ValueError(
-                f"unknown aggregation {self.engine_cfg.aggregation!r}")
+        # one resolved WirePath drives every plane/lowering/streaming
+        # decision below; the legacy aggregation string warns here once
+        wp = self.engine_cfg.wire_path()
+        self.wire_path_spec = wp
+        self._plane = wp.plane
+        self._cohort = wp.cohort_size
+        self._clusters = wp.clusters
         if self.engine_cfg.local_batching not in ("map", "vmap"):
             raise ValueError(
                 f"unknown local_batching {self.engine_cfg.local_batching!r}")
@@ -524,13 +578,13 @@ class VectorizedFLEngine:
                                                       "vmap"):
             raise ValueError(f"unknown replicate_batching "
                              f"{self.engine_cfg.replicate_batching!r}")
-        if (self.engine_cfg.aggregation in ("signplane", "wire")
+        if (self._plane in ("signplane", "packed")
                 and quantizer.name != "mixed-resolution"):
             raise ValueError(
-                f"{self.engine_cfg.aggregation} aggregation packs the "
+                f"the {self._plane} wire plane packs the "
                 "mixed-resolution wire format; quantizer "
                 f"{quantizer.name!r} has none")
-        if self.engine_cfg.aggregation == "wire" and quantizer.b > 16:
+        if self._plane == "packed" and quantizer.b > 16:
             raise ValueError(
                 "the wire kernels store magnitude codes in <= 16 bits; "
                 f"got b={quantizer.b}")
@@ -540,15 +594,23 @@ class VectorizedFLEngine:
                     "async rounds split the fused step into train and "
                     "aggregate dispatches; configure "
                     "EngineConfig(fused=True)")
-            if self.engine_cfg.aggregation == "signplane":
+            if self._plane == "signplane":
                 raise ValueError(
-                    "async rounds buffer packed payloads; use "
-                    "aggregation='wire' (full wire format) or 'dense'")
+                    "async rounds buffer packed payloads; use the "
+                    "'packed' plane (full wire format) or 'dense'")
+            if wp.streaming:
+                raise ValueError(
+                    "async rounds buffer full-K payload slots; cohort "
+                    "streaming (WirePath.cohort_size) is lockstep-only")
             if self.engine_cfg.mesh is not None:
                 warnings.warn(
                     "EngineConfig.mesh user-axis sharding is not "
                     "supported in async mode; running unsharded",
                     stacklevel=2)
+        if wp.streaming and self.engine_cfg.mesh is not None:
+            warnings.warn(
+                "EngineConfig.mesh user-axis sharding is not supported "
+                "with cohort streaming; running unsharded", stacklevel=2)
 
         self.dataset, self.test = dataset, test
         self.shards, self.cnn_cfg = shards, cnn_cfg
@@ -571,11 +633,11 @@ class VectorizedFLEngine:
         self.params = init_cnn(jax.random.PRNGKey(fl.seed), cnn_cfg)
         flat0, self.spec = flatten_pytree(self.params)
         self.d = int(flat0.size)
-        if self.engine_cfg.aggregation == "wire" and self.d >= 2 ** 24:
+        if self._plane == "packed" and self.d >= 2 ** 24:
             # the threshold encode's f32 high-res count is exact only
             # to 2**24 — fail at construction, not mid-run in the jit
             raise ValueError(
-                f"aggregation='wire' supports d < 2**24 (got d="
+                f"the packed wire plane supports d < 2**24 (got d="
                 f"{self.d}); shard the model or use 'signplane'")
         self.qstate = quantizer.init_batched_state(self.K, self.d)
         self.comp_lat = computation_latency(fl.L, fl.dataset_size_for_comp,
@@ -595,6 +657,24 @@ class VectorizedFLEngine:
         self._repl_step_cache = {}
         # async step cache: R (None = unreplicated) -> (train, agg)
         self._async_step_cache = {}
+        if self._clusters > 1:
+            # two-level hierarchy: per-cluster partial aggregates
+            # (cohort scan over the cluster's users — jit retraces per
+            # distinct cluster size) + one host-ordered combine and one
+            # param-update dispatch
+            self._cluster_step = jax.jit(
+                _obs.retrace_probe(f"sim.cluster_step/{self._obs_name}")(
+                    lambda p, xs, ys, w:
+                    self._cohort_accumulate(p, xs, ys, w)))
+            self._combine_partials = jax.jit(lambda a, b: a + b)
+            self._apply_update = jax.jit(
+                lambda p, u: jax.tree_util.tree_map(
+                    lambda x, v: x + v, p,
+                    unflatten_pytree(u, self.spec)))
+            # bits accounting runs the SAME compiled _head_stats graph
+            # as the flat fused step, so per-user payload bits stay
+            # bitwise-equal across clusters=1 and clusters>1
+            self._head_stats_jit = jax.jit(self._head_stats)
 
     # ------------------------------------------------------------ build
     def _user_shardings(self):
@@ -602,7 +682,9 @@ class VectorizedFLEngine:
         is configured — the K axis of stacked arrays goes over the
         mesh's data axis so one step runs the users device-parallel."""
         mesh = self.engine_cfg.mesh
-        if mesh is None:
+        if mesh is None or self._cohort is not None:
+            # cohort streaming scans the user axis on one device —
+            # __init__ already warned if a mesh was also configured
             return None, None
         from jax.sharding import NamedSharding, PartitionSpec as P
         if "data" not in getattr(mesh, "shape", {}):
@@ -619,11 +701,12 @@ class VectorizedFLEngine:
                 NamedSharding(mesh, P()))
 
     def _batched_local(self, params, xs, ys):
-        """All K users' local AdaGrad runs -> stacked [K, d] deltas.
-        Traced inside the jitted step; batching per EngineConfig."""
+        """All stacked users' local AdaGrad runs -> [U, d] deltas
+        (U = K vectorized, or one cohort C under streaming).  Traced
+        inside the jitted step; batching per EngineConfig."""
         from repro.fl.loop import local_adagrad  # local: avoids cycle
 
-        fl, K = self.fl, self.K
+        fl, U = self.fl, xs.shape[0]
         if self.engine_cfg.local_batching == "vmap":
             local = jax.vmap(
                 lambda x, y: local_adagrad(params, x, y, fl.L, fl.alpha)
@@ -636,8 +719,59 @@ class VectorizedFLEngine:
         delta = jax.tree_util.tree_map(lambda w, p: w - p, local, params)
         leaves = jax.tree_util.tree_flatten(delta)[0]
         return jnp.concatenate(
-            [jnp.reshape(l, (K, -1)).astype(jnp.float32)
-             for l in leaves], axis=1)                        # [K, d]
+            [jnp.reshape(l, (U, -1)).astype(jnp.float32)
+             for l in leaves], axis=1)                        # [U, d]
+
+    # ------------------------------------------- cohort streaming path
+    def _head_stats(self, head):
+        """Per-user payload bits + aux diagnostics from stacked wire
+        headers [U, 8] — the same arithmetic, in the same op order, as
+        ``mixed_res_wire_aggregate`` (bitwise-equal bits accounting)."""
+        q, d = self.quantizer, self.d
+        inf = head[:, H_INF]
+        dw_q = head[:, H_DWQ]
+        dbar = head[:, H_DBAR]
+        s = dbar / d
+        bits = d * (q.b * s + 1.0 - s) + 32.0
+        bits = jnp.where(inf > 0, bits, float(d) + 32.0)
+        aux = {"s": s, "dbar": dbar.astype(jnp.int32), "r": inf - dw_q,
+               "dw_q": dw_q, "inf": inf}
+        return bits, aux
+
+    def _cohort_accumulate(self, params, xs, ys, weights):
+        """Stream the stacked users through `lax.scan` in cohorts of
+        C = WirePath.cohort_size: each chunk runs local AdaGrad + the
+        fused packed encode, and the weighted dequant-reduce folds into
+        a carried [d] accumulator (``mixed_res_wire_reduce(acc=...)``)
+        — the dense [U, d] gradient matrix never exists at any fan-in.
+
+        The user axis is zero-padded up to a multiple of C; padded
+        slots carry weight 0 and so contribute exactly +-0.0 to the
+        fold (DESIGN.md §12).  Returns ``(acc [d] f32, head [U, 8])``
+        with the padded rows stripped from the headers."""
+        q, d, C = self.quantizer, self.d, self._cohort
+        wp = self.wire_path_spec
+        U = xs.shape[0]
+        Gc = -(-U // C)
+        pad = Gc * C - U
+        if pad:
+            padu = lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)]
+                                     * (a.ndim - 1))
+            xs, ys, weights = padu(xs), padu(ys), padu(weights)
+        chunk = lambda a: a.reshape((Gc, C) + a.shape[1:])
+
+        def body(acc, args):
+            x_c, y_c, w_c = args
+            flat = self._batched_local(params, x_c, y_c)  # [C, d]
+            wire = mixed_res_encode(flat, q.lambda_, q.b, path=wp)
+            acc = mixed_res_wire_reduce(wire, w_c, q.b, d, acc=acc,
+                                        path=wp)
+            return acc, wire.head
+
+        acc, heads = jax.lax.scan(
+            body, jnp.zeros((d,), jnp.float32),
+            (chunk(xs), chunk(ys), chunk(weights)))
+        return acc, heads.reshape(Gc * C, -1)[:U]
 
     def _build_train_flat(self):
         """One jit dispatch: all K users' local AdaGrad runs + stacked
@@ -657,7 +791,8 @@ class VectorizedFLEngine:
         aggregation + model update), returned UNJITTED so the replicate
         axis can vmap it before compilation."""
         q, spec, K = self.quantizer, self.spec, self.K
-        aggregation = self.engine_cfg.aggregation
+        plane, cohort = self._plane, self._cohort
+        wp = self.wire_path_spec
 
         # per-round straggler/payload stats streamed from INSIDE the
         # compiled step via jax.debug.callback (repro.obs jit tap) —
@@ -679,14 +814,27 @@ class VectorizedFLEngine:
             _obs.jit_tap("engine.jit_round", stats)
 
         def step(params, qstate, xs, ys, weights, active):
+            if plane == "packed" and cohort is not None:
+                # streaming cohorts: the scan body trains + encodes C
+                # users at a time and folds their packed planes into
+                # the carried [d] accumulator — no [K, d] buffer
+                acc, head = self._cohort_accumulate(params, xs, ys,
+                                                    weights)
+                bits, aux = self._head_stats(head)
+                params = jax.tree_util.tree_map(
+                    lambda p, u: p + u, params,
+                    unflatten_pytree(acc, spec))
+                tap(bits, aux, active)
+                return params, qstate, bits, aux
             flat = self._batched_local(params, xs, ys)
-            if aggregation == "wire":
+            if plane == "packed":
                 # fully fused quantize-to-wire: reductions, packed
                 # planes and the weighted dequant-reduce all happen in
                 # the mixed-res kernel suite; no dense recon, and no
                 # quantizer state (mixed-resolution is stateless)
                 agg, bits, aux = _wire_aggregate(flat, weights,
-                                                 q.lambda_, q.b)
+                                                 q.lambda_, q.b,
+                                                 path=wp)
                 params = jax.tree_util.tree_map(
                     lambda p, u: p + u, params,
                     unflatten_pytree(agg, spec))
@@ -700,7 +848,7 @@ class VectorizedFLEngine:
                         jnp.reshape(active, (K,) + (1,) * (n.ndim - 1))
                         > 0, n, o),
                     new_qstate, qstate)
-            if aggregation == "signplane":
+            if plane == "signplane":
                 agg = _signplane_aggregate(flat, res.recon,
                                            res.aux["dw_q"], weights)
             else:
@@ -764,7 +912,7 @@ class VectorizedFLEngine:
                 if mode == "auto":
                     mode = "vmap" if jax.default_backend() in (
                         "tpu", "gpu") else "map"
-                if self.engine_cfg.aggregation in ("signplane", "wire"):
+                if self._plane in ("signplane", "packed"):
                     # the Pallas wire-format kernels expect their
                     # unbatched [G*W, 128] windows — never vmap them
                     mode = "map"
@@ -799,7 +947,7 @@ class VectorizedFLEngine:
         fresh-uploader mask: only committing users' quantizer state
         advances (busy/absent users did not transmit)."""
         q, K, d = self.quantizer, self.K, self.d
-        aggregation = self.engine_cfg.aggregation
+        plane, wp = self._plane, self.wire_path_spec
 
         def tap(bits, aux, commit):
             masked = bits * commit
@@ -815,16 +963,9 @@ class VectorizedFLEngine:
 
         def train(params, qstate, xs, ys, commit):
             flat = self._batched_local(params, xs, ys)
-            if aggregation == "wire":
-                wire = mixed_res_encode(flat, q.lambda_, q.b)
-                inf = wire.head[:, H_INF]
-                s = wire.head[:, H_DBAR] / d
-                bits = d * (q.b * s + 1.0 - s) + 32.0
-                bits = jnp.where(inf > 0, bits, float(d) + 32.0)
-                aux = {"s": s,
-                       "dbar": wire.head[:, H_DBAR].astype(jnp.int32),
-                       "r": inf - wire.head[:, H_DWQ],
-                       "dw_q": wire.head[:, H_DWQ], "inf": inf}
+            if plane == "packed":
+                wire = mixed_res_encode(flat, q.lambda_, q.b, path=wp)
+                bits, aux = self._head_stats(wire.head)
                 tap(bits, aux, commit)
                 return wire, qstate, bits, aux
             res, new_qstate = q.batched(flat, qstate)
@@ -847,15 +988,15 @@ class VectorizedFLEngine:
         shuffle (missed fresh payloads move in, retained misses stay,
         everything else zeroes out)."""
         q, spec, K, d = self.quantizer, self.spec, self.K, self.d
-        aggregation = self.engine_cfg.aggregation
+        plane, wp = self._plane, self.wire_path_spec
 
         def agg(params, fresh, buf, w_fresh, w_buf, move, keep):
-            if aggregation == "wire":
+            if plane == "packed":
                 stacked = jax.tree_util.tree_map(
                     lambda f, bu: jnp.concatenate([f, bu], axis=0),
                     fresh, buf)
                 w = jnp.concatenate([w_fresh, w_buf], axis=0)
-                upd = mixed_res_wire_reduce(stacked, w, q.b, d)
+                upd = mixed_res_wire_reduce(stacked, w, q.b, d, path=wp)
             else:
                 upd = (jnp.einsum("k,kd->d", w_fresh, fresh)
                        + jnp.einsum("k,kd->d", w_buf, buf))
@@ -927,7 +1068,7 @@ class VectorizedFLEngine:
                 if mode == "auto":
                     mode = "vmap" if jax.default_backend() in (
                         "tpu", "gpu") else "map"
-                if self.engine_cfg.aggregation == "wire":
+                if self._plane == "packed":
                     mode = "map"    # Pallas kernels: unbatched windows
                 if mode == "map":
                     batch = lambda fn: (lambda *args: jax.lax.map(
@@ -947,7 +1088,7 @@ class VectorizedFLEngine:
         exactly nothing to the aggregate)."""
         B = 1 if R is None else R
         K, d = self.K, self.d
-        if self.engine_cfg.aggregation == "wire":
+        if self._plane == "packed":
             shapes = jax.eval_shape(
                 lambda z: mixed_res_encode(z, self.quantizer.lambda_,
                                            self.quantizer.b),
@@ -1040,9 +1181,13 @@ class VectorizedFLEngine:
             np.stack([state.rng.choice(shard, self.take, replace=False)
                       for _ in range(fl.L)])
             for shard in self.shards])               # [K, L, b]
+        active = self._draw_active(state.part_rng)
+        if self._clusters > 1 and not ecfg.async_active:
+            # two-level hierarchy: only one cluster's minibatches are
+            # transferred (and resident) at a time
+            return self._clustered_round(state, t, sel, active)
         xs = jnp.asarray(self.dataset.x[sel])
         ys = jnp.asarray(self.dataset.y[sel])
-        active = self._draw_active(state.part_rng)
         if ecfg.async_active:
             # async: busy users (mid-upload) keep transmitting their
             # old payload — only participating, non-busy users start a
@@ -1078,6 +1223,41 @@ class VectorizedFLEngine:
         return RoundWork(t=t, bits_np=bits_np, active=active,
                          mean_s=mean_s)
 
+    def _clustered_round(self, state: RunState, t: int, sel: np.ndarray,
+                         active: np.ndarray) -> RoundWork:
+        """Two-level hierarchy (WirePath.clusters > 1, DESIGN.md §12):
+        the K users are split host-side into contiguous AP-cluster
+        groups; each group's minibatches are transferred alone and its
+        cohort scan produces a partial [d] aggregate on device.  The
+        partials combine in fixed cluster order (one tiny dispatch per
+        hop) before a single param-update dispatch — neither a [K, d]
+        buffer nor the full K-user minibatch stack is ever resident.
+
+        Combining per-cluster partials reassociates the user fold, so
+        this path matches ``clusters=1`` only to float32 roundoff
+        (DESIGN.md §12), never bit-for-bit."""
+        weights = self._round_weights(active)
+        groups = np.array_split(np.arange(self.K), self._clusters)
+        total, heads = None, []
+        for g in groups:
+            xs = jnp.asarray(self.dataset.x[sel[g]])
+            ys = jnp.asarray(self.dataset.y[sel[g]])
+            part, head = self._cluster_step(
+                state.params, xs, ys,
+                jnp.asarray(weights[g], jnp.float32))
+            total = part if total is None \
+                else self._combine_partials(total, part)
+            heads.append(head)
+        state.params = self._apply_update(state.params, total)
+        # bits from the SAME jitted _head_stats graph the flat cohort
+        # step runs — payload accounting is bitwise cluster-invariant
+        bits, aux = self._head_stats_jit(jnp.concatenate(heads, axis=0))
+        bits_np = np.asarray(bits, np.float64) * active
+        s = np.asarray(aux["s"], np.float64)
+        mean_s = float(np.mean(s[active.astype(bool)]))
+        return RoundWork(t=t, bits_np=bits_np, active=active,
+                         mean_s=mean_s)
+
     # ------------------------------------------- replicated round API
     # The Monte-Carlo replicate axis (DESIGN.md section 8): R
     # independent trajectories of this engine's problem advance in ONE
@@ -1094,6 +1274,11 @@ class VectorizedFLEngine:
             raise ValueError(
                 "replicated mode vmaps the fused per-round step; "
                 "configure EngineConfig(fused=True)")
+        if self._clusters > 1:
+            raise ValueError(
+                "the two-level cluster hierarchy drives its per-cluster "
+                "dispatches from the host; replicated mode is not "
+                "supported with WirePath.clusters > 1")
         if R < 1:
             raise ValueError(f"need at least one replicate, got {R}")
         fl = self.fl
@@ -1231,26 +1416,22 @@ class VectorizedFLEngine:
 
     def solve_uplink_host(self, chan: Optional[ChannelRealization],
                           bits_np: np.ndarray, active: np.ndarray
-                          ) -> float:
-        """Stage 3 (host reference path): per-cell numpy power solve."""
-        return self.solve_uplink_host_detailed(chan, bits_np, active)[0]
+                          ) -> "UplinkSolution":
+        """Stage 3 (host reference path): per-cell numpy power solve.
 
-    def solve_uplink_host_detailed(
-            self, chan: Optional[ChannelRealization],
-            bits_np: np.ndarray, active: np.ndarray
-            ) -> Tuple[float, np.ndarray]:
-        """Host power solve returning ``(straggler_s, per_user_s [K])``
-        — per-user upload-completion times scattered back to the full
-        user axis (0 for absent users), the async event clock's input.
-        """
+        Returns an :class:`UplinkSolution` always carrying the per-user
+        upload-completion times scattered back to the full user axis
+        (0 for absent users) — the async event clock's input.  The
+        NamedTuple unpacks as the legacy ``(straggler_s, per_user_s)``
+        pair."""
         per_user = np.zeros(self.K)
         if self.power is None or chan is None:
-            return 0.0, per_user
+            return UplinkSolution(0.0, per_user)
         act_idx = np.flatnonzero(active)
         if len(act_idx) == 0:
             # async corner: every participating user is mid-upload, so
             # nobody transmits fresh payload this round
-            return 0.0, per_user
+            return UplinkSolution(0.0, per_user)
         if len(act_idx) == self.K:
             sol = self.power.solve(chan, np.maximum(bits_np, 1.0))
             per_user = np.asarray(sol.latencies, np.float64)
@@ -1262,7 +1443,20 @@ class VectorizedFLEngine:
                 _subchannel(chan, act_idx),
                 np.maximum(bits_np[act_idx], 1.0))
             per_user[act_idx] = np.asarray(sol.latencies, np.float64)
-        return sol.straggler_latency, per_user
+        return UplinkSolution(sol.straggler_latency, per_user)
+
+    def solve_uplink_host_detailed(
+            self, chan: Optional[ChannelRealization],
+            bits_np: np.ndarray, active: np.ndarray
+            ) -> Tuple[float, np.ndarray]:
+        """DEPRECATED alias of :meth:`solve_uplink_host`, which now
+        returns the full :class:`UplinkSolution` itself."""
+        warnings.warn(
+            "solve_uplink_host_detailed is deprecated; "
+            "solve_uplink_host now returns an UplinkSolution carrying "
+            "both straggler_s and latencies", DeprecationWarning,
+            stacklevel=2)
+        return self.solve_uplink_host(chan, bits_np, active)
 
     # -------------------------------------------------- async complete
     def _advance_clock(self, clock: AsyncClock, active: np.ndarray,
@@ -1418,7 +1612,7 @@ class VectorizedFLEngine:
                     work = self.train_round(state, t)
                     sc.block(state.params)
                 with _obs.scope("solve_uplink"):
-                    uplink, per_user = self.solve_uplink_host_detailed(
+                    uplink, per_user = self.solve_uplink_host(
                         state.chan, work.bits_np, work.active)
                 info = None
                 if async_on:

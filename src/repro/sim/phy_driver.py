@@ -71,7 +71,7 @@ from repro.phy import (batched_solver, bundle_from_realization_grid,
                        bundle_from_realizations)
 
 from .engine import (ReplicatedRoundWork, ReplicatedRunState, RoundWork,
-                     RunState, VectorizedFLEngine)
+                     RunState, UplinkSolution, VectorizedFLEngine)
 from .metrics import summarize_replicates
 from .scenarios import Scenario, build_problem
 from .sweep import (PowerSpec, QuantSpec, SweepCell, SweepResult,
@@ -168,13 +168,13 @@ def _emit_solve_event(plabel: str, sol, mask: np.ndarray,
 
 def _solve_round_batched(cells: List[_Cell], works: List[RoundWork],
                          cache: _BundleCache
-                         ) -> Tuple[List[float], List[np.ndarray]]:
-    """One batched device solve per distinct power spec; returns the
-    per-cell straggler latency and per-user completion times [K]
-    (zeros without a channel — the async event clock's input) for
-    this round."""
-    uplinks = [0.0] * len(cells)
+                         ) -> List[UplinkSolution]:
+    """One batched device solve per distinct power spec; returns one
+    :class:`UplinkSolution` per cell — straggler latency plus per-user
+    completion times [K] (zeros without a channel — the async event
+    clock's input) for this round."""
     K0 = cells[0].track.engine.K if cells else 0
+    uplinks = [0.0] * len(cells)
     per_user = [np.zeros(K0) for _ in cells]
     # group cells by power label (one spec per label within a grid)
     groups: Dict[str, List[int]] = {}
@@ -209,7 +209,7 @@ def _solve_round_batched(cells: List[_Cell], works: List[RoundWork],
             uplinks[i] = float(stragglers[row])
             per_user[i] = latencies[row]
             cells[i].max_p = max(cells[i].max_p, float(p_max_round[row]))
-    return uplinks, per_user
+    return [UplinkSolution(u, pu) for u, pu in zip(uplinks, per_user)]
 
 
 def _run_scenario_lockstep(scn: Scenario, tracks: List[_Track],
@@ -235,11 +235,9 @@ def _run_scenario_lockstep(scn: Scenario, tracks: List[_Track],
                     if c.alive]
             works = [track_work[id(c.track)] for c in live]
             with _obs.scope("solve_uplink"):
-                uplinks, per_user = _solve_round_batched(live, works,
-                                                         cache)
+                sols = _solve_round_batched(live, works, cache)
             with _obs.scope("finish_round"):
-                for cell, work, uplink, pu in zip(live, works, uplinks,
-                                                  per_user):
+                for cell, work, (uplink, pu) in zip(live, works, sols):
                     eng = cell.track.engine
                     info = None
                     with _obs.context(quantizer=cell.qlabel,

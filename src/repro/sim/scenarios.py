@@ -66,8 +66,20 @@ class Scenario:
     # engine behaviour
     participation: float = 1.0
     redraw_channel_every: int = 0
+    # wire-path plane spelled in the legacy vocabulary ("dense" |
+    # "signplane" | "wire"); engine_config() maps it onto the unified
+    # WirePath spec WITHOUT the deprecation warning (a still-supported
+    # declarative field, not a legacy engine knob)
     aggregation: str = "dense"
     fused: bool = True               # production sweeps run fully fused
+    # streaming cohorts (DESIGN.md §12): scan the K users in cohorts of
+    # this size inside the fused packed-plane step, so device residency
+    # scales with the cohort, not K.  Requires aggregation="wire".
+    # None keeps the fully vectorized step bit-for-bit.
+    cohort_size: Optional[int] = None
+    # two-level AP-cluster hierarchy: partial on-device aggregates per
+    # contiguous user group, host-combined.  Requires cohort_size.
+    clusters: int = 1
     seed: int = 0
     # Monte-Carlo replicate axis (DESIGN.md section 8): > 1 makes the
     # batched sweep driver run this many independent trajectories per
@@ -103,7 +115,15 @@ class Scenario:
             else max(1, self.T // 5)
 
     def engine_config(self) -> EngineConfig:
-        return EngineConfig(aggregation=self.aggregation,
+        from repro.kernels import from_aggregation
+        # map the declarative aggregation field onto the unified spec
+        # silently (from_aggregation's warning is for legacy engine
+        # call sites, not this still-supported scenario field)
+        wp = from_aggregation(self.aggregation, warn=False)
+        if self.cohort_size is not None or self.clusters > 1:
+            wp = dataclasses.replace(wp, cohort_size=self.cohort_size,
+                                     clusters=self.clusters)
+        return EngineConfig(wire=wp,
                             fused=self.fused,
                             participation=self.participation,
                             redraw_channel_every=self.redraw_channel_every,
@@ -277,6 +297,23 @@ register_scenario(Scenario(
                 "dequant-reduce all in the streaming kernel suite "
                 "(kernels/mixed_res.py, DESIGN.md section 9)",
     M=None, K=20, T=40, aggregation="wire"))
+
+register_scenario(Scenario(
+    name="cohort-wire",
+    description="fused-wire with the user axis streamed in cohorts of "
+                "8: each scan chunk trains + packs 8 users and folds "
+                "into the carried [d] accumulator, so the dense [K, d] "
+                "gradient stack never exists (DESIGN.md section 12); "
+                "bit-for-bit with fused-wire on the parity suite",
+    M=None, K=20, T=40, aggregation="wire", cohort_size=8))
+
+register_scenario(Scenario(
+    name="cohort-hierarchy",
+    description="two-level cell-free hierarchy: 4 AP-cluster groups "
+                "each aggregate their users' packed planes on device "
+                "(cohorts of 8), partial [d] aggregates combined "
+                "host-ordered — the 10^4-10^5-user scaling story",
+    M=None, K=20, T=40, aggregation="wire", cohort_size=8, clusters=4))
 
 register_scenario(Scenario(
     name="async-q50",

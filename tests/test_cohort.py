@@ -1,0 +1,392 @@
+"""Streaming cohort aggregation + WirePath API (PR 8).
+
+Pins the contracts the cohort refactor promises:
+
+* cohort_size=None is THE vectorized wire path — and cohort scans of
+  any size C (1, K, K%C != 0) reproduce it bit-for-bit (DESIGN.md §12:
+  the chunked packed accumulate is a left fold in the same order);
+* churn masks that straddle a cohort boundary behave identically to
+  the vectorized step (absent users fold exact zeros);
+* the replicated Monte-Carlo axis composes with cohort streaming;
+* the two-level AP-cluster hierarchy matches the flat fan-in to
+  float32 roundoff (partials reassociate the sum — documented);
+* no [K, d] buffer exists anywhere in the traced cohort step (the
+  memory contract that lets K reach 10^4-10^5), asserted by walking
+  the jaxpr;
+* the legacy knobs (EngineConfig.aggregation, CompressorConfig
+  .wire_path, solve_uplink_host_detailed) keep working through
+  DeprecationWarning shims.
+"""
+import dataclasses
+import os
+import time
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import PaperCNNConfig
+from repro.core.quantize import MixedResolutionQuantizer
+from repro.data import make_image_classification, partition_iid
+from repro.dist import CompressorConfig
+from repro.fl import FLConfig
+from repro.kernels import WirePath, from_aggregation, from_wire_path
+from repro.sim import (EngineConfig, StalenessConfig, UplinkSolution,
+                       VectorizedFLEngine, get_scenario)
+
+K = 7          # deliberately prime: K % C != 0 for every C in 2..6
+COHORTS = [1, 3, K]   # one-user cohorts, uneven split (7 % 3 != 0), C=K
+
+
+@pytest.fixture(scope="module")
+def problem():
+    full = make_image_classification(n_samples=360, hw=8, n_classes=3,
+                                     noise=0.25, seed=0)
+    train = dataclasses.replace(full, x=full.x[:280], y=full.y[:280])
+    test = dataclasses.replace(full, x=full.x[280:], y=full.y[280:])
+    cfg = PaperCNNConfig(input_hw=8, n_classes=3)
+    return train, test, cfg
+
+
+def _leaves(params):
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(params)]
+
+
+def _engine(problem, wire, participation=1.0, T=3):
+    train, test, cfg = problem
+    shards = partition_iid(train, K)
+    fl = FLConfig(L=2, T=T, batch_size=8, alpha=0.02, eval_every=1,
+                  seed=0)
+    q = MixedResolutionQuantizer(lambda_=0.2, b=10)
+    return VectorizedFLEngine(
+        train, test, shards, cfg, q, None, None, fl,
+        engine=EngineConfig(wire=wire, participation=participation))
+
+
+@pytest.fixture(scope="module")
+def wire_baseline(problem):
+    """The vectorized packed-wire run every cohort slicing must hit."""
+    return _engine(problem, WirePath(plane="packed")).run()
+
+
+# -------------------------------------------------- cohort == vectorized
+@pytest.mark.parametrize("C", COHORTS)
+def test_cohort_scan_matches_vectorized_bit_for_bit(problem,
+                                                    wire_baseline, C):
+    """Any cohort slicing — one user at a time, uneven K % C != 0,
+    one cohort of all K — reproduces cohort_size=None bit-for-bit on
+    payload bits, accuracy and every parameter."""
+    res = _engine(problem,
+                  WirePath(plane="packed", cohort_size=C)).run()
+    for lb, lc in zip(wire_baseline.logs, res.logs):
+        np.testing.assert_array_equal(lb.bits_per_user, lc.bits_per_user)
+        assert lb.mean_s == lc.mean_s
+        assert lb.test_acc == lc.test_acc
+    for a, b in zip(_leaves(wire_baseline.params), _leaves(res.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_churn_straddling_cohort_boundary_bit_for_bit(problem):
+    """Partial participation draws masks on the K axis with no regard
+    for cohort boundaries; a churned user inside a cohort folds an
+    exact zero (weight 0 -> +-0.0 contribution), so the streamed run
+    still matches the vectorized one bit-for-bit."""
+    vec = _engine(problem, WirePath(plane="packed"),
+                  participation=0.5, T=4).run()
+    coh = _engine(problem, WirePath(plane="packed", cohort_size=3),
+                  participation=0.5, T=4).run()
+    saw_partial = False
+    for lv, lc in zip(vec.logs, coh.logs):
+        np.testing.assert_array_equal(lv.bits_per_user, lc.bits_per_user)
+        assert lv.test_acc == lc.test_acc
+        # the seeded mask must actually split users across the 3|3|1
+        # cohort boundaries (some active, some churned)
+        n_active = int(np.count_nonzero(lv.bits_per_user))
+        saw_partial |= 0 < n_active < K
+    assert saw_partial, "participation=0.5 never churned anyone"
+    for a, b in zip(_leaves(vec.params), _leaves(coh.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_replicated_axis_composes_with_cohorts(problem):
+    """The Monte-Carlo replicate axis (lax.map over the fused step)
+    runs the cohort scan per replicate and matches the vectorized
+    replicated run bit-for-bit."""
+    R, T = 2, 2
+    runs = []
+    for wire in (WirePath(plane="packed"),
+                 WirePath(plane="packed", cohort_size=3)):
+        eng = _engine(problem, wire, T=T)
+        state = eng.start_replicated_run(R)
+        works = [eng.train_round_replicated(state, t)
+                 for t in range(1, T + 1)]
+        runs.append((works, jax.device_get(state.params)))
+    (w_vec, p_vec), (w_coh, p_coh) = runs
+    for wv, wc in zip(w_vec, w_coh):
+        np.testing.assert_array_equal(wv.bits_np, wc.bits_np)
+        np.testing.assert_array_equal(wv.active, wc.active)
+    for a, b in zip(_leaves(p_vec), _leaves(p_coh)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_cluster_hierarchy_matches_flat_to_roundoff(problem):
+    """clusters=2 splits the K users into two on-device partial [d]
+    aggregates combined host-side; the partials reassociate the outer
+    sum, so the match is float32 roundoff, not bit-for-bit (DESIGN.md
+    §12).  Payload bits are per-user header stats — those stay exact."""
+    flat = _engine(problem,
+                   WirePath(plane="packed", cohort_size=3)).run()
+    hier = _engine(problem,
+                   WirePath(plane="packed", cohort_size=3,
+                            clusters=2)).run()
+    for lf, lh in zip(flat.logs, hier.logs):
+        np.testing.assert_array_equal(lf.bits_per_user, lh.bits_per_user)
+    for a, b in zip(_leaves(flat.params), _leaves(hier.params)):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)
+
+
+def test_cluster_hierarchy_rejects_replicated_mode(problem):
+    eng = _engine(problem, WirePath(plane="packed", cohort_size=3,
+                                    clusters=2))
+    with pytest.raises(ValueError, match="replicated"):
+        eng.start_replicated_run(2)
+
+
+def test_cohort_scenarios_registered():
+    for name in ("cohort-wire", "cohort-hierarchy"):
+        scn = get_scenario(name)
+        ecfg = scn.engine_config()
+        assert ecfg.wire is not None and ecfg.wire.streaming
+    assert get_scenario("cohort-hierarchy").clusters > 1
+
+
+# ------------------------------------------------- the memory contract
+def _walk_avals(jaxpr, out):
+    """Every aval in a jaxpr, recursing into sub-jaxprs (scan/cond/
+    pjit bodies) through eqn params."""
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                out.append(aval)
+        for val in eqn.params.values():
+            _walk_sub(val, out)
+    return out
+
+
+def _walk_sub(val, out):
+    if hasattr(val, "eqns"):                      # Jaxpr
+        _walk_avals(val, out)
+    elif hasattr(val, "jaxpr"):                   # ClosedJaxpr
+        _walk_avals(val.jaxpr, out)
+    elif isinstance(val, (tuple, list)):
+        for v in val:
+            _walk_sub(v, out)
+
+
+def _trace_step_avals(eng):
+    """Trace the engine's fused step abstractly and return every
+    intermediate aval (nothing executes)."""
+    sel = np.zeros((eng.K, eng.fl.L, eng.take), dtype=np.int64)
+    sds = lambda a: jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
+    xs = sds(eng.dataset.x[sel])
+    ys = sds(eng.dataset.y[sel])
+    w = jax.ShapeDtypeStruct((eng.K,), np.float32)
+    closed = jax.make_jaxpr(eng._fused_step_fn)(
+        jax.tree_util.tree_map(sds, eng.params),
+        jax.tree_util.tree_map(sds, eng.qstate), xs, ys, w, w)
+    return _walk_avals(closed.jaxpr, [])
+
+
+def _dense_user_buffers(avals, K, d):
+    """Avals carrying BOTH the user axis and the model dimension —
+    the [*, K, *, d, *] buffers cohort streaming must never create."""
+    return [a for a in avals if K in a.shape and d in a.shape]
+
+
+def test_cohort_step_never_materializes_K_by_d(problem):
+    """Walk the traced cohort step's jaxpr (including the scan body):
+    no intermediate may carry the user axis and the model dimension
+    together.  The vectorized step does (sanity: the detector sees
+    its [K, d] flat-delta buffer), the cohort scan must not."""
+    vec = _engine(problem, WirePath(plane="packed"))
+    coh = _engine(problem, WirePath(plane="packed", cohort_size=3))
+    d = vec.d
+    assert K != d and d not in (8, 3)   # dims unambiguous in shapes
+    assert _dense_user_buffers(_trace_step_avals(vec), K, d), \
+        "detector sanity: the vectorized step must show a [K, d] buffer"
+    offenders = _dense_user_buffers(_trace_step_avals(coh), K, d)
+    assert not offenders, [a.shape for a in offenders]
+
+
+# ------------------------------------------------------ WirePath rules
+def test_wirepath_validation_errors():
+    with pytest.raises(ValueError, match="plane"):
+        WirePath(plane="sparse")
+    with pytest.raises(ValueError, match="lowering"):
+        WirePath(lowering="jit")
+    with pytest.raises(ValueError, match="reduce"):
+        WirePath(reduce="tree")
+    with pytest.raises(ValueError, match="packed"):
+        WirePath(plane="dense", cohort_size=4)
+    with pytest.raises(ValueError, match="cohort_size"):
+        WirePath(plane="packed", clusters=2)
+    with pytest.raises(ValueError, match="cohort_size"):
+        WirePath(plane="packed", cohort_size=0)
+
+
+def test_engine_rejects_wire_plus_legacy_aggregation(problem):
+    train, test, cfg = problem
+    shards = partition_iid(train, K)
+    fl = FLConfig(L=1, T=1, batch_size=8, seed=0)
+    with pytest.raises(ValueError, match="not both"):
+        VectorizedFLEngine(
+            train, test, shards, cfg,
+            MixedResolutionQuantizer(0.2, 10), None, None, fl,
+            engine=EngineConfig(wire=WirePath(plane="packed"),
+                                aggregation="signplane"))
+
+
+def test_async_rejects_cohort_streaming(problem):
+    train, test, cfg = problem
+    shards = partition_iid(train, K)
+    fl = FLConfig(L=1, T=1, batch_size=8, seed=0)
+    with pytest.raises(ValueError, match="lockstep"):
+        VectorizedFLEngine(
+            train, test, shards, cfg,
+            MixedResolutionQuantizer(0.2, 10), None, None, fl,
+            engine=EngineConfig(
+                wire=WirePath(plane="packed", cohort_size=3),
+                async_mode=True,
+                staleness=StalenessConfig(deadline_s=1.0)))
+
+
+# ------------------------------------------------- deprecation shims
+def test_legacy_aggregation_string_warns_and_matches(problem,
+                                                     wire_baseline):
+    """EngineConfig(aggregation="wire") still runs — through the shim,
+    with a DeprecationWarning, bit-for-bit with the WirePath spec."""
+    train, test, cfg = problem
+    shards = partition_iid(train, K)
+    fl = FLConfig(L=2, T=3, batch_size=8, alpha=0.02, eval_every=1,
+                  seed=0)
+    with pytest.warns(DeprecationWarning, match="aggregation"):
+        eng = VectorizedFLEngine(
+            train, test, shards, cfg,
+            MixedResolutionQuantizer(0.2, 10), None, None, fl,
+            engine=EngineConfig(aggregation="wire"))
+    res = eng.run()
+    for lb, lc in zip(wire_baseline.logs, res.logs):
+        np.testing.assert_array_equal(lb.bits_per_user, lc.bits_per_user)
+    for a, b in zip(_leaves(wire_baseline.params), _leaves(res.params)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_legacy_shim_functions_warn():
+    with pytest.warns(DeprecationWarning, match="aggregation"):
+        assert from_aggregation("wire").plane == "packed"
+    with pytest.warns(DeprecationWarning, match="wire_path"):
+        assert from_wire_path("fused").plane == "packed"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # warn=False is silent
+        assert from_aggregation("signplane", warn=False).plane \
+            == "signplane"
+        assert from_wire_path("reference", warn=False).plane \
+            == "signplane"
+    with pytest.raises(ValueError, match="aggregation"):
+        from_aggregation("sparse")
+
+
+def test_compressor_wire_path_shim():
+    comp = CompressorConfig("mixed", s_budget=0.25, bits=4,
+                            wire_path="fused")
+    with pytest.warns(DeprecationWarning, match="wire_path"):
+        assert comp.resolved_wire().plane == "packed"
+    both = CompressorConfig("mixed", s_budget=0.25, bits=4,
+                            wire_path="fused",
+                            wire=WirePath(plane="packed"))
+    with pytest.raises(ValueError, match="not both"):
+        both.resolved_wire()
+    # default stays the fused packed exchange
+    assert CompressorConfig("mixed").resolved_wire().plane == "packed"
+
+
+def test_solve_uplink_host_detailed_deprecated(problem):
+    """The merged entrypoint returns the structured UplinkSolution
+    (legacy 2-tuple unpack still works); _detailed is a warning shim
+    delegating to it."""
+    from repro.core.channel import CFmMIMOConfig, make_channel
+    from repro.core.power import BisectionLPPowerControl
+    train, test, cfg = problem
+    shards = partition_iid(train, K)
+    fl = FLConfig(L=1, T=1, batch_size=8, seed=0)
+    eng = VectorizedFLEngine(
+        train, test, shards, cfg, MixedResolutionQuantizer(0.2, 10),
+        BisectionLPPowerControl(), make_channel(CFmMIMOConfig(K=K),
+                                                seed=0), fl,
+        engine=EngineConfig(wire=WirePath(plane="packed")))
+    bits = np.full(K, 1000.0)
+    active = np.ones(K)
+    sol = eng.solve_uplink_host(eng.chan, bits, active)
+    assert isinstance(sol, UplinkSolution)
+    straggler, per_user = sol                   # legacy unpack
+    assert per_user.shape == (K,)
+    assert straggler == pytest.approx(float(np.max(per_user)))
+    with pytest.warns(DeprecationWarning, match="detailed"):
+        old = eng.solve_uplink_host_detailed(eng.chan, bits, active)
+    np.testing.assert_array_equal(old.latencies, sol.latencies)
+
+
+# ------------------------------------------------------- scale smoke
+def _scale_problem(K_big):
+    ds = make_image_classification(n_samples=K_big + 200, hw=8,
+                                   n_classes=2, noise=0.3, seed=0)
+    train = dataclasses.replace(ds, x=ds.x[:K_big], y=ds.y[:K_big])
+    test = dataclasses.replace(ds, x=ds.x[K_big:], y=ds.y[K_big:])
+    shards = [np.array([i]) for i in range(K_big)]
+    cnn = PaperCNNConfig(input_hw=8, channels=3, conv_filters=4,
+                         dense_units=8, n_classes=2)
+    fl = FLConfig(T=1, L=1, batch_size=1, seed=0, eval_every=1)
+    return VectorizedFLEngine(
+        train, test, shards, cnn, MixedResolutionQuantizer(0.2, 10),
+        None, None, fl,
+        engine=EngineConfig(wire=WirePath(plane="packed",
+                                          cohort_size=256)))
+
+
+def test_k20000_trace_is_cohort_resident():
+    """Tracing alone (no execution — cheap even at K=20 000): the
+    full-scale step's jaxpr carries no [K, d] buffer, and the largest
+    d-carrying intermediate is the cohort stack [C, d], so device
+    residency scales with C, not K."""
+    eng = _scale_problem(20_000)
+    avals = _trace_step_avals(eng)
+    d, C = eng.d, 256
+    assert not _dense_user_buffers(avals, 20_000, d)
+    biggest = max((a for a in avals if d in a.shape),
+                  key=lambda a: int(np.prod(a.shape)))
+    assert int(np.prod(biggest.shape)) <= C * d
+
+
+scale_gate = pytest.mark.skipif(
+    not os.environ.get("RUN_SCALE_TESTS"),
+    reason="~1 min CPU smoke; set RUN_SCALE_TESTS=1 (the ci.yml "
+           "'scale' suite does)")
+
+
+@scale_gate
+def test_k20000_cohort_round_completes():
+    """Acceptance: one K=20 000, cohort_size=256 round end-to-end on
+    the CPU runner — finite payload bits for every user, finite
+    updated parameters."""
+    eng = _scale_problem(20_000)
+    state = eng.start_run()
+    t0 = time.time()
+    work = eng.train_round(state, 1)
+    jax.block_until_ready(state.params)
+    assert work.bits_np.shape == (20_000,)
+    assert np.all(np.isfinite(work.bits_np)) and work.bits_np.min() > 0
+    assert all(np.all(np.isfinite(l)) for l in _leaves(state.params))
+    # generous ceiling so a CI runner regression still surfaces
+    assert time.time() - t0 < 600

@@ -45,6 +45,50 @@ def _blocks():
 BLOCKS = _blocks()
 
 
+# the four packages whose import surface the docs are written against;
+# each must declare an explicit sorted __all__ and every exported name
+# must resolve (PR 8's one-wire-path API contract)
+PUBLIC_PACKAGES = ("repro.sim", "repro.dist", "repro.kernels",
+                   "repro.phy")
+_IMPORT = re.compile(
+    r"from\s+(repro[\w.]*)\s+import\s+(\([^)]*\)|[^\n]+)")
+
+
+@pytest.mark.parametrize("mod_name", PUBLIC_PACKAGES)
+def test_public_surface_declares_all(mod_name):
+    import importlib
+    mod = importlib.import_module(mod_name)
+    exported = getattr(mod, "__all__", None)
+    assert exported, f"{mod_name} must declare an explicit __all__"
+    assert list(exported) == sorted(exported), \
+        f"{mod_name}.__all__ is not sorted"
+    missing = [n for n in exported if not hasattr(mod, n)]
+    assert not missing, f"{mod_name}.__all__ names {missing} unresolvable"
+
+
+def test_doc_imports_go_through_public_all():
+    """Every ``from repro.<pkg> import name`` in a documentation block
+    must name something the package's __all__ exports — the docs never
+    teach private surface."""
+    import importlib
+    checked = 0
+    for param in BLOCKS:
+        rel, code, _ = param.values
+        for mod_name, names in _IMPORT.findall(code):
+            if mod_name not in PUBLIC_PACKAGES:
+                continue
+            mod = importlib.import_module(mod_name)
+            for name in names.strip("()").replace("\n", " ").split(","):
+                name = name.strip().split(" as ")[0].strip()
+                if not name:
+                    continue
+                assert name in mod.__all__, (
+                    f"{rel} imports {mod_name}.{name}, which is not in "
+                    f"{mod_name}.__all__")
+                checked += 1
+    assert checked > 0, "no public-package imports found in any doc block"
+
+
 def test_docs_have_examples():
     """The handbook exists and actually carries executable examples."""
     assert (REPO / "docs" / "architecture.md").is_file()

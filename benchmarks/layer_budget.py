@@ -1,0 +1,67 @@
+"""Per-layer budget overhead (DESIGN.md §13).
+
+The segmented wire aggregate runs one mixed-res encode per budget
+segment instead of one global pass.  This bench times the global
+``mixed_res_wire_aggregate`` against ``segmented_wire_aggregate`` at
+3 segments on the same ``[K, d]`` deltas — both under one jit, CPU
+default lowering — plus the dense-plane ``segmented_quantize``.  The
+gate pins the segmented rows so the per-segment loop never silently
+regresses past linear cost in the segment count; the derived column
+carries the segmented/global ratio for the record.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import LayerBudget, segmented_quantize
+from repro.kernels.ops import (mixed_res_wire_aggregate,
+                               segmented_wire_aggregate)
+
+from .common import csv_row
+
+LAM, B = 0.2, 10
+
+
+def _time(fn, *args, n=10):
+    fn(*args)
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(quick: bool = True):
+    K = 8 if quick else 20
+    d_mat = 65536 if quick else 1048576
+    d_norm = 1024 if quick else 4096
+    # a transformer-shaped toy tree: embed + norm + matmul groups
+    tree = {"a_embed_tokens": jnp.zeros((d_mat // 256, 256)),
+            "b_ln": jnp.zeros((d_norm,)),
+            "c_w": jnp.zeros((d_mat // 256, 256))}
+    lb = LayerBudget.by_group(embed=(0.4, 4), norm=(0.05, 12),
+                              matmul=(LAM, B))
+    segments = lb.segments_for(tree, LAM, B)
+    d = sum(s.size for s in segments)
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.standard_normal((K, d)), jnp.float32)
+    w = jnp.asarray(np.full(K, 1.0 / K), jnp.float32)
+
+    glob = jax.jit(lambda f, w: mixed_res_wire_aggregate(f, w, LAM, B))
+    seg = jax.jit(lambda f, w: segmented_wire_aggregate(f, w, segments))
+    dense = jax.jit(lambda f: segmented_quantize(f, segments))
+
+    t_glob = _time(glob, flat, w)
+    t_seg = _time(seg, flat, w)
+    t_dense = _time(dense, flat)
+    yield csv_row(f"layer_budget/wire_global_K{K}_d{d}", t_glob,
+                  "one_global_segment")
+    yield csv_row(f"layer_budget/wire_segmented_K{K}_d{d}", t_seg,
+                  f"{len(segments)}seg_ratio={t_seg / t_glob:.2f}x")
+    yield csv_row(f"layer_budget/dense_segmented_K{K}_d{d}", t_dense,
+                  f"{len(segments)}seg_dense_plane")

@@ -58,15 +58,16 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,table2,table3,overhead,"
                          "sim_engine,phy_solvers,mc_replicates,"
-                         "quant_kernels,async_rounds,cohort_scale")
+                         "quant_kernels,async_rounds,cohort_scale,"
+                         "layer_budget")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write structured per-bench records to OUT")
     args = ap.parse_args()
     quick = not args.full
 
     from . import async_rounds, cohort_scale, fig2_convergence, \
-        mc_replicates, overhead, phy_solvers, quant_kernels, \
-        sim_engine, table2_accuracy, table3_latency
+        layer_budget, mc_replicates, overhead, phy_solvers, \
+        quant_kernels, sim_engine, table2_accuracy, table3_latency
     benches = {
         "overhead": lambda: overhead.run(quick=quick),
         "fig2": lambda: fig2_convergence.run(T=40 if quick else 100,
@@ -79,6 +80,7 @@ def main() -> None:
         "quant_kernels": lambda: quant_kernels.run(quick=quick),
         "async_rounds": lambda: async_rounds.run(quick=quick),
         "cohort_scale": lambda: cohort_scale.run(quick=quick),
+        "layer_budget": lambda: layer_budget.run(quick=quick),
     }
     selected = list(benches) if args.only is None \
         else args.only.split(",")

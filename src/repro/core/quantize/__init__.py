@@ -3,6 +3,9 @@ from .aquila import AquilaQuantizer, aquila_quantize
 from .base import QuantResult, Quantizer, flatten_pytree, unflatten_pytree
 from .classic import ClassicQuantizer
 from .laq import LAQQuantizer, LAQState, laq_quantize
+from .layer_budget import (BudgetRule, LayerBudget, Segment, classify_leaf,
+                           resolve_segments, segmented_quantize,
+                           validate_segments)
 from .mixed_resolution import (MixedResolutionQuantizer, lemma1_bound,
                                mixed_resolution_quantize)
 from .packing import pack_codes, pack_signs, unpack_codes, unpack_signs

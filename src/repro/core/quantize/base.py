@@ -80,19 +80,29 @@ class Quantizer:
 
 
 def flatten_pytree(tree) -> Tuple[jax.Array, Any]:
-    """Flatten a pytree of arrays into one 1-D vector + treedef/aux."""
+    """Flatten a pytree of arrays into one 1-D f32 vector + spec.
+
+    The spec records each leaf's dtype so :func:`unflatten_pytree` can
+    cast back — bf16/f16 params round-trip instead of silently promoting
+    the whole model to f32 on the first ``params + update``.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     shapes = [l.shape for l in leaves]
     sizes = [int(jnp.size(l)) for l in leaves]
+    dtypes = [jnp.asarray(l).dtype for l in leaves]
     flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
-    return flat, (treedef, shapes, sizes)
+    return flat, (treedef, shapes, sizes, dtypes)
 
 
 def unflatten_pytree(flat: jax.Array, spec) -> Any:
-    treedef, shapes, sizes = spec
+    # pre-dtype specs (3-tuple) reconstruct every leaf in flat.dtype,
+    # matching the old behaviour for any pickled/stored spec
+    treedef, shapes, sizes = spec[:3]
+    dtypes = spec[3] if len(spec) > 3 else [flat.dtype] * len(shapes)
     leaves = []
     offset = 0
-    for shape, size in zip(shapes, sizes):
-        leaves.append(jnp.reshape(flat[offset:offset + size], shape))
+    for shape, size, dtype in zip(shapes, sizes, dtypes):
+        leaves.append(
+            jnp.reshape(flat[offset:offset + size], shape).astype(dtype))
         offset += size
     return jax.tree_util.tree_unflatten(treedef, leaves)

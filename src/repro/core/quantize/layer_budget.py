@@ -1,0 +1,250 @@
+"""Per-layer mixed-resolution bit budgets (DESIGN.md §13).
+
+The paper's scheme spends one global ``(lambda_, b)`` budget on the
+whole flattened model.  Real sequence models are structurally
+heterogeneous — embeddings tolerate coarse grids, norm gains do not,
+matmul deltas sit in between (the same observation that drives olmax's
+per-parameter optimizer routing).  A :class:`LayerBudget` partitions
+the flattened vector into contiguous *segments* of leaves that share a
+group label and gives each group its own mixed-resolution budget; the
+engine and the dist compressor then run one quantize/encode per
+segment and account payload bits as the exact sum of the per-segment
+bits.
+
+Contract (pinned by tests/test_layer_budget.py):
+
+* ``LayerBudget.uniform()`` — no rules — routes the pre-existing
+  global-budget path and is therefore bit-for-bit identical to
+  ``budget=None`` in every engine mode.
+* ``resolve_segments``/:meth:`LayerBudget.segments_for` walk the tree
+  with ``tree_flatten_with_path``, whose leaf order equals
+  ``tree_flatten``'s — the same order :func:`flatten_pytree` and the
+  engine's stacked-delta concat use — so segment offsets index the
+  flattened vector directly.
+* Per-user payload bits under a budget equal
+  ``sum_seg [d_seg(b_seg s_seg + 1 - s_seg) + 32]`` exactly (one
+  32-bit header per segment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .mixed_resolution import mixed_resolution_quantize
+
+GROUPS = ("embed", "norm", "matmul")
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetRule:
+    """Budget override for one leaf group.
+
+    Fields left ``None`` fall back to the caller's defaults at
+    resolution time (the sim engine fills them from its quantizer, the
+    dist compressor from ``CompressorConfig``), so one rule set serves
+    both the ``(lambda_, b)`` simulation path and the ``(s_budget,
+    bits)`` static-budget dist path.
+    """
+
+    group: str
+    lambda_: Optional[float] = None   # |x|/||x||_inf threshold (paper eq. 6)
+    b: Optional[int] = None           # grid bits for high-res entries
+    s_budget: Optional[float] = None  # dist static high-res fraction
+
+    def __post_init__(self):
+        if self.group not in GROUPS + ("default",):
+            raise ValueError(
+                f"unknown budget group {self.group!r}; expected one of "
+                f"{GROUPS + ('default',)}")
+        if self.lambda_ is not None and not 0.0 <= float(self.lambda_) <= 1.0:
+            raise ValueError(f"lambda_ must be in [0, 1], got {self.lambda_}")
+        if self.b is not None and int(self.b) < 2:
+            raise ValueError(f"b must be >= 2, got {self.b}")
+        if self.s_budget is not None and not 0.0 < float(self.s_budget) <= 1.0:
+            raise ValueError(
+                f"s_budget must be in (0, 1], got {self.s_budget}")
+
+
+class Segment(NamedTuple):
+    """One contiguous run of same-budget leaves in the flattened vector."""
+
+    start: int
+    size: int
+    lambda_: float
+    b: int
+    group: str
+    s_budget: Optional[float] = None
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.size
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerBudget:
+    """Immutable, hashable per-group budget table.
+
+    Hashable so it can ride on :class:`repro.kernels.WirePath` (itself
+    a frozen spec closed over by jitted steps).  An empty rule table is
+    the *uniform* budget: consumers must treat it exactly like "no
+    budget" and keep their single-segment global path.
+    """
+
+    rules: Tuple[BudgetRule, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(self.rules))
+        seen = set()
+        for r in self.rules:
+            if not isinstance(r, BudgetRule):
+                raise TypeError(f"rules must be BudgetRule, got {type(r)}")
+            if r.group in seen:
+                raise ValueError(f"duplicate rule for group {r.group!r}")
+            seen.add(r.group)
+
+    # ------------------------------------------------------ constructors
+    @classmethod
+    def uniform(cls) -> "LayerBudget":
+        """The identity budget: one global segment, today's exact path."""
+        return cls(rules=())
+
+    @classmethod
+    def by_group(cls, **budgets) -> "LayerBudget":
+        """``LayerBudget.by_group(embed=(0.4, 6), norm=(0.05, 12))`` —
+        values are ``(lambda_, b)`` or ``(lambda_, b, s_budget)`` tuples
+        or ready-made :class:`BudgetRule` s (group taken from the kwarg).
+        """
+        rules = []
+        for group, spec in sorted(budgets.items()):
+            if isinstance(spec, BudgetRule):
+                rules.append(dataclasses.replace(spec, group=group))
+            else:
+                spec = tuple(spec)
+                rules.append(BudgetRule(group, *spec))
+        return cls(rules=tuple(rules))
+
+    # ------------------------------------------------------------ queries
+    @property
+    def is_uniform(self) -> bool:
+        return not self.rules
+
+    def rule_for(self, group: str) -> Optional[BudgetRule]:
+        for r in self.rules:
+            if r.group == group:
+                return r
+        for r in self.rules:
+            if r.group == "default":
+                return r
+        return None
+
+    def segments_for(self, tree, default_lambda: float, default_b: int,
+                     default_s: Optional[float] = None,
+                     skip_leading: int = 0) -> Tuple[Segment, ...]:
+        """Resolve this budget against a concrete params/delta pytree."""
+        return resolve_segments(tree, self, default_lambda, default_b,
+                                default_s=default_s,
+                                skip_leading=skip_leading)
+
+
+def classify_leaf(path, leaf, skip_leading: int = 0) -> str:
+    """Route one leaf to a budget group from its key path + rank.
+
+    Name-based routing first (embedding/unembedding matrices carry
+    vocab-shaped rows regardless of rank), then rank: vectors/scalars
+    are norm-like gains/biases, rank >= 2 are matmul weights.
+    ``skip_leading`` discounts stacked batch axes (the dist stacked
+    path carries a leading replica-group axis on every leaf) so a
+    stacked norm gain still ranks as a vector.
+    """
+    name = jax.tree_util.keystr(path).lower()
+    if any(tok in name for tok in ("embed", "lm_head", "vocab")):
+        return "embed"
+    shape = tuple(getattr(leaf, "shape", ()))[skip_leading:]
+    if len(shape) <= 1:
+        return "norm"
+    return "matmul"
+
+
+def resolve_segments(tree, budget: LayerBudget, default_lambda: float,
+                     default_b: int, default_s: Optional[float] = None,
+                     skip_leading: int = 0) -> Tuple[Segment, ...]:
+    """Partition the flattened vector into contiguous budget segments.
+
+    ``skip_leading`` ignores that many leading axes when sizing leaves
+    (the dist stacked path carries a leading replica-group axis G on
+    every leaf; offsets must index the per-replica flat vector).
+    Adjacent leaves resolving to the same ``(group, lambda_, b,
+    s_budget)`` merge into one segment, so a uniform-in-effect rule
+    table still collapses to few segments.
+    """
+    leaves_with_path, _ = jax.tree_util.tree_flatten_with_path(tree)
+    segments: list = []
+    offset = 0
+    for path, leaf in leaves_with_path:
+        shape = tuple(getattr(leaf, "shape", ()))[skip_leading:]
+        size = 1
+        for s in shape:
+            size *= int(s)
+        group = classify_leaf(path, leaf, skip_leading)
+        rule = budget.rule_for(group)
+        lam = default_lambda if rule is None or rule.lambda_ is None \
+            else float(rule.lambda_)
+        b = default_b if rule is None or rule.b is None else int(rule.b)
+        s_budget = default_s if rule is None or rule.s_budget is None \
+            else float(rule.s_budget)
+        if segments and segments[-1].group == group \
+                and segments[-1].lambda_ == lam and segments[-1].b == b \
+                and segments[-1].s_budget == s_budget:
+            prev = segments[-1]
+            segments[-1] = prev._replace(size=prev.size + size)
+        else:
+            segments.append(Segment(offset, size, lam, b, group, s_budget))
+        offset += size
+    return tuple(segments)
+
+
+def validate_segments(segments, d: int) -> None:
+    """Loud check that segments tile [0, d) contiguously."""
+    offset = 0
+    for seg in segments:
+        if seg.start != offset or seg.size <= 0:
+            raise ValueError(
+                f"segments must tile the flat vector contiguously: segment "
+                f"{seg} at expected offset {offset}")
+        offset += seg.size
+    if offset != d:
+        raise ValueError(
+            f"segments cover {offset} entries but the flat vector has {d}")
+
+
+def segmented_quantize(flat: jax.Array, segments: Tuple[Segment, ...]
+                       ) -> Tuple[jax.Array, jax.Array, dict]:
+    """Dense-plane per-segment mixed-resolution quantize of [U, d] rows.
+
+    Returns ``(recon [U, d], bits [U], aux)`` where ``bits`` is the
+    exact sum of the per-segment payloads (one 32-bit ||.||_inf header
+    per segment) and ``aux["segment_bits"]`` is the [U, n_seg]
+    breakdown the bits-sum identity test pins.
+    """
+    U, d = flat.shape
+    validate_segments(segments, d)
+    recons, seg_bits, dbar = [], [], None
+    for seg in segments:
+        sl = flat[:, seg.start:seg.stop]
+        res = jax.vmap(
+            lambda v, lam=seg.lambda_, b=seg.b:
+            mixed_resolution_quantize(v, lam, b))(sl)
+        recons.append(res.recon)
+        seg_bits.append(res.bits)
+        db = res.aux["dbar"]
+        dbar = db if dbar is None else dbar + db
+    recon = jnp.concatenate(recons, axis=1)
+    segment_bits = jnp.stack(seg_bits, axis=1)           # [U, n_seg]
+    bits = jnp.sum(segment_bits, axis=1)
+    aux = {"s": dbar.astype(jnp.float32) / float(d),
+           "dbar": dbar.astype(jnp.int32),
+           "segment_bits": segment_bits}
+    return recon, bits, aux

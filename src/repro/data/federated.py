@@ -48,16 +48,36 @@ def partition_powerlaw(ds: ImageDataset, K: int, exponent: float = 1.3,
     energy/latency FL-over-CFmMIMO literature), floored at
     ``min_per_user``.  Label distribution stays IID; only |D_j| varies,
     so rho_j = |D_j|/|D| and the per-user computation loads spread."""
+    if len(ds) < K:
+        raise ValueError(
+            f"partition_powerlaw needs >= 1 sample per user: dataset has "
+            f"{len(ds)} samples for K={K} users")
     rng = np.random.default_rng(seed)
     raw = (1.0 + np.arange(K)) ** (-float(exponent))
     sizes = np.maximum((raw / raw.sum() * len(ds)).astype(int),
                        min_per_user)
-    # trim the largest shards until the sizes fit the dataset again
+    # trim the largest shards until the sizes fit the dataset again;
+    # len(ds) >= K guarantees the argmax shard holds >= 2 samples
+    # whenever trimming is still needed, so no shard ever reaches 0
     while sizes.sum() > len(ds):
         sizes[int(np.argmax(sizes))] -= 1
+    assert sizes.min() >= 1, sizes
     idx = rng.permutation(len(ds))
     cuts = np.cumsum(sizes)[:-1]
     return [np.sort(s) for s in np.split(idx[:sizes.sum()], cuts)]
+
+
+def validate_shards(shards: List[np.ndarray]) -> None:
+    """Refuse empty user shards loudly.  An empty shard used to surface
+    as ``take=0`` reshape failures deep inside the engine's first jitted
+    round; every partitioner above guarantees >= 1 sample per user, so
+    hitting this means hand-built shards or a partitioner bug."""
+    for j, s in enumerate(shards):
+        if len(s) == 0:
+            raise ValueError(
+                f"user {j} has an empty data shard (0 of {len(shards)} "
+                "shards' samples); every user must hold >= 1 sample — "
+                "check the partitioner arguments (K vs dataset size)")
 
 
 def user_fractions(shards: List[np.ndarray]) -> np.ndarray:

@@ -69,6 +69,22 @@ def make_dataset(name: str, n_samples: int = 10_000, seed: int = 0
     raise KeyError(f"unknown dataset {name!r}")
 
 
+def make_lm_dataset(n_samples: int = 2_048, seq_len: int = 32,
+                    vocab: int = 512, seed: int = 0) -> ImageDataset:
+    """Next-token-prediction windows over a Markov stream, packaged in
+    the :class:`ImageDataset` container the FL stack already speaks:
+    ``x`` [N, S] int64 token windows, ``y`` [N] the next token after
+    each window, ``n_classes = vocab``.  This is what lets the
+    pytree-generic engine federate the registry transformers through
+    the same sharding/minibatching/aggregation machinery as the paper
+    CNN."""
+    stream = make_token_stream(n_samples + seq_len + 1, vocab, seed=seed)
+    x = np.stack([stream[i:i + seq_len] for i in range(n_samples)])
+    y = stream[seq_len:seq_len + n_samples].copy()
+    return ImageDataset(x=x.astype(np.int64), y=y.astype(np.int64),
+                        n_classes=vocab)
+
+
 def make_token_stream(n_tokens: int, vocab: int, seed: int = 0,
                       order: int = 2) -> np.ndarray:
     """Markov token stream (learnable bigram structure) for LM demos."""

@@ -28,16 +28,18 @@ from .compressor import (CompressorConfig, aggregate_delta,
                          aggregate_flat_manual, aggregate_flat_stacked,
                          budget_k, mixed_recon, payload_bits,
                          signplane_weighted_aggregate)
-from .sharding import (batch_shardings, decode_cache_shape,
-                       decode_shardings, param_shardings, param_specs,
-                       replica_axes, replica_count, train_input_shardings)
+from .sharding import (batch_shardings, budget_group_specs,
+                       decode_cache_shape, decode_shardings,
+                       param_shardings, param_specs, replica_axes,
+                       replica_count, train_input_shardings)
 from .steps import (TrainHParams, build_decode_step, build_prefill_step,
                     build_train_step, microbatch)
 
 __all__ = [
     "CompressorConfig", "TrainHParams", "WirePath", "aggregate_delta",
     "aggregate_flat_manual", "aggregate_flat_stacked", "batch_shardings",
-    "budget_k", "build_decode_step", "build_prefill_step",
+    "budget_group_specs", "budget_k", "build_decode_step",
+    "build_prefill_step",
     "build_train_step", "decode_cache_shape", "decode_shardings",
     "microbatch", "mixed_recon", "param_shardings", "param_specs",
     "payload_bits", "replica_axes", "replica_count", "shard_map",

@@ -60,7 +60,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize.static_budget import wire_bits
-from repro.kernels import WirePath, from_wire_path
+from repro.kernels import WirePath, check_packed_dim, from_wire_path
 from repro.kernels.ops import (mixed_res_encode_anchored,
                                mixed_res_wire_reduce,
                                packed_sign_weighted_sum)
@@ -122,6 +122,28 @@ class CompressorConfig:
                     "the fused wire kernels store codes in <= 16 bits; "
                     f"got bits={self.bits} (use the signplane "
                     "reference plane)")
+        budget = getattr(wp, "effective_budget", None)
+        if budget is not None:
+            if self.kind != "mixed":
+                raise ValueError(
+                    "per-layer budgets re-parameterize the mixed "
+                    f"compressor per segment; kind={self.kind!r} has "
+                    "no (s_budget, bits) to segment")
+            if wp.reduce == "ring":
+                raise ValueError(
+                    "per-layer budgets are not supported on the ring "
+                    "reduce yet (one accumulator chain per segment); "
+                    "use WirePath(reduce='gather')")
+            for rule in budget.rules:
+                b = self.bits if rule.b is None else rule.b
+                if b < 2 or 32 % b != 0:
+                    raise ValueError(
+                        f"budget group {rule.group!r}: bits must divide "
+                        f"32 and be >= 2, got {b}")
+                if wp.plane == "packed" and b > 16:
+                    raise ValueError(
+                        f"budget group {rule.group!r}: the fused wire "
+                        f"kernels store codes in <= 16 bits, got {b}")
 
 
 def budget_k(d: int, s_budget: float) -> int:
@@ -129,11 +151,31 @@ def budget_k(d: int, s_budget: float) -> int:
     return max(1, min(d, math.ceil(s_budget * d)))
 
 
-def payload_bits(d: int, comp: CompressorConfig) -> int:
-    """Exact per-replica wire payload for one d-element shard."""
+def payload_bits(d: int, comp: CompressorConfig,
+                 segments: Optional[Tuple] = None) -> int:
+    """Exact per-replica wire payload for one d-element shard.
+
+    With budget ``segments`` (see :func:`aggregate_delta`) the payload
+    is the exact sum of the per-segment wire payloads — the bits-sum
+    identity of DESIGN.md §13, on the dist side."""
     if comp.kind == "none":
         return 32 * d
+    if segments:
+        return sum(
+            wire_bits(seg.size, budget_k(seg.size, seg.s_budget),
+                      seg.b)
+            for seg in segments)
     return wire_bits(d, budget_k(d, comp.s_budget), comp.bits)
+
+
+def _segment_comp(comp: CompressorConfig, wp: WirePath, seg
+                  ) -> CompressorConfig:
+    """The sub-config one budget segment runs: the segment's
+    (s_budget, bits) over a budget-stripped copy of the wire path, so
+    the per-segment call reuses the global single-segment machinery."""
+    return dataclasses.replace(
+        comp, s_budget=seg.s_budget, bits=seg.b,
+        wire=dataclasses.replace(wp, budget=None), wire_path=None)
 
 
 def _rank_k_values(absx: jnp.ndarray, k: int, exact: bool
@@ -202,16 +244,26 @@ def signplane_weighted_aggregate(flat: jnp.ndarray, recons: jnp.ndarray,
     return low + corr
 
 
-def aggregate_flat_stacked(flat: jnp.ndarray, comp: CompressorConfig
+def aggregate_flat_stacked(flat: jnp.ndarray, comp: CompressorConfig,
+                           segments: Optional[Tuple] = None
                            ) -> jnp.ndarray:
-    """[G, d] per-replica flat deltas -> [d] compressed mean (GSPMD)."""
+    """[G, d] per-replica flat deltas -> [d] compressed mean (GSPMD).
+
+    ``segments``: optional per-layer budget segments tiling [0, d) —
+    each runs this same aggregation with its own (s_budget, bits)."""
     flat = flat.astype(jnp.float32)
     G, d = flat.shape
     if comp.kind == "none":
         return jnp.mean(flat, axis=0)
-    weights = jnp.full((G,), 1.0 / G, jnp.float32)
     wp = comp.resolved_wire()
+    if segments:
+        return jnp.concatenate([
+            aggregate_flat_stacked(flat[:, seg.start:seg.start + seg.size],
+                                   _segment_comp(comp, wp, seg))
+            for seg in segments])
+    weights = jnp.full((G,), 1.0 / G, jnp.float32)
     if wp.plane == "packed":
+        check_packed_dim(d, where="the packed dist exchange")
         # quantize-to-wire without a dense reconstruction: top-k picks
         # the per-replica anchor, the emit pass packs the wire planes,
         # and the decode+mean runs fused from the packed buffers
@@ -264,21 +316,30 @@ def _ring_wire_reduce(wire, comp: CompressorConfig, wp: WirePath,
 
 def aggregate_flat_manual(flat: jnp.ndarray, comp: CompressorConfig,
                           axis_names: Sequence[str],
-                          axis_sizes: Optional[Mapping[str, int]] = None
+                          axis_sizes: Optional[Mapping[str, int]] = None,
+                          segments: Optional[Tuple] = None
                           ) -> jnp.ndarray:
     """[d_local] replica-local flat delta -> [d_local] compressed mean
     over the named (manual) mesh axes.  Call inside shard_map.
 
     ``axis_sizes`` maps axis name -> static group size; required only
     by the ring reduce (``WirePath(reduce="ring")``), which cannot
-    query the axis size inside the manual region."""
+    query the axis size inside the manual region.  ``segments``: see
+    :func:`aggregate_flat_stacked` (validate() rejects ring+budget)."""
     flat = flat.astype(jnp.float32)
     axes = tuple(axis_names)
     if comp.kind == "none":
         return jax.lax.pmean(flat, axes)
     d = flat.shape[0]
     wp = comp.resolved_wire()
+    if segments:
+        return jnp.concatenate([
+            aggregate_flat_manual(flat[seg.start:seg.start + seg.size],
+                                  _segment_comp(comp, wp, seg),
+                                  axes, axis_sizes)
+            for seg in segments])
     if wp.plane == "packed":
+        check_packed_dim(d, where="the packed dist exchange")
         # encode the local shard to wire; the collective then moves
         # exactly the accounted wire payload (uint32 planes + 8-lane
         # header), never a dense [G, d] stack
@@ -347,18 +408,29 @@ def aggregate_delta(deltas: Any, specs: Any, axis_names: Sequence[str],
     if not leaves:
         return deltas, {"wire_bits_per_replica": 0, "d": 0, "k": 0}
     manual = bool(axis_names)
+    # per-layer budget (DESIGN.md §13): resolve the leaf-group segments
+    # against the delta tree itself — stacked leaves carry a leading
+    # replica axis the offsets must skip
+    budget = getattr(comp.resolved_wire(), "effective_budget", None)
+    segments = None
+    if budget is not None:
+        segments = budget.segments_for(
+            deltas, default_lambda=0.0, default_b=comp.bits,
+            default_s=comp.s_budget,
+            skip_leading=0 if manual else 1)
     if manual:
         sizes = [int(leaf.size) for leaf in leaves]
         flat = jnp.concatenate(
             [leaf.reshape(-1).astype(jnp.float32) for leaf in leaves])
-        agg = aggregate_flat_manual(flat, comp, axis_names, axis_sizes)
+        agg = aggregate_flat_manual(flat, comp, axis_names, axis_sizes,
+                                    segments=segments)
     else:
         G = leaves[0].shape[0]
         sizes = [int(leaf.size) // G for leaf in leaves]
         flat = jnp.concatenate(
             [leaf.reshape(G, -1).astype(jnp.float32) for leaf in leaves],
             axis=1)
-        agg = aggregate_flat_stacked(flat, comp)
+        agg = aggregate_flat_stacked(flat, comp, segments=segments)
     d = int(sum(sizes))
     out_leaves = []
     off = 0
@@ -367,8 +439,13 @@ def aggregate_delta(deltas: Any, specs: Any, axis_names: Sequence[str],
         out_leaves.append(agg[off:off + n].reshape(shape))
         off += n
     info = {
-        "wire_bits_per_replica": payload_bits(d, comp),
+        "wire_bits_per_replica": payload_bits(d, comp, segments),
         "d": d,
         "k": budget_k(d, comp.s_budget) if comp.kind == "mixed" else 0,
     }
+    if segments:
+        info["segment_bits"] = tuple(
+            wire_bits(seg.size, budget_k(seg.size, seg.s_budget), seg.b)
+            for seg in segments)
+        info["segments"] = segments
     return jax.tree_util.tree_unflatten(treedef, out_leaves), info

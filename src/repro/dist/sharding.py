@@ -107,6 +107,23 @@ def param_shardings(params: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
             mesh, _leaf_spec(tuple(leaf.shape), mesh, cfg.fsdp)), params)
 
 
+def budget_group_specs(params: Any, cfg: ModelConfig, mesh: Mesh
+                       ) -> Tuple[Any, Any]:
+    """(groups, specs) — the per-layer quantizer routing stacked
+    alongside the sharding table (DESIGN.md §13): ``groups`` mirrors
+    ``params`` with each leaf replaced by its budget group label
+    (embed/norm/matmul, the same classifier LayerBudget resolves
+    against), ``specs`` is :func:`param_specs`.  One walk, one leaf
+    order — so a sharded runtime can hand each parameter leaf both its
+    PartitionSpec and its quantization segment consistently."""
+    from repro.core.quantize.layer_budget import classify_leaf
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    groups = jax.tree_util.tree_unflatten(
+        treedef, [classify_leaf(path, leaf) for path, leaf in leaves])
+    return groups, param_specs(params, cfg, mesh)
+
+
 # ------------------------------------------------------------ batches
 def _batch_dim_spec(size: int, mesh: Mesh) -> Any:
     axes = replica_axes(mesh)

@@ -1,3 +1,4 @@
 from .cnn import cnn_accuracy, cnn_forward, cnn_loss, init_cnn
 from .loop import (FLConfig, FLResult, RoundLog, run_fl,
                    run_fl_sequential)
+from .models import ModelSpec, as_model_spec, model_spec_from_arch

@@ -24,15 +24,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.paper_cnn import PaperCNNConfig
 from repro.core.channel import (ChannelRealization, computation_latency)
 from repro.core.power.base import PowerController
 from repro.core.quantize import Quantizer
 from repro.core.quantize.base import flatten_pytree, unflatten_pytree
-from repro.data.federated import user_fractions
+from repro.data.federated import user_fractions, validate_shards
 from repro.data.synthetic import ImageDataset
 
-from .cnn import cnn_accuracy, cnn_forward, cnn_loss, init_cnn
+from .cnn import cnn_loss
+from .models import ModelSpec, as_model_spec
 
 
 @dataclasses.dataclass
@@ -83,19 +83,22 @@ class FLResult:
         return float(np.mean([l.mean_s for l in self.logs]))
 
 
-def local_adagrad(params, xs, ys, L: int, alpha: float):
-    """L AdaGrad steps on stacked minibatches xs [L,b,H,W,C], ys [L,b].
+def local_adagrad(params, xs, ys, L: int, alpha: float, loss=cnn_loss):
+    """L AdaGrad steps on stacked minibatches xs [L,b,...], ys [L,b].
 
     Pure function: the sequential path jits it per user below; the
     vectorized engine (repro.sim.engine) vmaps it over all K users'
-    stacked minibatches inside one jitted round step.
+    stacked minibatches inside one jitted round step.  ``loss`` is any
+    ``(params, x, y) -> scalar`` callable (static under jit) — the
+    paper CNN's by default, a :class:`ModelSpec`'s for the
+    pytree-generic engine.
     """
     g0 = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
 
     def step(carry, batch):
         w, g = carry
         x, y = batch
-        grads = jax.grad(cnn_loss)(w, x, y)
+        grads = jax.grad(loss)(w, x, y)
         g = jax.tree_util.tree_map(lambda a, d: a + d * d, g, grads)
         w = jax.tree_util.tree_map(
             lambda p, d, a: p - alpha / jnp.sqrt(a + 1e-8) * d,
@@ -106,11 +109,11 @@ def local_adagrad(params, xs, ys, L: int, alpha: float):
     return w
 
 
-_local_adagrad = jax.jit(local_adagrad, static_argnums=(3, 4))
+_local_adagrad = jax.jit(local_adagrad, static_argnums=(3, 4, 5))
 
 
 def run_fl(dataset: ImageDataset, test: ImageDataset,
-           shards: List[np.ndarray], cnn_cfg: PaperCNNConfig,
+           shards: List[np.ndarray], model,
            quantizer: Quantizer, power: Optional[PowerController],
            chan: Optional[ChannelRealization], fl: FLConfig,
            verbose: bool = False, engine: Optional[Any] = None
@@ -129,20 +132,24 @@ def run_fl(dataset: ImageDataset, test: ImageDataset,
     convergence experiments, e.g. Fig. 2 / Table II).  ``engine`` is an
     optional repro.sim.EngineConfig (e.g. with a mesh to shard the
     user axis across devices); the ragged-shard fallback ignores it.
+
+    ``model`` is a :class:`repro.fl.ModelSpec` or (the historical
+    signature) a :class:`PaperCNNConfig`.
     """
+    validate_shards(shards)
     if min(len(s) for s in shards) < fl.batch_size:
-        return run_fl_sequential(dataset, test, shards, cnn_cfg,
+        return run_fl_sequential(dataset, test, shards, model,
                                  quantizer, power, chan, fl,
                                  verbose=verbose)
     from repro.sim.engine import VectorizedFLEngine
 
-    eng = VectorizedFLEngine(dataset, test, shards, cnn_cfg, quantizer,
+    eng = VectorizedFLEngine(dataset, test, shards, model, quantizer,
                              power, chan, fl, engine=engine)
     return eng.run(verbose=verbose)
 
 
 def run_fl_sequential(dataset: ImageDataset, test: ImageDataset,
-                      shards: List[np.ndarray], cnn_cfg: PaperCNNConfig,
+                      shards: List[np.ndarray], model,
                       quantizer: Quantizer, power: Optional[PowerController],
                       chan: Optional[ChannelRealization], fl: FLConfig,
                       verbose: bool = False) -> FLResult:
@@ -152,11 +159,13 @@ def run_fl_sequential(dataset: ImageDataset, test: ImageDataset,
     the dispatch-overhead baseline in benchmarks/sim_engine.py: per
     round it pays one jit dispatch per user for the local AdaGrad run
     plus an eager quantizer call per user."""
+    spec_m = as_model_spec(model)
+    validate_shards(shards)
     K = len(shards)
     rho = user_fractions(shards)
     rng = np.random.default_rng(fl.seed)
     key = jax.random.PRNGKey(fl.seed)
-    params = init_cnn(key, cnn_cfg)
+    params = spec_m.init(key)
     flat0, spec = flatten_pytree(params)
     d = flat0.size
     qstates = [quantizer.init_state(d) for _ in range(K)]
@@ -177,7 +186,8 @@ def run_fl_sequential(dataset: ImageDataset, test: ImageDataset,
                             for _ in range(fl.L)])
             xs = jnp.asarray(dataset.x[sel])
             ys = jnp.asarray(dataset.y[sel])
-            w_j = _local_adagrad(params, xs, ys, fl.L, fl.alpha)
+            w_j = _local_adagrad(params, xs, ys, fl.L, fl.alpha,
+                                 spec_m.loss)
             delta = jax.tree_util.tree_map(lambda a, b: a - b, w_j, params)
             flat, _ = flatten_pytree(delta)
             res, qstates[j] = quantizer(flat, qstates[j])
@@ -200,8 +210,8 @@ def run_fl_sequential(dataset: ImageDataset, test: ImageDataset,
 
         acc = None
         if t % fl.eval_every == 0 or t == fl.T:
-            acc = cnn_accuracy(params, jnp.asarray(test.x),
-                               jnp.asarray(test.y))
+            acc = spec_m.accuracy(params, jnp.asarray(test.x),
+                                  jnp.asarray(test.y))
         logs.append(RoundLog(t, bits, uplink, comp_lat, cum_latency,
                              float(np.mean(s_fracs)), acc))
         rounds_done = t

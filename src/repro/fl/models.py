@@ -1,0 +1,109 @@
+"""ModelSpec — the pytree-generic model contract for the FL stack.
+
+The engine and the reference loop used to hard-code ``init_cnn(key,
+cnn_cfg)`` / ``cnn_loss`` / ``cnn_accuracy``; everything downstream of
+``init`` already operates on flattened pytrees, so federating any model
+is a matter of naming these three callables.  :func:`as_model_spec`
+keeps every existing call site working (a :class:`PaperCNNConfig`
+passed positionally resolves to the paper CNN spec), and
+:func:`model_spec_from_arch` turns any decoder-only config from
+``repro.configs.registry`` into a federable spec — reduced geometry by
+default, so the tiny-transformer/MoE smoke runs on the CPU runner.
+
+Data contract: ``loss(params, x, y) -> scalar`` and
+``accuracy(params, x, y) -> float`` where for LM specs ``x`` is a
+[B, S] int token window and ``y`` the [B] next token after each window
+(:func:`repro.data.synthetic.make_lm_dataset`); the LM loss is
+next-token cross-entropy inside the window (``y`` rides along for the
+accuracy probe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import PaperCNNConfig
+
+from .cnn import cnn_accuracy, cnn_loss, init_cnn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Everything the FL stack needs to federate one model family.
+
+    ``init``: PRNGKey -> params pytree (any leaf dtypes — the flatten
+    path round-trips them); ``loss``: (params, x, y) -> scalar (jit/
+    grad-safe); ``accuracy``: (params, x, y) -> float (host-side eval,
+    may loop over batches eagerly).  ``config`` keeps the source config
+    around for sharding specs / layer-budget resolution / repr.
+    """
+
+    name: str
+    init: Callable[[Any], Any]
+    loss: Callable[[Any, Any, Any], Any]
+    accuracy: Callable[[Any, Any, Any], float]
+    config: Any = None
+
+
+def as_model_spec(model) -> ModelSpec:
+    """Resolve what callers pass in the engine's 4th slot to a ModelSpec.
+
+    Accepts a ready :class:`ModelSpec` or a :class:`PaperCNNConfig`
+    (the historical signature — every pre-existing call site).
+    """
+    if isinstance(model, ModelSpec):
+        return model
+    if isinstance(model, PaperCNNConfig):
+        cfg = model
+        return ModelSpec(
+            name="paper-cnn",
+            init=lambda key: init_cnn(key, cfg),
+            loss=cnn_loss,
+            accuracy=cnn_accuracy,
+            config=cfg)
+    raise TypeError(
+        f"expected a ModelSpec or PaperCNNConfig, got {type(model).__name__}"
+        " — wrap custom models in repro.fl.ModelSpec(init, loss, accuracy)")
+
+
+def model_spec_from_arch(arch_id: str, reduced: bool = True) -> ModelSpec:
+    """Federate a registry transformer: ``repro.configs.registry`` id ->
+    ModelSpec over :mod:`repro.models.transformer`.
+
+    ``reduced=True`` (default) shrinks to the config's CPU-testable
+    geometry (2 layers, d_model 256, vocab 512) — the federated smoke
+    target; ``reduced=False`` federates the full architecture (only
+    sensible with ``repro.dist`` sharding underneath).
+    """
+    from repro.configs.registry import get_config
+    from repro.models.transformer import forward, init_model, loss_fn
+
+    cfg = get_config(arch_id)
+    if reduced:
+        cfg = cfg.reduced()
+    if cfg.is_encoder_decoder or cfg.frontend != "none":
+        raise ValueError(
+            f"model_spec_from_arch supports decoder-only token models; "
+            f"{arch_id!r} has frontend={cfg.frontend!r} "
+            f"is_encoder_decoder={cfg.is_encoder_decoder}")
+
+    def init(key):
+        return init_model(key, cfg)
+
+    def loss(params, x, y):
+        del y   # next-token CE over the window; y feeds accuracy only
+        return loss_fn(params, {"tokens": x}, cfg, remat=False)
+
+    def accuracy(params, x, y, batch: int = 256) -> float:
+        correct, n = 0, x.shape[0]
+        for i in range(0, n, batch):
+            logits, _, _ = forward(params, {"tokens": x[i:i + batch]},
+                                   cfg, remat=False)
+            pred = jnp.argmax(logits[:, -1, :], axis=-1)
+            correct += int(jnp.sum(pred == y[i:i + batch]))
+        return correct / n
+
+    return ModelSpec(name=cfg.name, init=init, loss=loss,
+                     accuracy=accuracy, config=cfg)

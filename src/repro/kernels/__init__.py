@@ -10,13 +10,17 @@ sim/dist/config code never reaches into per-module internals.
 from .ops import (H_DBAR, H_DWQ, H_INF, H_LAM, H_STEP, MixedResWire,
                   mixed_res_encode, mixed_res_encode_anchored,
                   mixed_res_wire_aggregate, mixed_res_wire_reduce,
-                  packed_sign_weighted_sum, sign_pad_len, wire_view)
-from .wire import WirePath, from_aggregation, from_wire_path
+                  packed_sign_weighted_sum, segmented_wire_aggregate,
+                  sign_pad_len, wire_view)
+from .wire import (PACKED_DIM_LIMIT, WirePath, check_packed_dim,
+                   from_aggregation, from_wire_path)
 
 __all__ = [
     "H_DBAR", "H_DWQ", "H_INF", "H_LAM", "H_STEP", "MixedResWire",
-    "WirePath", "from_aggregation", "from_wire_path",
+    "PACKED_DIM_LIMIT", "WirePath", "check_packed_dim",
+    "from_aggregation", "from_wire_path",
     "mixed_res_encode", "mixed_res_encode_anchored",
     "mixed_res_wire_aggregate", "mixed_res_wire_reduce",
-    "packed_sign_weighted_sum", "sign_pad_len", "wire_view",
+    "packed_sign_weighted_sum", "segmented_wire_aggregate",
+    "sign_pad_len", "wire_view",
 ]

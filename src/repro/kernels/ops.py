@@ -21,7 +21,7 @@ from .mixed_res import (H_DBAR, H_DWQ, H_INF, H_LAM, H_STEP,
                         mixed_res_reduce)
 from .quant_pack import sign_dequant_reduce as _sdr
 from .quant_pack import signpack as _signpack
-from .wire import WirePath
+from .wire import WirePath, check_packed_dim
 
 
 def _default_interpret() -> bool:
@@ -167,13 +167,9 @@ def mixed_res_encode(flat: jnp.ndarray, lambda_: float, b: int, *,
     own jitted steps."""
     flat = flat.astype(jnp.float32)
     U, d = flat.shape
-    if d >= 2 ** 24:
-        # both lowerings accumulate the high-res count in f32, which
-        # is exact only to 2**24 — refuse identically on every backend
-        # (the anchored encode has no count and no such limit)
-        raise ValueError(
-            f"mixed_res_encode: d={d} >= 2**24 would make the f32 "
-            "dbar count inexact; shard the delta first")
+    # both lowerings accumulate the high-res count in f32 — refuse
+    # identically on every backend via the shared WirePath-level guard
+    check_packed_dim(d, where="mixed_res_encode")
     x3 = wire_view(flat)
     interp, kern = _resolve_lowering(path, interpret, use_kernel)
     if kern:
@@ -284,6 +280,56 @@ def mixed_res_wire_aggregate(flat: jnp.ndarray, weights: jnp.ndarray,
     bits = jnp.where(inf > 0, bits, float(d) + 32.0)
     aux = {"s": s, "dbar": dbar.astype(jnp.int32), "r": inf - dw_q,
            "dw_q": dw_q, "inf": inf}
+    return agg, bits, aux
+
+
+def segmented_wire_aggregate(flat: jnp.ndarray, weights: jnp.ndarray,
+                             segments, *,
+                             interpret: bool | None = None,
+                             use_kernel: bool | None = None,
+                             path: WirePath | None = None):
+    """Per-layer-budget wire aggregation (DESIGN.md §13): one
+    :func:`mixed_res_wire_aggregate` per contiguous budget segment,
+    each with its own ``(lambda_, b)``, concatenated back into the full
+    [d] aggregate.
+
+    ``segments``: an ordered iterable of objects with ``start``,
+    ``size``, ``lambda_`` and ``b`` attributes tiling [0, d)
+    contiguously (``repro.core.quantize.Segment``; duck-typed so this
+    module stays import-independent of core.quantize — the contiguity
+    check is structural).  Returns ``(agg [d], bits [U], aux)`` where
+    ``bits`` is the EXACT sum of the per-segment payloads (one 32-bit
+    header per segment) and ``aux["segment_bits"]`` [U, n_seg] is the
+    per-segment breakdown that sum is taken over.
+    """
+    U, d = flat.shape
+    segments = tuple(segments)
+    offset = 0
+    for seg in segments:
+        if seg.start != offset or seg.size <= 0:
+            raise ValueError(
+                f"segments must tile the flat vector contiguously: "
+                f"segment {seg} at expected offset {offset}")
+        offset += seg.size
+    if offset != d:
+        raise ValueError(
+            f"segments cover {offset} entries but the flat vector has {d}")
+    aggs, seg_bits, dbar = [], [], None
+    for seg in segments:
+        agg_s, bits_s, aux_s = mixed_res_wire_aggregate(
+            flat[:, seg.start:seg.start + seg.size], weights,
+            seg.lambda_, seg.b, interpret=interpret,
+            use_kernel=use_kernel, path=path)
+        aggs.append(agg_s)
+        seg_bits.append(bits_s)
+        db = aux_s["dbar"]
+        dbar = db if dbar is None else dbar + db
+    agg = jnp.concatenate(aggs)
+    segment_bits = jnp.stack(seg_bits, axis=1)           # [U, n_seg]
+    bits = jnp.sum(segment_bits, axis=1)
+    aux = {"s": dbar.astype(jnp.float32) / float(d),
+           "dbar": dbar.astype(jnp.int32),
+           "segment_bits": segment_bits}
     return agg, bits, aux
 
 

@@ -47,6 +47,25 @@ PLANES = ("dense", "signplane", "packed")
 LOWERINGS = ("auto", "kernel", "reference")
 REDUCES = ("gather", "ring")
 
+# The packed wire format counts high-res entries (dbar) and folds the
+# weighted dequant in f32 accumulators: exact only while every integer
+# involved stays below 2**24 (f32 mantissa).  Shared guard — the sim
+# engine constructor, the fused encoder, and repro.dist's
+# CompressorConfig paths all call it so large-d misuse fails loudly
+# everywhere instead of silently miscounting.
+PACKED_DIM_LIMIT = 2 ** 24
+
+
+def check_packed_dim(d: int, *, where: str = "the packed wire plane"
+                     ) -> None:
+    """Raise unless ``d`` is exactly countable in the f32 wire headers."""
+    if d >= PACKED_DIM_LIMIT:
+        raise ValueError(
+            f"{where} requires d < 2**24 (got d={d}): the dbar count and "
+            "weighted dequant accumulate in f32, which is exact only below "
+            "2**24. Shard the vector (repro.dist), use per-layer budget "
+            "segments under 2**24 each, or the signplane/dense plane.")
+
 # legacy vocabulary -> plane
 _AGGREGATION_TO_PLANE = {"dense": "dense", "signplane": "signplane",
                          "wire": "packed"}
@@ -61,6 +80,12 @@ class WirePath:
     reduce: str = "gather"       # "gather" | "ring" (dist manual mode)
     cohort_size: Optional[int] = None    # sim: stream K in cohorts of C
     clusters: int = 1            # sim: AP-cluster partial aggregates
+    # Optional repro.core.quantize.LayerBudget — per-leaf-group
+    # mixed-resolution budgets (DESIGN.md §13).  Typed loosely to keep
+    # kernels import-independent of core.quantize; validate() duck-checks
+    # the contract.  LayerBudget.uniform() (is_uniform=True) must behave
+    # exactly like None: consumers keep the single-segment global path.
+    budget: Optional[object] = None
 
     def __post_init__(self):
         self.validate()
@@ -88,6 +113,30 @@ class WirePath:
             raise ValueError(
                 "clusters > 1 partially aggregates cohort streams; set "
                 "cohort_size as well")
+        if self.budget is not None and not (
+                hasattr(self.budget, "segments_for")
+                and hasattr(self.budget, "is_uniform")):
+            raise ValueError(
+                "budget must be a repro.core.quantize.LayerBudget "
+                f"(got {type(self.budget).__name__})")
+        if self.budget is not None and not self.budget.is_uniform:
+            if self.plane == "signplane":
+                raise ValueError(
+                    "per-layer budgets are not supported on the signplane "
+                    "plane; use plane='packed' or plane='dense'")
+            if self.streaming or self.clusters > 1:
+                raise ValueError(
+                    "per-layer budgets do not compose with cohort "
+                    "streaming or AP clusters yet; drop cohort_size/"
+                    "clusters or use LayerBudget.uniform()")
+
+    @property
+    def effective_budget(self):
+        """The budget when it changes anything, else None — uniform
+        budgets route the pre-existing global path bit-for-bit."""
+        if self.budget is not None and not self.budget.is_uniform:
+            return self.budget
+        return None
 
     # ------------------------------------------------ lowering resolution
     def use_kernel(self) -> bool:

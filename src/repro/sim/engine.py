@@ -114,22 +114,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.paper_cnn import PaperCNNConfig
 from repro.core.channel import (ChannelRealization, computation_latency,
                                 make_channel)
 from repro.core.power.base import PowerController
 from repro.core.quantize import Quantizer
 from repro.core.quantize.base import flatten_pytree, unflatten_pytree
-from repro.data.federated import user_fractions
+from repro.core.quantize.layer_budget import segmented_quantize
+from repro.data.federated import user_fractions, validate_shards
 from repro.data.synthetic import ImageDataset
 # the mixed-resolution signplane aggregation identity (packed 1-bit
 # reduce + dense correction on the top-k support) has ONE definition,
 # shared with repro.dist's cross-replica aggregation
 from repro.dist.compressor import \
     signplane_weighted_aggregate as _signplane_aggregate
-from repro.kernels import WirePath, from_aggregation
+from repro.kernels import WirePath, check_packed_dim, from_aggregation
 from repro.kernels.ops import (H_DBAR, H_DWQ, H_INF, MixedResWire,
-                               mixed_res_encode, mixed_res_wire_reduce)
+                               mixed_res_encode, mixed_res_wire_reduce,
+                               segmented_wire_aggregate)
 from repro.kernels.ops import mixed_res_wire_aggregate as _wire_aggregate
 from repro import obs as _obs
 
@@ -557,12 +558,16 @@ class VectorizedFLEngine:
     """
 
     def __init__(self, dataset: ImageDataset, test: ImageDataset,
-                 shards: List[np.ndarray], cnn_cfg: PaperCNNConfig,
+                 shards: List[np.ndarray], model,
                  quantizer: Quantizer, power: Optional[PowerController],
                  chan: Optional[ChannelRealization], fl,
                  engine: Optional[EngineConfig] = None):
-        from repro.fl.cnn import init_cnn  # local: repro.fl imports us
+        # ``model``: a repro.fl.ModelSpec or (the historical signature)
+        # a PaperCNNConfig.  Local import: repro.fl imports us.
+        from repro.fl.models import as_model_spec
 
+        self.model_spec = as_model_spec(model)
+        self.cnn_cfg = self.model_spec.config   # legacy attribute
         self.engine_cfg = engine or EngineConfig()
         # one resolved WirePath drives every plane/lowering/streaming
         # decision below; the legacy aggregation string warns here once
@@ -613,10 +618,11 @@ class VectorizedFLEngine:
                 "with cohort streaming; running unsharded", stacklevel=2)
 
         self.dataset, self.test = dataset, test
-        self.shards, self.cnn_cfg = shards, cnn_cfg
+        self.shards = shards
         self.quantizer, self.power, self.chan, self.fl = \
             quantizer, power, chan, fl
         self.K = len(shards)
+        validate_shards(shards)   # empty shard -> clear error, not take=0
         # uniform minibatch size so user batches stack to [K, L, b];
         # identical to the sequential loop whenever every shard holds at
         # least batch_size samples (the benchmarks' regime)
@@ -630,15 +636,15 @@ class VectorizedFLEngine:
                 "back to it in this case)", stacklevel=2)
         self.rho = user_fractions(shards)
 
-        self.params = init_cnn(jax.random.PRNGKey(fl.seed), cnn_cfg)
+        self.params = self.model_spec.init(jax.random.PRNGKey(fl.seed))
         flat0, self.spec = flatten_pytree(self.params)
         self.d = int(flat0.size)
-        if self._plane == "packed" and self.d >= 2 ** 24:
-            # the threshold encode's f32 high-res count is exact only
-            # to 2**24 — fail at construction, not mid-run in the jit
-            raise ValueError(
-                f"the packed wire plane supports d < 2**24 (got d="
-                f"{self.d}); shard the model or use 'signplane'")
+        if self._plane == "packed":
+            # shared guard (repro.kernels.check_packed_dim): the f32
+            # high-res count is exact only to 2**24 — fail at
+            # construction, not mid-run in the jit
+            check_packed_dim(self.d, where="the packed wire plane")
+        self._segments = self._resolve_budget_segments(wp)
         self.qstate = quantizer.init_batched_state(self.K, self.d)
         self.comp_lat = computation_latency(fl.L, fl.dataset_size_for_comp,
                                             self.K)
@@ -677,6 +683,41 @@ class VectorizedFLEngine:
             self._head_stats_jit = jax.jit(self._head_stats)
 
     # ------------------------------------------------------------ build
+    def _resolve_budget_segments(self, wp: WirePath):
+        """Resolve ``WirePath.budget`` against the model's params tree.
+
+        Returns the static segment tuple for a non-uniform budget, or
+        None — a uniform/absent budget keeps the pre-existing global
+        path, which is the bit-for-bit parity contract (DESIGN.md §13).
+        """
+        budget = getattr(wp, "effective_budget", None)
+        if budget is None:
+            return None
+        q = self.quantizer
+        if q.name != "mixed-resolution":
+            raise ValueError(
+                "per-layer budgets re-parameterize the mixed-resolution "
+                f"scheme per segment; quantizer {q.name!r} has no "
+                "(lambda_, b) budget")
+        if not self.engine_cfg.effective_fused:
+            raise ValueError(
+                "per-layer budgets run per-segment quantization inside "
+                "the fused step; configure EngineConfig(fused=True) "
+                "(the exact mode's eager sequential replay is global-"
+                "budget by definition)")
+        if self.engine_cfg.async_active:
+            raise ValueError(
+                "per-layer budgets are not supported in async mode yet; "
+                "use LayerBudget.uniform() or sync rounds")
+        segments = budget.segments_for(self.params, q.lambda_, q.b)
+        if self._plane == "packed":
+            for seg in segments:
+                if seg.b > 16:
+                    raise ValueError(
+                        "the wire kernels store magnitude codes in <= 16 "
+                        f"bits; budget group {seg.group!r} has b={seg.b}")
+        return segments
+
     def _user_shardings(self):
         """(user-axis, replicated) NamedShardings when an engine mesh
         is configured — the K axis of stacked arrays goes over the
@@ -707,14 +748,16 @@ class VectorizedFLEngine:
         from repro.fl.loop import local_adagrad  # local: avoids cycle
 
         fl, U = self.fl, xs.shape[0]
+        loss = self.model_spec.loss
         if self.engine_cfg.local_batching == "vmap":
             local = jax.vmap(
-                lambda x, y: local_adagrad(params, x, y, fl.L, fl.alpha)
+                lambda x, y: local_adagrad(params, x, y, fl.L, fl.alpha,
+                                           loss)
             )(xs, ys)
         else:
             local = jax.lax.map(
                 lambda xy: local_adagrad(params, xy[0], xy[1], fl.L,
-                                         fl.alpha),
+                                         fl.alpha, loss),
                 (xs, ys))
         delta = jax.tree_util.tree_map(lambda w, p: w - p, local, params)
         leaves = jax.tree_util.tree_flatten(delta)[0]
@@ -793,6 +836,7 @@ class VectorizedFLEngine:
         q, spec, K = self.quantizer, self.spec, self.K
         plane, cohort = self._plane, self._cohort
         wp = self.wire_path_spec
+        segments = self._segments   # static per-layer budget (or None)
 
         # per-round straggler/payload stats streamed from INSIDE the
         # compiled step via jax.debug.callback (repro.obs jit tap) —
@@ -831,10 +875,27 @@ class VectorizedFLEngine:
                 # fully fused quantize-to-wire: reductions, packed
                 # planes and the weighted dequant-reduce all happen in
                 # the mixed-res kernel suite; no dense recon, and no
-                # quantizer state (mixed-resolution is stateless)
-                agg, bits, aux = _wire_aggregate(flat, weights,
-                                                 q.lambda_, q.b,
-                                                 path=wp)
+                # quantizer state (mixed-resolution is stateless).
+                # Under a per-layer budget the encode/reduce runs once
+                # per segment with that group's (lambda_, b); bits is
+                # the exact per-segment sum (DESIGN.md §13)
+                if segments is not None:
+                    agg, bits, aux = segmented_wire_aggregate(
+                        flat, weights, segments, path=wp)
+                else:
+                    agg, bits, aux = _wire_aggregate(flat, weights,
+                                                     q.lambda_, q.b,
+                                                     path=wp)
+                params = jax.tree_util.tree_map(
+                    lambda p, u: p + u, params,
+                    unflatten_pytree(agg, spec))
+                tap(bits, aux, active)
+                return params, qstate, bits, aux
+            if segments is not None:
+                # dense plane, per-layer budget: per-segment stateless
+                # mixed-resolution quantize + the einsum aggregation
+                recon, bits, aux = segmented_quantize(flat, segments)
+                agg = jnp.einsum("k,kd->d", weights, recon)
                 params = jax.tree_util.tree_map(
                     lambda p, u: p + u, params,
                     unflatten_pytree(agg, spec))
@@ -1402,16 +1463,16 @@ class VectorizedFLEngine:
                                  ) -> np.ndarray:
         """Test accuracy per replicate [R] (NaN for replicates the
         ``alive`` mask excludes — nobody logs them anymore).
-        cnn_accuracy is a host minibatch loop, so replicates evaluate
-        one at a time — for R = 1 this is the identical call the
-        unreplicated path makes (the bit-for-bit parity contract
+        The spec's accuracy fn is a host minibatch loop, so replicates
+        evaluate one at a time — for R = 1 this is the identical call
+        the unreplicated path makes (the bit-for-bit parity contract
         covers accuracy too)."""
-        from repro.fl.cnn import cnn_accuracy
+        accuracy = self.model_spec.accuracy
         accs = np.full(state.R, np.nan)
         rs = range(state.R) if alive is None else np.flatnonzero(alive)
         for r in rs:
-            accs[r] = cnn_accuracy(self.replicate_params(state, int(r)),
-                                   state.test_x, state.test_y)
+            accs[r] = accuracy(self.replicate_params(state, int(r)),
+                               state.test_x, state.test_y)
         return accs
 
     def solve_uplink_host(self, chan: Optional[ChannelRealization],
@@ -1539,7 +1600,6 @@ class VectorizedFLEngine:
         deadline the server actually waited, not the slowest user), and
         the log rows carry staleness/arrival columns.  ``per_user_s``
         (sync path) feeds the straggler-gap metric."""
-        from repro.fl.cnn import cnn_accuracy
         from repro.fl.loop import RoundLog
 
         t = work.t
@@ -1558,7 +1618,8 @@ class VectorizedFLEngine:
         state.cum_latency += uplink + self.comp_lat
         acc = None
         if self.eval_due(t):
-            acc = cnn_accuracy(state.params, state.test_x, state.test_y)
+            acc = self.model_spec.accuracy(state.params, state.test_x,
+                                           state.test_y)
         state.logs.append(RoundLog(t, work.bits_np, uplink,
                                    self.comp_lat, state.cum_latency,
                                    work.mean_s, acc,

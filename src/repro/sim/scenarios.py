@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs.paper_cnn import CIFAR10, CIFAR100, FASHION, PaperCNNConfig
 from repro.core.channel import CFmMIMOConfig, make_channel
+from repro.core.quantize import LayerBudget
 from repro.data import (make_image_classification, partition_dirichlet,
                         partition_iid, partition_powerlaw)
 
@@ -45,6 +46,15 @@ _DATASETS: Dict[str, Tuple[PaperCNNConfig, int]] = {
 class Scenario:
     name: str
     description: str
+    # model axis: "paper-cnn" (the default — scn.dataset picks the CNN
+    # geometry) or any repro.configs.registry arch id ("qwen3-14b",
+    # "qwen2-moe", ...) federated at reduced geometry over the
+    # synthetic next-token task (repro.fl.model_spec_from_arch)
+    model: str = "paper-cnn"
+    seq_len: int = 32                    # LM window length (model != cnn)
+    # per-layer mixed-resolution budget (repro.core.quantize.LayerBudget)
+    # threaded onto WirePath.budget; None/uniform keeps the global path
+    budget: Optional[object] = None
     # data
     dataset: str = "cifar10-syn"
     n_train: int = 8000
@@ -123,6 +133,8 @@ class Scenario:
         if self.cohort_size is not None or self.clusters > 1:
             wp = dataclasses.replace(wp, cohort_size=self.cohort_size,
                                      clusters=self.clusters)
+        if self.budget is not None:
+            wp = dataclasses.replace(wp, budget=self.budget)
         return EngineConfig(wire=wp,
                             fused=self.fused,
                             participation=self.participation,
@@ -144,18 +156,40 @@ class Scenario:
 
 
 def build_problem(scn: Scenario):
-    """(train, test, shards, cnn_cfg, chan) for a scenario."""
-    if scn.dataset not in _DATASETS:
-        raise KeyError(f"unknown dataset {scn.dataset!r}; "
-                       f"have {list(_DATASETS)}")
-    cnn_cfg, n_classes = _DATASETS[scn.dataset]
-    full = make_image_classification(
-        n_samples=scn.n_train + scn.n_test, hw=cnn_cfg.input_hw,
-        channels=cnn_cfg.channels, n_classes=n_classes, seed=scn.seed)
-    train = dataclasses.replace(full, x=full.x[:scn.n_train],
-                                y=full.y[:scn.n_train])
-    test = dataclasses.replace(full, x=full.x[scn.n_train:],
-                               y=full.y[scn.n_train:])
+    """(train, test, shards, model, chan) for a scenario.
+
+    ``model`` is what the engine's 4th argument accepts: the scenario's
+    :class:`PaperCNNConfig` for ``model="paper-cnn"`` (the historical
+    tuple, so pre-existing unpackers keep working) or a
+    :class:`repro.fl.ModelSpec` for a registry arch id, paired with the
+    synthetic next-token dataset (:func:`make_lm_dataset`).
+    """
+    if scn.model != "paper-cnn":
+        from repro.data.synthetic import make_lm_dataset
+        from repro.fl.models import model_spec_from_arch
+
+        spec = model_spec_from_arch(scn.model)
+        full = make_lm_dataset(
+            n_samples=scn.n_train + scn.n_test, seq_len=scn.seq_len,
+            vocab=spec.config.vocab_size, seed=scn.seed)
+        train = dataclasses.replace(full, x=full.x[:scn.n_train],
+                                    y=full.y[:scn.n_train])
+        test = dataclasses.replace(full, x=full.x[scn.n_train:],
+                                   y=full.y[scn.n_train:])
+        model = spec
+    else:
+        if scn.dataset not in _DATASETS:
+            raise KeyError(f"unknown dataset {scn.dataset!r}; "
+                           f"have {list(_DATASETS)}")
+        cnn_cfg, n_classes = _DATASETS[scn.dataset]
+        full = make_image_classification(
+            n_samples=scn.n_train + scn.n_test, hw=cnn_cfg.input_hw,
+            channels=cnn_cfg.channels, n_classes=n_classes, seed=scn.seed)
+        train = dataclasses.replace(full, x=full.x[:scn.n_train],
+                                    y=full.y[:scn.n_train])
+        test = dataclasses.replace(full, x=full.x[scn.n_train:],
+                                   y=full.y[scn.n_train:])
+        model = cnn_cfg
 
     if scn.partition == "iid":
         shards = partition_iid(train, scn.K, seed=scn.seed)
@@ -173,7 +207,7 @@ def build_problem(scn: Scenario):
     if scn.M is not None:
         chan = make_channel(CFmMIMOConfig(M=scn.M, N=scn.N, K=scn.K),
                             seed=scn.seed)
-    return train, test, shards, cnn_cfg, chan
+    return train, test, shards, model, chan
 
 
 # ----------------------------------------------------------- registry
@@ -331,6 +365,24 @@ register_scenario(Scenario(
     K=20, T=40, async_mode=True, deadline_quantile=0.5,
     staleness_alpha=1.0, max_staleness=2, participation=0.7,
     partition="dirichlet"))
+
+register_scenario(Scenario(
+    name="transformer-fused",
+    description="federate the reduced qwen3-14b transformer (2 layers, "
+                "d_model 256, vocab 512, ~1.6M params) over the "
+                "synthetic next-token task on the fused packed wire "
+                "path — the pytree-generic engine's smoke point",
+    model="qwen3-14b", M=None, K=4, T=2, L=1, batch_size=8,
+    n_train=256, n_test=64, aggregation="wire", eval_every=2))
+
+register_scenario(Scenario(
+    name="layer-budget-wire",
+    description="paper default under a per-layer budget: norm-like "
+                "leaves keep a fine grid (b=12, lambda 0.1), matmul "
+                "leaves a coarse one (b=6, lambda 0.3); payload bits "
+                "are the exact per-segment sum (DESIGN.md section 13)",
+    M=None, K=20, T=40, aggregation="wire",
+    budget=LayerBudget.by_group(norm=(0.1, 12), matmul=(0.3, 6))))
 
 register_scenario(Scenario(
     name="async-sync-reduction",

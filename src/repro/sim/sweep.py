@@ -91,7 +91,7 @@ def _make_engine(scn: Scenario, problem, quantizer: QuantSpec,
                  power: PowerSpec, mesh=None) -> VectorizedFLEngine:
     from repro.fl.loop import FLConfig
 
-    train, test, shards, cnn_cfg, chan = problem
+    train, test, shards, model, chan = problem
     q = _make_quant(quantizer)
     pc = _make_power(power)
     fl = FLConfig(L=scn.L, T=scn.T, batch_size=scn.batch_size,
@@ -100,7 +100,7 @@ def _make_engine(scn: Scenario, problem, quantizer: QuantSpec,
     ecfg = scn.engine_config()
     if mesh is not None:
         ecfg = dataclasses.replace(ecfg, mesh=mesh)
-    return VectorizedFLEngine(train, test, shards, cnn_cfg, q,
+    return VectorizedFLEngine(train, test, shards, model, q,
                               pc if chan is not None else None, chan,
                               fl, engine=ecfg)
 

@@ -1,0 +1,354 @@
+"""Per-layer budget (DESIGN.md §13) + the flatten/shard bugfix battery.
+
+Pins the PR's contracts: mixed-dtype pytrees round-trip through
+flatten/unflatten; LayerBudget segment offsets index the SAME flat
+order the engine concatenates; LayerBudget.uniform() is bit-for-bit
+the global-budget path; per-user payload bits equal the sum of the
+per-segment bits exactly; empty shards and oversized packed planes
+fail loudly everywhere.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import PaperCNNConfig
+from repro.core.quantize import (LayerBudget, MixedResolutionQuantizer,
+                                 mixed_resolution_quantize,
+                                 resolve_segments, segmented_quantize,
+                                 validate_segments)
+from repro.core.quantize.base import flatten_pytree, unflatten_pytree
+from repro.core.quantize.layer_budget import BudgetRule, classify_leaf
+from repro.data import make_image_classification, partition_iid
+from repro.data.federated import partition_powerlaw, validate_shards
+from repro.fl import FLConfig, run_fl
+from repro.kernels import (PACKED_DIM_LIMIT, WirePath, check_packed_dim,
+                           segmented_wire_aggregate)
+from repro.kernels.ops import mixed_res_encode
+from repro.sim import EngineConfig, VectorizedFLEngine
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ------------------------------------------------ satellite 1: dtypes
+def test_flatten_pytree_mixed_dtype_roundtrip():
+    tree = {"w": jnp.ones((3, 4), jnp.bfloat16),
+            "g": jnp.arange(5, dtype=jnp.float16),
+            "b": jnp.linspace(0, 1, 7, dtype=jnp.float32)}
+    flat, spec = flatten_pytree(tree)
+    assert flat.dtype == jnp.float32
+    back = unflatten_pytree(flat, spec)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype, k
+        np.testing.assert_array_equal(
+            np.asarray(back[k], np.float32), np.asarray(tree[k], np.float32))
+
+
+def test_unflatten_pytree_legacy_3tuple_spec():
+    tree = {"a": jnp.ones((2, 2), jnp.bfloat16)}
+    flat, spec = flatten_pytree(tree)
+    legacy = spec[:3]                      # pre-dtype stored spec
+    back = unflatten_pytree(flat, legacy)
+    assert back["a"].dtype == flat.dtype   # old behaviour preserved
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.ones((2, 2)))
+
+
+def test_flatten_leaf_order_matches_tree_flatten():
+    """Segment offsets index flatten_pytree's vector: the with-path
+    walk (resolve_segments) and the plain flatten must agree on leaf
+    order, including nesting."""
+    tree = {"z": {"inner": jnp.full((2, 3), 2.0)},
+            "a": jnp.full((4,), 1.0),
+            "m": [jnp.full((2, 2), 3.0), jnp.full((3,), 4.0)]}
+    flat, _ = flatten_pytree(tree)
+    segs = resolve_segments(tree, LayerBudget.uniform(), 0.2, 10)
+    validate_segments(segs, int(flat.size))
+    leaves_wp, _ = jax.tree_util.tree_flatten_with_path(tree)
+    plain = jax.tree_util.tree_flatten(tree)[0]
+    for (path, leaf), leaf2 in zip(leaves_wp, plain):
+        np.testing.assert_array_equal(np.asarray(leaf), np.asarray(leaf2))
+    # offsets really slice the right leaves: reconstruct first leaf
+    np.testing.assert_array_equal(np.asarray(flat[:4]), np.full((4,), 1.0))
+    # and the engine's stacked-delta concat idiom (tree_flatten +
+    # reshape(U, -1) + concat) lays out each row exactly like
+    # flatten_pytree — the order the budget segments index
+    U = 2
+    stacked = jax.tree_util.tree_map(
+        lambda l: jnp.stack([l, 2.0 * l]), tree)
+    rows = jnp.concatenate(
+        [jnp.reshape(l, (U, -1)).astype(jnp.float32)
+         for l in jax.tree_util.tree_leaves(stacked)], axis=1)
+    np.testing.assert_array_equal(np.asarray(rows[0]), np.asarray(flat))
+    np.testing.assert_array_equal(np.asarray(rows[1]),
+                                  2.0 * np.asarray(flat))
+
+
+# ------------------------------------------------ LayerBudget surface
+def test_layer_budget_api_validation():
+    with pytest.raises(ValueError, match="duplicate"):
+        LayerBudget(rules=(BudgetRule("norm"), BudgetRule("norm")))
+    with pytest.raises(ValueError, match="unknown budget group"):
+        BudgetRule("attention")
+    with pytest.raises(ValueError, match="lambda_"):
+        BudgetRule("norm", lambda_=1.5)
+    with pytest.raises(ValueError, match="b must be"):
+        BudgetRule("norm", b=1)
+    assert LayerBudget.uniform().is_uniform
+    lb = LayerBudget.by_group(norm=(0.1, 12), default=(0.3, 6))
+    assert not lb.is_uniform
+    assert lb.rule_for("norm").b == 12
+    assert lb.rule_for("matmul").b == 6          # default fallback
+    assert hash(lb) == hash(LayerBudget.by_group(
+        norm=(0.1, 12), default=(0.3, 6)))       # hashable for WirePath
+
+
+def test_classify_leaf_groups():
+    tree = {"embed_tokens": jnp.ones((8, 4)), "ln": jnp.ones((4,)),
+            "w": jnp.ones((4, 4))}
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    got = {jax.tree_util.keystr(p).strip("[]'\""): classify_leaf(p, l)
+           for p, l in leaves}
+    assert got == {"embed_tokens": "embed", "ln": "norm", "w": "matmul"}
+    # stacked mode: a leading replica axis must not promote a norm gain
+    (p, l) = jax.tree_util.tree_flatten_with_path(
+        {"ln": jnp.ones((4, 16))})[0][0]
+    assert classify_leaf(p, l) == "matmul"
+    assert classify_leaf(p, l, skip_leading=1) == "norm"
+
+
+def test_wirepath_budget_validation():
+    lb = LayerBudget.by_group(norm=(0.1, 12))
+    WirePath(plane="packed", budget=lb).validate()
+    WirePath(plane="signplane", budget=LayerBudget.uniform()).validate()
+    with pytest.raises(ValueError):
+        WirePath(plane="packed", budget=object()).validate()
+    with pytest.raises(ValueError, match="signplane"):
+        WirePath(plane="signplane", budget=lb).validate()
+    with pytest.raises(ValueError, match="cohort|stream"):
+        WirePath(plane="packed", cohort_size=2, budget=lb).validate()
+    assert WirePath(plane="packed", budget=lb).effective_budget is lb
+    assert WirePath(plane="packed",
+                    budget=LayerBudget.uniform()).effective_budget is None
+    assert WirePath(plane="packed").effective_budget is None
+
+
+# ------------------------------------- bits-sum identity + references
+def _toy_segments_and_flat(U=3, seed=0):
+    tree = {"embed": jnp.ones((6, 8)), "ln": jnp.ones((8,)),
+            "w": jnp.ones((8, 8))}
+    lb = LayerBudget.by_group(embed=(0.4, 4), norm=(0.05, 12),
+                              matmul=(0.2, 8))
+    segs = lb.segments_for(tree, 0.2, 10)
+    d = sum(s.size for s in segs)
+    flat = jax.random.normal(jax.random.PRNGKey(seed), (U, d))
+    return segs, flat
+
+
+def test_segmented_bits_sum_identity():
+    """Per-user payload bits under a budget == exact sum of per-segment
+    payloads, and each segment's payload equals the eager global
+    quantizer run on that slice alone."""
+    segs, flat = _toy_segments_and_flat()
+    recon, bits, aux = segmented_quantize(flat, segs)
+    np.testing.assert_array_equal(np.asarray(bits),
+                                  np.asarray(aux["segment_bits"]).sum(1))
+    for j, seg in enumerate(segs):
+        for u in range(flat.shape[0]):
+            ref = mixed_resolution_quantize(
+                flat[u, seg.start:seg.stop], seg.lambda_, seg.b)
+            assert float(ref.bits) == float(aux["segment_bits"][u, j])
+            np.testing.assert_array_equal(
+                np.asarray(ref.recon),
+                np.asarray(recon[u, seg.start:seg.stop]))
+
+
+def test_segmented_wire_matches_dense_segments():
+    """The packed-plane segmented aggregate reproduces the dense
+    per-segment quantize + weighted mean (same contract the global
+    wire kernels pin against mixed_resolution_quantize)."""
+    segs, flat = _toy_segments_and_flat(U=4, seed=1)
+    w = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+    agg, bits, aux = segmented_wire_aggregate(flat, w, segs)
+    recon, bits_d, aux_d = segmented_quantize(flat, segs)
+    ref = jnp.einsum("k,kd->d", w, recon)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(bits_d))
+    np.testing.assert_array_equal(np.asarray(aux["segment_bits"]),
+                                  np.asarray(aux_d["segment_bits"]))
+
+
+# --------------------------------------------- engine parity contract
+@pytest.fixture(scope="module")
+def cnn_problem():
+    full = make_image_classification(n_samples=160, hw=8, n_classes=2,
+                                     noise=0.25, seed=0)
+    train = dataclasses.replace(full, x=full.x[:128], y=full.y[:128])
+    test = dataclasses.replace(full, x=full.x[128:], y=full.y[128:])
+    cfg = PaperCNNConfig(input_hw=8, n_classes=2, channels=3,
+                         conv_filters=4, dense_units=16)
+    shards = partition_iid(train, 4)
+    fl = FLConfig(L=1, T=2, batch_size=16, alpha=0.02, eval_every=1,
+                  seed=0)
+    return train, test, shards, cfg, fl
+
+
+def _run(problem, wire):
+    train, test, shards, cfg, fl = problem
+    q = MixedResolutionQuantizer(lambda_=0.2, b=10)
+    eng = VectorizedFLEngine(
+        train, test, shards, cfg, q, None, None, fl,
+        engine=EngineConfig(wire=wire, fused=True))
+    return eng.run()
+
+
+@pytest.mark.parametrize("plane", ["packed", "dense"])
+def test_uniform_budget_bit_for_bit(cnn_problem, plane):
+    """LayerBudget.uniform() must reproduce budget=None exactly —
+    same compiled graph, same bits, same params."""
+    r0 = _run(cnn_problem, WirePath(plane=plane))
+    r1 = _run(cnn_problem,
+              WirePath(plane=plane, budget=LayerBudget.uniform()))
+    assert len(r0.logs) == len(r1.logs)
+    for a, b in zip(r0.logs, r1.logs):
+        np.testing.assert_array_equal(a.bits_per_user, b.bits_per_user)
+        assert a.test_acc == b.test_acc
+    for x, y in zip(jax.tree_util.tree_leaves(r0.params),
+                    jax.tree_util.tree_leaves(r1.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("plane", ["packed", "dense"])
+def test_engine_budget_bits_sum(cnn_problem, plane):
+    """A non-uniform budget runs end-to-end and its logged per-user
+    bits equal the static per-segment payload sum."""
+    train, test, shards, cfg, fl = cnn_problem
+    lb = LayerBudget.by_group(norm=(0.05, 12), matmul=(0.3, 6))
+    q = MixedResolutionQuantizer(lambda_=0.2, b=10)
+    eng = VectorizedFLEngine(
+        train, test, shards, cfg, q, None, None, fl,
+        engine=EngineConfig(wire=WirePath(plane=plane, budget=lb),
+                            fused=True))
+    assert eng._segments is not None
+    validate_segments(eng._segments, eng.d)
+    res = eng.run()
+    assert np.isfinite(np.asarray(res.logs[-1].bits_per_user)).all()
+    # budgets change the payload vs the global run
+    r0 = _run(cnn_problem, WirePath(plane=plane))
+    assert not np.array_equal(np.asarray(res.logs[0].bits_per_user),
+                              np.asarray(r0.logs[0].bits_per_user))
+
+
+def test_engine_budget_mode_restrictions(cnn_problem):
+    train, test, shards, cfg, fl = cnn_problem
+    lb = LayerBudget.by_group(norm=(0.05, 12))
+    from repro.core.quantize import ClassicQuantizer
+    with pytest.raises(ValueError, match="mixed-resolution"):
+        VectorizedFLEngine(
+            train, test, shards, cfg, ClassicQuantizer(), None, None, fl,
+            engine=EngineConfig(wire=WirePath(plane="dense", budget=lb),
+                                fused=True))
+    with pytest.raises(ValueError, match="fused"):
+        VectorizedFLEngine(
+            train, test, shards, cfg,
+            MixedResolutionQuantizer(lambda_=0.2, b=10), None, None, fl,
+            engine=EngineConfig(wire=WirePath(plane="dense", budget=lb),
+                                fused=False))
+
+
+# ------------------------------------- satellite 2: shard guarantees
+def test_validate_shards_rejects_empty():
+    ds = make_image_classification(n_samples=16, hw=8, n_classes=2, seed=0)
+    shards = partition_iid(ds, 4)
+    validate_shards(shards)
+    shards[1] = np.array([], dtype=np.int64)
+    with pytest.raises(ValueError, match="empty data shard"):
+        validate_shards(shards)
+
+
+def test_run_fl_rejects_empty_shard():
+    full = make_image_classification(n_samples=40, hw=8, n_classes=2,
+                                     seed=0)
+    train = dataclasses.replace(full, x=full.x[:32], y=full.y[:32])
+    test = dataclasses.replace(full, x=full.x[32:], y=full.y[32:])
+    cfg = PaperCNNConfig(input_hw=8, n_classes=2, channels=3,
+                         conv_filters=4, dense_units=8)
+    shards = partition_iid(train, 4)
+    shards[2] = np.array([], dtype=np.int64)
+    fl = FLConfig(L=1, T=1, batch_size=4, seed=0)
+    with pytest.raises(ValueError, match="empty data shard"):
+        run_fl(train, test, shards, cfg,
+               MixedResolutionQuantizer(lambda_=0.2, b=10), None, None, fl)
+
+
+def test_partition_powerlaw_min_one_sample():
+    ds = make_image_classification(n_samples=20, hw=8, n_classes=2, seed=0)
+    for seed in range(5):
+        shards = partition_powerlaw(ds, K=10, exponent=2.5, seed=seed)
+        assert min(len(s) for s in shards) >= 1
+        validate_shards(shards)
+    with pytest.raises(ValueError, match=">= 1 sample per user"):
+        partition_powerlaw(ds, K=40, exponent=1.5, seed=0)
+
+
+# --------------------------------------- satellite 3: 2**24 guard
+def test_check_packed_dim_guard():
+    check_packed_dim(PACKED_DIM_LIMIT - 1)
+    with pytest.raises(ValueError, match="2\\*\\*24|16777216"):
+        check_packed_dim(PACKED_DIM_LIMIT)
+    # encoder path fails at trace time — eval_shape never allocates
+    big = jax.ShapeDtypeStruct((2, PACKED_DIM_LIMIT), jnp.float32)
+    with pytest.raises(ValueError, match="mixed_res_encode"):
+        jax.eval_shape(lambda x: mixed_res_encode(x, 0.2, 10), big)
+
+
+def test_dist_packed_dim_guard():
+    from repro.dist import CompressorConfig, aggregate_flat_stacked
+    comp = CompressorConfig(kind="mixed", s_budget=0.01, bits=8,
+                            wire=WirePath(plane="packed"))
+    big = jax.ShapeDtypeStruct((2, PACKED_DIM_LIMIT), jnp.float32)
+    with pytest.raises(ValueError, match="packed dist exchange"):
+        jax.eval_shape(lambda x: aggregate_flat_stacked(x, comp), big)
+
+
+# --------------------------------------------------- dist budget path
+def test_dist_budget_segments_and_parity():
+    from repro.dist import CompressorConfig, aggregate_delta
+    deltas = {"ln": jax.random.normal(jax.random.PRNGKey(0), (4, 16)),
+              "w": jax.random.normal(jax.random.PRNGKey(1), (4, 8, 8))}
+    lb = LayerBudget.by_group(norm=(0.0, 16, 0.5), matmul=(0.0, 8))
+    comp = CompressorConfig(kind="mixed", s_budget=0.25, bits=8,
+                            wire=WirePath(plane="packed", budget=lb))
+    agg, info = aggregate_delta(deltas, None, (), comp)
+    assert len(info["segments"]) == 2
+    assert info["segments"][0].group == "norm"       # stacked-rank fix
+    assert sum(info["segment_bits"]) == info["wire_bits_per_replica"]
+    # uniform budget == no budget, bit for bit
+    aggU, infoU = aggregate_delta(
+        deltas, None, (), dataclasses.replace(
+            comp, wire=WirePath(plane="packed",
+                                budget=LayerBudget.uniform())))
+    agg0, info0 = aggregate_delta(
+        deltas, None, (), dataclasses.replace(
+            comp, wire=WirePath(plane="packed")))
+    assert infoU["wire_bits_per_replica"] == info0["wire_bits_per_replica"]
+    for a, b in zip(jax.tree_util.tree_leaves(aggU),
+                    jax.tree_util.tree_leaves(agg0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dist_budget_validation():
+    from repro.dist import CompressorConfig
+    lb12 = LayerBudget.by_group(norm=(0.0, 12))
+    with pytest.raises(ValueError, match="divide"):
+        CompressorConfig(kind="mixed", s_budget=0.25, bits=8,
+                         wire=WirePath(plane="packed",
+                                       budget=lb12)).validate()
+    with pytest.raises(ValueError, match="ring"):
+        CompressorConfig(
+            kind="mixed", s_budget=0.25, bits=8,
+            wire=WirePath(plane="packed", reduce="ring",
+                          budget=LayerBudget.by_group(
+                              norm=(0.0, 16)))).validate()

@@ -1,0 +1,178 @@
+"""ModelSpec battery: the pytree-generic engine contract.
+
+The engine's 4th slot accepts any ModelSpec; these tests pin the
+PaperCNNConfig back-compat shim, federate the reduced registry
+transformer end-to-end (run_fl and the fused engine, with and without
+a per-layer budget), and check that non-f32 leaf dtypes survive a
+round (the flatten/unflatten dtype fix this PR rides on).
+
+The heavier run_grid smoke is gated behind RUN_MODEL_SUITE=1 (the CI
+``models`` suite); everything else rides tier-1.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_cnn import PaperCNNConfig
+from repro.core.quantize import LayerBudget, MixedResolutionQuantizer
+from repro.data.federated import partition_iid
+from repro.data.synthetic import make_lm_dataset
+from repro.fl import (FLConfig, ModelSpec, as_model_spec,
+                      model_spec_from_arch, run_fl)
+from repro.kernels import WirePath
+from repro.sim import EngineConfig, VectorizedFLEngine
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ------------------------------------------------------- spec resolution
+def test_as_model_spec_cnn_shim():
+    cfg = PaperCNNConfig(input_hw=8, n_classes=2, channels=3,
+                         conv_filters=4, dense_units=8)
+    spec = as_model_spec(cfg)
+    assert spec.name == "paper-cnn" and spec.config is cfg
+    assert as_model_spec(spec) is spec            # idempotent
+    params = spec.init(jax.random.PRNGKey(0))
+    x = jnp.zeros((2, 8, 8, 3)); y = jnp.zeros((2,), jnp.int32)
+    assert np.isfinite(float(spec.loss(params, x, y)))
+    with pytest.raises(TypeError, match="ModelSpec"):
+        as_model_spec({"not": "a model"})
+
+
+def test_model_spec_from_arch_rejects_non_token_models():
+    with pytest.raises(ValueError, match="decoder-only"):
+        model_spec_from_arch("whisper-base")
+
+
+@pytest.fixture(scope="module")
+def lm_spec():
+    return model_spec_from_arch("qwen3-14b")
+
+
+@pytest.fixture(scope="module")
+def lm_problem(lm_spec):
+    full = make_lm_dataset(n_samples=48, seq_len=8,
+                           vocab=lm_spec.config.vocab_size, seed=0)
+    train = dataclasses.replace(full, x=full.x[:32], y=full.y[:32])
+    test = dataclasses.replace(full, x=full.x[32:], y=full.y[32:])
+    return train, test
+
+
+def test_make_lm_dataset_shapes(lm_spec):
+    ds = make_lm_dataset(n_samples=10, seq_len=8, vocab=32, seed=1)
+    assert ds.x.shape == (10, 8) and ds.y.shape == (10,)
+    assert ds.n_classes == 32
+    assert ds.x.dtype.kind == "i" and int(ds.x.max()) < 32
+    # windows really are shifted views of one stream
+    np.testing.assert_array_equal(ds.x[1, :-1], ds.x[0, 1:])
+
+
+# ------------------------------------------------- federated transformer
+def test_transformer_run_fl_smoke(lm_spec, lm_problem):
+    """ISSUE acceptance: the reduced registry transformer completes a
+    federated run through run_fl on CPU."""
+    train, test = lm_problem
+    shards = partition_iid(train, 2)
+    fl = FLConfig(L=1, T=1, batch_size=8, alpha=0.01, eval_every=1,
+                  seed=0)
+    res = run_fl(train, test, shards, lm_spec,
+                 MixedResolutionQuantizer(lambda_=0.2, b=10),
+                 None, None, fl)
+    assert len(res.logs) == 1
+    assert np.isfinite(np.asarray(res.logs[0].bits_per_user)).all()
+    assert 0.0 <= res.logs[0].test_acc <= 1.0
+    # params keep the transformer treedef
+    assert jax.tree_util.tree_structure(res.params) == \
+        jax.tree_util.tree_structure(lm_spec.init(jax.random.PRNGKey(0)))
+
+
+def test_transformer_engine_with_layer_budget(lm_spec, lm_problem):
+    """Per-layer budgets resolve against the transformer tree: embed /
+    norm / matmul groups all appear and the budgeted fused round runs."""
+    train, test = lm_problem
+    shards = partition_iid(train, 2)
+    fl = FLConfig(L=1, T=1, batch_size=8, alpha=0.01, eval_every=1,
+                  seed=0)
+    lb = LayerBudget.by_group(embed=(0.4, 4), norm=(0.05, 12),
+                              matmul=(0.2, 8))
+    eng = VectorizedFLEngine(
+        train, test, shards, lm_spec,
+        MixedResolutionQuantizer(lambda_=0.2, b=10), None, None, fl,
+        engine=EngineConfig(wire=WirePath(plane="dense", budget=lb),
+                            fused=True))
+    groups = {seg.group for seg in eng._segments}
+    assert groups == {"embed", "norm", "matmul"}
+    assert sum(seg.size for seg in eng._segments) == eng.d
+    res = eng.run()
+    np.testing.assert_array_equal(
+        np.asarray(res.logs[0].bits_per_user) > 0, True)
+
+
+# ------------------------------------------------------- dtype survival
+def test_custom_spec_bf16_leaves_survive_round():
+    """A ModelSpec with bf16 leaves keeps them bf16 after the engine's
+    flatten -> aggregate -> unflatten update (satellite 1 end-to-end)."""
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w": jax.random.normal(k1, (4, 2), jnp.bfloat16),
+                "b": jnp.zeros((2,), jnp.float32),
+                "g": jax.random.normal(k2, (4,), jnp.float16)}
+
+    def loss(params, x, y):
+        logits = x @ params["w"].astype(jnp.float32) + params["b"]
+        logits = logits * jnp.mean(params["g"].astype(jnp.float32))
+        oh = jax.nn.one_hot(y, 2)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * oh, -1))
+
+    def accuracy(params, x, y):
+        logits = x @ params["w"].astype(jnp.float32) + params["b"]
+        return float(jnp.mean(jnp.argmax(logits, -1) == y))
+
+    spec = ModelSpec(name="toy-bf16", init=init, loss=loss,
+                     accuracy=accuracy)
+    rng = np.random.default_rng(0)
+    from repro.data.synthetic import ImageDataset
+    x = rng.standard_normal((32, 4)).astype(np.float32)
+    y = (x.sum(-1) > 0).astype(np.int64)
+    train = ImageDataset(x=x[:24], y=y[:24], n_classes=2)
+    test = ImageDataset(x=x[24:], y=y[24:], n_classes=2)
+    shards = partition_iid(train, 2)
+    fl = FLConfig(L=1, T=2, batch_size=8, alpha=0.05, eval_every=2,
+                  seed=0)
+    res = run_fl(train, test, shards, spec,
+                 MixedResolutionQuantizer(lambda_=0.2, b=10),
+                 None, None, fl)
+    assert res.params["w"].dtype == jnp.bfloat16
+    assert res.params["g"].dtype == jnp.float16
+    assert res.params["b"].dtype == jnp.float32
+    # and the update actually moved the bf16 leaves
+    p0 = init(jax.random.PRNGKey(fl.seed))
+    assert not np.array_equal(np.asarray(res.params["w"], np.float32),
+                              np.asarray(p0["w"], np.float32))
+
+
+# ----------------------------------------------------- run_grid (gated)
+@pytest.mark.skipif(os.environ.get("RUN_MODEL_SUITE") != "1",
+                    reason="models CI suite only (RUN_MODEL_SUITE=1)")
+def test_transformer_run_grid_scenario():
+    from repro.sim import run_grid
+    res = run_grid(["transformer-fused"],
+                   {"mixed": ("mixed-resolution",
+                              {"lambda_": 0.2, "b": 10})}, quick=True)
+    assert len(res) == 1
+    assert np.isfinite(res[0].summary["final_acc"])
+
+
+@pytest.mark.skipif(os.environ.get("RUN_MODEL_SUITE") != "1",
+                    reason="models CI suite only (RUN_MODEL_SUITE=1)")
+def test_layer_budget_scenario_registered():
+    from repro.sim import run_grid
+    res = run_grid(["layer-budget-wire"],
+                   {"mixed": ("mixed-resolution",
+                              {"lambda_": 0.2, "b": 10})}, quick=True)
+    assert len(res) == 1
+    assert np.isfinite(res[0].summary["final_acc"])

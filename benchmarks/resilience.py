@@ -1,0 +1,121 @@
+"""Checksum + guard overhead on the fused wire path (DESIGN.md §14).
+
+The detection layer adds three things to the packed aggregation: the
+head-based finite guard (``head_finite``/``sanitize_head`` — O(K)
+reads of the 8-float wire headers, exploiting that H_INF is a
+NaN-propagating max|row|), the xor-fold checksum stamped at encode and
+verified at decode, and the where-gated weight quarantine.  This bench
+compiles the plain ``encode -> reduce`` pipeline and the guarded one
+(the exact op sequence the resilient engine step traces) at the
+production wire size d = 2^20 and GATES the relative overhead at <5% —
+detection must stay effectively free, or it cannot ship always-on.
+
+The gate compares XLA's cost model (``compiled.cost_analysis()`` flops
+and bytes-accessed), NOT wall time: repeated paired-median null tests
+on this container put the wall-clock noise floor at ~+-7%, which
+cannot resolve a 5% ceiling, while the cost model is deterministic for
+a fixed program.  Wall times are still reported per row as
+informational context.  A third, ungated row records the
+injection-ARMED cost — delta-fault wheres + the bit-flip scatter, paid
+only by chaos runs that set nonzero fault probabilities.
+
+The gate row carries ``us_per_call=0.0`` (a ratio, not a latency —
+the regression gate ratio-checks only positive baselines) and the
+group raises when the ceiling is crossed, which the JSON bench
+contract records as a per-group error for CI.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import WirePath
+from repro.kernels.ops import mixed_res_encode, mixed_res_wire_reduce
+from repro.resilience import guards
+
+from .common import csv_row
+
+LAM, B = 0.2, 10
+OVERHEAD_CEILING = 0.05
+
+
+def _compile(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older jax returns [dict]
+        cost = cost[0]
+    return compiled, float(cost["flops"]), float(cost["bytes accessed"])
+
+
+def _time(fn, *args, n=8):
+    fn(*args)
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def run(quick: bool = True):
+    K = 8 if quick else 20
+    d = 1048576
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.standard_normal((K, d)), jnp.float32)
+    w = jnp.asarray(np.full(K, 1.0 / K), jnp.float32)
+    wp = WirePath(plane="packed")
+    wp_chk = WirePath(plane="packed", checksum=True)
+    faults = {k: jnp.asarray(v)
+              for k, v in guards.zero_fault_arrays(K).items()}
+
+    def plain(f, wgt):
+        wire = mixed_res_encode(f, LAM, B, path=wp)
+        return mixed_res_wire_reduce(wire, wgt, B, d, path=wp)
+
+    def detect(f, wgt):
+        wire = mixed_res_encode(f, LAM, B, path=wp_chk)
+        good = guards.head_finite(wire)
+        wire = guards.sanitize_head(wire, good)
+        ok = guards.payload_ok(good, wire, True)
+        w_eff, _ = guards.quarantine_weights(wgt, ok)
+        return mixed_res_wire_reduce(wire, w_eff, B, d, path=wp_chk)
+
+    def armed(f, wgt, flt):
+        f = guards.inject_delta_faults(f, flt)
+        wire = mixed_res_encode(f, LAM, B, path=wp_chk)
+        wire = guards.inject_bitflips(wire, flt)
+        good = guards.head_finite(wire) & ~flt["drop"]
+        wire = guards.sanitize_head(wire, good)
+        ok = guards.payload_ok(good, wire, True)
+        w_eff, _ = guards.quarantine_weights(wgt, ok)
+        return mixed_res_wire_reduce(wire, w_eff, B, d, path=wp_chk)
+
+    c_plain, fl_p, by_p = _compile(plain, flat, w)
+    c_detect, fl_d, by_d = _compile(detect, flat, w)
+    c_armed, fl_a, by_a = _compile(armed, flat, w, faults)
+    fl_over = fl_d / fl_p - 1.0
+    by_over = by_d / by_p - 1.0
+
+    t_plain = _time(c_plain, flat, w)
+    t_detect = _time(c_detect, flat, w)
+    t_armed = _time(c_armed, flat, w, faults)
+
+    yield csv_row(f"resilience/wire_plain_K{K}_d{d}", t_plain,
+                  f"bytes={by_p:.3e}_flops={fl_p:.3e}")
+    yield csv_row(f"resilience/wire_guarded_K{K}_d{d}", t_detect,
+                  f"bytes_ratio={by_d / by_p:.3f}x_"
+                  f"flops_ratio={fl_d / fl_p:.3f}x")
+    yield csv_row(f"resilience/wire_armed_K{K}_d{d}", t_armed,
+                  f"bytes_ratio={by_a / by_p:.3f}x_"
+                  f"flops_ratio={fl_a / fl_p:.3f}x")
+    yield csv_row("resilience/checksum_overhead", 0.0,
+                  f"bytes={by_over * 100:.2f}%_flops={fl_over * 100:.2f}"
+                  f"%_gate<{OVERHEAD_CEILING * 100:.0f}%")
+    if max(by_over, fl_over) > OVERHEAD_CEILING:
+        raise RuntimeError(
+            f"checksum+guard overhead (bytes {by_over * 100:.2f}%, "
+            f"flops {fl_over * 100:.2f}%) exceeds the "
+            f"{OVERHEAD_CEILING * 100:.0f}% cost-model ceiling")

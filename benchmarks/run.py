@@ -59,7 +59,7 @@ def main() -> None:
                     help="comma list: fig2,table2,table3,overhead,"
                          "sim_engine,phy_solvers,mc_replicates,"
                          "quant_kernels,async_rounds,cohort_scale,"
-                         "layer_budget")
+                         "layer_budget,resilience")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write structured per-bench records to OUT")
     args = ap.parse_args()
@@ -67,7 +67,8 @@ def main() -> None:
 
     from . import async_rounds, cohort_scale, fig2_convergence, \
         layer_budget, mc_replicates, overhead, phy_solvers, \
-        quant_kernels, sim_engine, table2_accuracy, table3_latency
+        quant_kernels, resilience, sim_engine, table2_accuracy, \
+        table3_latency
     benches = {
         "overhead": lambda: overhead.run(quick=quick),
         "fig2": lambda: fig2_convergence.run(T=40 if quick else 100,
@@ -81,6 +82,7 @@ def main() -> None:
         "async_rounds": lambda: async_rounds.run(quick=quick),
         "cohort_scale": lambda: cohort_scale.run(quick=quick),
         "layer_budget": lambda: layer_budget.run(quick=quick),
+        "resilience": lambda: resilience.run(quick=quick),
     }
     selected = list(benches) if args.only is None \
         else args.only.split(",")

@@ -3,12 +3,24 @@
 No orbax in this container; this implementation is complete for
 single-process use (atomic write via temp file + rename, step
 retention, metadata).  Sharded arrays are pulled to host before save.
+
+Restore is hardened against on-disk decay (DESIGN.md §14): a
+truncated or corrupt archive (bad zip, unreadable entry), a missing
+``__meta__`` word, or a shape/dtype mismatch against the template
+makes ``restore_checkpoint`` fall back to the next-newest retained
+checkpoint with a warning instead of raising — a crash mid-
+``os.replace`` or a flipped block on disk costs at most ``keep - 1``
+steps of progress, never the run.  An explicitly requested ``step``
+never falls back (the caller named a file; silently handing back a
+different one would be worse than the error), and when NO retained
+checkpoint is valid the error from the newest candidate propagates.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -46,28 +58,29 @@ def _prune(directory: str, keep: int):
         os.remove(os.path.join(directory, f))
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _retained_steps(directory: str):
     if not os.path.isdir(directory):
-        return None
+        return []
     ckpts = sorted(f for f in os.listdir(directory)
                    if f.startswith("ckpt_") and f.endswith(".npz"))
-    if not ckpts:
-        return None
-    return int(ckpts[-1][5:-4])
+    return [int(f[5:-4]) for f in ckpts]
 
 
-def restore_checkpoint(directory: str, template: Any,
-                       step: Optional[int] = None):
-    """Restore into the structure of ``template``; returns
-    (tree, step, metadata)."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
-    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+def latest_step(directory: str) -> Optional[int]:
+    steps = _retained_steps(directory)
+    return steps[-1] if steps else None
+
+
+def _read_checkpoint(path: str, template: Any):
+    """Load + validate one archive against the template; raises on any
+    corruption symptom (bad zip, missing ``__meta__`` or leaf entry,
+    shape/dtype mismatch) — the fallback loop's per-candidate probe."""
     data = np.load(path)
+    if "__meta__" not in data:
+        raise ValueError(f"checkpoint {path} has no __meta__ entry "
+                         "(truncated or foreign archive)")
     meta = json.loads(str(data["__meta__"]))
-    flat_template, treedef = jax.tree_util.tree_flatten_with_path(template)
+    flat_template, _ = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in flat_template:
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
@@ -76,7 +89,46 @@ def restore_checkpoint(directory: str, template: Any,
         if tuple(arr.shape) != tuple(np.shape(leaf)):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {np.shape(leaf)}")
+        want = getattr(leaf, "dtype", None)
+        if want is not None and arr.dtype != np.dtype(want):
+            raise ValueError(f"dtype mismatch for {key}: "
+                             f"{arr.dtype} vs {np.dtype(want)}")
         leaves.append(arr)
     tree = jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(template), leaves)
     return tree, meta["step"], meta["metadata"]
+
+
+def restore_checkpoint(directory: str, template: Any,
+                       step: Optional[int] = None):
+    """Restore into the structure of ``template``; returns
+    (tree, step, metadata).
+
+    With ``step=None`` the newest VALID retained checkpoint wins: a
+    candidate that fails to load (corrupt/truncated archive, missing
+    entries, shape/dtype drift against the template) is skipped with a
+    warning and the next-newest is tried; the newest candidate's error
+    re-raises only when every retained step is bad.  An explicit
+    ``step`` is an exact request — no fallback, errors propagate.
+    """
+    if step is not None:
+        return _read_checkpoint(
+            os.path.join(directory, f"ckpt_{step:08d}.npz"), template)
+    steps = _retained_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    first_error: Optional[BaseException] = None
+    ordered = list(reversed(steps))
+    for n, s in enumerate(ordered):
+        path = os.path.join(directory, f"ckpt_{s:08d}.npz")
+        try:
+            return _read_checkpoint(path, template)
+        except Exception as e:
+            if first_error is None:
+                first_error = e
+            if n + 1 < len(ordered):
+                warnings.warn(
+                    f"checkpoint {path} unreadable ({e}); falling "
+                    "back to the next-newest retained step",
+                    stacklevel=2)
+    raise first_error

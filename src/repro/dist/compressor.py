@@ -271,6 +271,14 @@ def aggregate_flat_stacked(flat: jnp.ndarray, comp: CompressorConfig,
         inf, dw_q = _rank_k_values(jnp.abs(flat), k, comp.exact_topk)
         wire = mixed_res_encode_anchored(flat, inf, dw_q, comp.bits,
                                          path=wp)
+        if wp.checksum:
+            # decode-side integrity check (DESIGN.md §14): a replica
+            # whose packed planes fail the xor-fold word is masked out
+            # of the mean with renormalized weights; all-valid leaves
+            # the weights bit-for-bit untouched
+            from repro.resilience.guards import quarantine_weights
+            from repro.kernels.ops import verify_wire
+            weights, _ = quarantine_weights(weights, verify_wire(wire))
         return mixed_res_wire_reduce(wire, weights, comp.bits, d,
                                      path=wp)
     recon, dw_q = mixed_recon(flat, comp)
@@ -303,14 +311,31 @@ def _ring_wire_reduce(wire, comp: CompressorConfig, wp: WirePath,
             "axis size inside a manual shard_map region)")
     G = int(axis_sizes[axes[0]])
     w1 = jnp.full((1,), 1.0 / G, jnp.float32)
-    acc = mixed_res_wire_reduce(wire, w1, comp.bits, d, path=wp)
+
+    def hop_weight(hop_wire):
+        # checksum verified AFTER transport, per hop: a corrupted
+        # traveling buffer contributes weight 0 and the final fold
+        # renormalizes over surviving peers (bit-neutral when all pass)
+        if not wp.checksum:
+            return w1, jnp.ones((), jnp.float32)
+        from repro.kernels.ops import verify_wire
+        ok = verify_wire(hop_wire)
+        return jnp.where(ok, w1, 0.0), ok.astype(jnp.float32)[0]
+
+    w_eff, good = hop_weight(wire)
+    acc = mixed_res_wire_reduce(wire, w_eff, comp.bits, d, path=wp)
     perm = [(i, (i + 1) % G) for i in range(G)]
     traveling = wire
     for _ in range(G - 1):
         traveling = jax.tree_util.tree_map(
             lambda x: jax.lax.ppermute(x, axes[0], perm), traveling)
-        acc = mixed_res_wire_reduce(traveling, w1, comp.bits, d,
+        w_eff, ok = hop_weight(traveling)
+        good = good + ok
+        acc = mixed_res_wire_reduce(traveling, w_eff, comp.bits, d,
                                     acc=acc, path=wp)
+    if wp.checksum:
+        scale = jnp.float32(G) / jnp.maximum(good, 1.0)
+        acc = jnp.where(good < G, acc * scale, acc)
     return acc
 
 
@@ -355,6 +380,12 @@ def aggregate_flat_manual(flat: jnp.ndarray, comp: CompressorConfig,
         g_wire = jax.lax.all_gather(local, axes)
         G = g_wire.head.shape[0]
         weights = jnp.full((G,), 1.0 / G, jnp.float32)
+        if wp.checksum:
+            # verified after the gather moved the planes (DESIGN.md §14)
+            from repro.resilience.guards import quarantine_weights
+            from repro.kernels.ops import verify_wire
+            weights, _ = quarantine_weights(weights,
+                                            verify_wire(g_wire))
         return mixed_res_wire_reduce(g_wire, weights, comp.bits, d,
                                      path=wp)
     recon, dw_q = mixed_recon(flat, comp)

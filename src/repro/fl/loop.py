@@ -63,6 +63,10 @@ class RoundLog:
     mean_staleness: float = 0.0           # over aggregated arrivals
     effective_participation: float = 1.0  # aggregated users / K
     dropped_uploads: int = 0              # stale- + churn-dropped
+    # resilience accounting (DESIGN.md §14; defaults keep pre-PR-10
+    # code paths unchanged)
+    quarantined_users: int = 0            # guard-masked payloads
+    power_fallbacks: int = 0              # solver fallback stages used
 
 
 @dataclasses.dataclass

@@ -7,20 +7,22 @@ Heavy wrappers stay importable from :mod:`repro.kernels.ops`; this
 package surface re-exports the spec plus the stable wire entrypoints so
 sim/dist/config code never reaches into per-module internals.
 """
-from .ops import (H_DBAR, H_DWQ, H_INF, H_LAM, H_STEP, MixedResWire,
-                  mixed_res_encode, mixed_res_encode_anchored,
-                  mixed_res_wire_aggregate, mixed_res_wire_reduce,
-                  packed_sign_weighted_sum, segmented_wire_aggregate,
-                  sign_pad_len, wire_view)
+from .ops import (H_CHK, H_DBAR, H_DWQ, H_INF, H_LAM, H_STEP,
+                  MixedResWire, mixed_res_encode,
+                  mixed_res_encode_anchored, mixed_res_wire_aggregate,
+                  mixed_res_wire_reduce, packed_sign_weighted_sum,
+                  segmented_wire_aggregate, sign_pad_len,
+                  stamp_checksum, verify_wire, wire_checksum, wire_view)
 from .wire import (PACKED_DIM_LIMIT, WirePath, check_packed_dim,
                    from_aggregation, from_wire_path)
 
 __all__ = [
-    "H_DBAR", "H_DWQ", "H_INF", "H_LAM", "H_STEP", "MixedResWire",
-    "PACKED_DIM_LIMIT", "WirePath", "check_packed_dim",
+    "H_CHK", "H_DBAR", "H_DWQ", "H_INF", "H_LAM", "H_STEP",
+    "MixedResWire", "PACKED_DIM_LIMIT", "WirePath", "check_packed_dim",
     "from_aggregation", "from_wire_path",
     "mixed_res_encode", "mixed_res_encode_anchored",
     "mixed_res_wire_aggregate", "mixed_res_wire_reduce",
     "packed_sign_weighted_sum", "segmented_wire_aggregate",
-    "sign_pad_len", "wire_view",
+    "sign_pad_len", "stamp_checksum", "verify_wire", "wire_checksum",
+    "wire_view",
 ]

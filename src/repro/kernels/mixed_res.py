@@ -46,8 +46,12 @@ from jax.experimental import pallas as pl
 
 from .quant_pack import BLOCK_ROWS
 
-# wire-header lane assignment ([U, 8] f32 scalar rows)
-H_INF, H_DWQ, H_STEP, H_DBAR, H_LAM = 0, 1, 2, 3, 4
+# wire-header lane assignment ([U, 8] f32 scalar rows).  Lane H_CHK
+# carries the bitcast uint32 xor-fold checksum of the packed planes
+# when WirePath(checksum=True); it is never read arithmetically (the
+# bit pattern may alias a NaN) — decode and bit accounting consume
+# lanes 0-3 only, so stamping it leaves both bit-for-bit unchanged.
+H_INF, H_DWQ, H_STEP, H_DBAR, H_LAM, H_CHK = 0, 1, 2, 3, 4, 5
 HEADER_LANES = 8
 
 CODE_STORE_WIDTHS = (2, 4, 8, 16)

@@ -16,7 +16,7 @@ from repro import obs as _obs
 
 from . import ref as _ref
 from .flash_decode import flash_decode as _flash_decode
-from .mixed_res import (H_DBAR, H_DWQ, H_INF, H_LAM, H_STEP,
+from .mixed_res import (H_CHK, H_DBAR, H_DWQ, H_INF, H_LAM, H_STEP,
                         mixed_res_dequant_reduce, mixed_res_emit,
                         mixed_res_reduce)
 from .quant_pack import sign_dequant_reduce as _sdr
@@ -156,6 +156,40 @@ def wire_view(flat: jnp.ndarray):
     return flat.reshape(U, d_pad // 128, 128)
 
 
+def wire_checksum(wire: "MixedResWire") -> jnp.ndarray:
+    """[U] uint32 xor-fold over every packed uint32 word of each user's
+    sign/hi/code planes — the integrity word carried in header lane
+    ``H_CHK`` when ``WirePath(checksum=True)``.
+
+    Both lowerings share the jnp fold (ref.xor_fold_words_ref): the
+    planes are bit-exact across Pallas/interpret/jnp, and xor is
+    order-free, so the checksum is lowering-invariant by construction.
+    Each plane folds separately (then the three [U] words xor) — a
+    concatenated [U, n] staging copy would double the checksum's
+    memory traffic against its <5% wire-path overhead budget."""
+    U = wire.signs.shape[0]
+    chk = _ref.xor_fold_words_ref(wire.signs.reshape(U, -1))
+    chk ^= _ref.xor_fold_words_ref(wire.hi.reshape(U, -1))
+    return chk ^ _ref.xor_fold_words_ref(wire.codes.reshape(U, -1))
+
+
+def stamp_checksum(wire: "MixedResWire") -> "MixedResWire":
+    """Store the xor-fold checksum in header lane H_CHK (bitcast to the
+    f32 header row — the bit pattern is never read arithmetically)."""
+    chk = jax.lax.bitcast_convert_type(wire_checksum(wire), jnp.float32)
+    return wire._replace(head=wire.head.at[:, H_CHK].set(chk))
+
+
+def verify_wire(wire: "MixedResWire") -> jnp.ndarray:
+    """[U] bool — recompute the plane checksum and compare against the
+    header word stamped at encode.  Only meaningful for wires produced
+    under ``WirePath(checksum=True)``; jit-safe (no host sync), so
+    callers fold the verdict into quarantine masks inside the step."""
+    stored = jax.lax.bitcast_convert_type(
+        wire.head[:, H_CHK].astype(jnp.float32), jnp.uint32)
+    return wire_checksum(wire) == stored
+
+
 def mixed_res_encode(flat: jnp.ndarray, lambda_: float, b: int, *,
                      interpret: bool | None = None,
                      use_kernel: bool | None = None,
@@ -189,6 +223,8 @@ def mixed_res_encode(flat: jnp.ndarray, lambda_: float, b: int, *,
     else:
         signs, hi, codes = _ref.mixed_res_emit_ref(x3, head, b, d)
     wire = MixedResWire(signs=signs, hi=hi, codes=codes, head=head)
+    if path is not None and path.checksum:
+        wire = stamp_checksum(wire)
     _tap_wire("wire.encode", int(U), flat.size * 4, wire)
     return wire
 
@@ -217,6 +253,8 @@ def mixed_res_encode_anchored(flat: jnp.ndarray, inf: jnp.ndarray,
         signs, hi, codes = _ref.mixed_res_emit_ref(x3, head, b, d,
                                                    anchored=True)
     wire = MixedResWire(signs=signs, hi=hi, codes=codes, head=head)
+    if path is not None and path.checksum:
+        wire = stamp_checksum(wire)
     _tap_wire("wire.encode", int(U), flat.size * 4, wire)
     return wire
 

@@ -145,6 +145,31 @@ def mixed_res_dequant_reduce_ref(signs: jnp.ndarray, hi: jnp.ndarray,
     return out
 
 
+def xor_fold_words_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """[U, n] uint32 -> [U] uint32 xor fold — the wire-checksum oracle.
+
+    XOR is associative and commutative, so the fold order is
+    irrelevant: the checksum of a wire buffer is identical across the
+    Pallas/interpret/jnp lowerings because the packed planes themselves
+    are bit-exact across them (the kernel parity suite pins that).
+
+    Folded as a zero-padded halving tree of vectorized xors rather
+    than ``lax.reduce`` with a custom computation — the latter lowers
+    to a scalar loop on the CPU backend, and the checksum has a <5%
+    overhead budget on the wire path (benchmarks/resilience.py)."""
+    w = words.astype(jnp.uint32)
+    n = w.shape[1]
+    if n == 0:
+        return jnp.zeros((w.shape[0],), jnp.uint32)
+    m = 1 << (n - 1).bit_length() if n > 1 else 1
+    if m != n:
+        w = jnp.pad(w, ((0, 0), (0, m - n)))
+    while m > 1:
+        m //= 2
+        w = w[:, :m] ^ w[:, m:]
+    return w[:, 0]
+
+
 def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      length: jnp.ndarray) -> jnp.ndarray:
     """Single-token decode attention oracle.

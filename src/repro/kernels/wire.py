@@ -86,6 +86,12 @@ class WirePath:
     # the contract.  LayerBudget.uniform() (is_uniform=True) must behave
     # exactly like None: consumers keep the single-segment global path.
     budget: Optional[object] = None
+    # Stamp an xor-fold integrity word over the packed uint32 planes
+    # into header lane H_CHK at encode, verified at decode by the
+    # resilience layer (DESIGN.md §14).  Stamping touches no lane the
+    # decode or bit accounting reads, so checksum=True alone is
+    # bit-for-bit on params, payload bits and metrics.
+    checksum: bool = False
 
     def __post_init__(self):
         self.validate()
@@ -119,6 +125,10 @@ class WirePath:
             raise ValueError(
                 "budget must be a repro.core.quantize.LayerBudget "
                 f"(got {type(self.budget).__name__})")
+        if self.checksum and self.plane != "packed":
+            raise ValueError(
+                "checksum folds the packed uint32 wire planes; use "
+                f"plane='packed' (got plane={self.plane!r})")
         if self.budget is not None and not self.budget.is_uniform:
             if self.plane == "signplane":
                 raise ValueError(

@@ -175,6 +175,41 @@ def async_summary(events: List[Dict]) -> Dict[str, float]:
     return out
 
 
+def resilience_summary(events: List[Dict]) -> Dict[str, float]:
+    """Aggregate the fault-handling telemetry (DESIGN.md §14):
+    quarantine totals, solver fallback stages, checkpoint/resume and
+    IO-retry counts.  Empty when no detect/recover action fired."""
+    def named(name):
+        return [e for e in events if e.get("kind") == "event"
+                and e.get("name") == name]
+
+    out: Dict[str, float] = {}
+    quar = named("resilience.quarantine")
+    if quar:
+        out["quarantined_users_total"] = sum(
+            _num(e.get("quarantined_users")) or 0.0 for e in quar)
+        out["rounds_with_quarantine"] = float(sum(
+            1 for e in quar if (_num(e.get("quarantined_users")) or 0.0) > 0))
+    fb = named("resilience.fallback")
+    if fb:
+        out["fallback_rounds"] = float(len(fb))
+        out["fallback_cells_total"] = sum(
+            _num(e.get("cells")) or 0.0 for e in fb)
+        out["channel_rebuilds"] = float(sum(
+            1 for e in fb if e.get("rebuilt")))
+    ck = named("resilience.checkpoint")
+    if ck:
+        out["checkpoints_saved"] = float(len(ck))
+    rs = named("resilience.resume")
+    if rs:
+        out["resumes"] = float(len(rs))
+        out["last_resume_round"] = _num(rs[-1].get("round")) or 0.0
+    io = named("resilience.io_retry")
+    if io:
+        out["io_retries"] = float(len(io))
+    return out
+
+
 def retrace_summary(events: List[Dict]) -> List[Dict[str, Any]]:
     final: Dict[str, Dict[str, Any]] = {}
     for e in events:
@@ -242,6 +277,10 @@ def render_report(events: List[Dict],
     if async_:
         lines = [f"  {k}: {_fmt(v)}" for k, v in async_.items()]
         parts.append("== async rounds ==\n" + "\n".join(lines))
+    resil = resilience_summary(events)
+    if resil:
+        lines = [f"  {k}: {_fmt(v)}" for k, v in resil.items()]
+        parts.append("== resilience ==\n" + "\n".join(lines))
     retraces = retrace_summary(events)
     if retraces:
         lines = [f"  {r['name']}: {r['count']} trace(s)"

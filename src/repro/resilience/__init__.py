@@ -1,0 +1,46 @@
+"""repro.resilience — fault injection, detection and recovery.
+
+The failure model and recovery contract live in DESIGN.md §14; the
+package splits along those three verbs:
+
+* :mod:`faults`     — :class:`FaultPlan` (seeded per-round injection
+  spec) and :class:`ResilienceConfig` (plan + recovery policy); what
+  ``EngineConfig.resilience`` / ``run_grid_batched(resilience=...)``
+  accept;
+* :mod:`guards`     — the jit-safe inject/detect/quarantine primitives
+  traced into the engine's fused round step (where-gated so the
+  no-fault path stays bit-for-bit);
+* :mod:`fallback`   — the host-side bounded power-solver fallback
+  chain (retry-with-perturbed-init → Dinkelbach → max-sum →
+  full-power uniform) promoted from the solvers' convergence
+  diagnostics;
+* :mod:`sweep_state` — cell-granular sweep checkpoint/resume on
+  ``repro.checkpoint`` with IO retry/backoff (imported lazily: it
+  reaches into ``repro.sim``, which itself imports the guards).
+"""
+from .fallback import (converged_rows, resilient_batched_solve,
+                       uniform_power_solution)
+from .faults import FaultPlan, ResilienceConfig
+from .guards import (finite_rows, head_finite, inject_bitflips,
+                     inject_delta_faults, payload_ok,
+                     quarantine_weights, quarantined_count,
+                     sanitize_head, sanitize_rows, update_ok,
+                     zero_fault_arrays)
+
+__all__ = [
+    "FaultPlan", "ResilienceConfig", "SweepCheckpointer",
+    "converged_rows", "finite_rows", "head_finite", "inject_bitflips",
+    "inject_delta_faults", "payload_ok", "quarantine_weights",
+    "quarantined_count", "resilient_batched_solve", "sanitize_head",
+    "sanitize_rows", "uniform_power_solution", "update_ok",
+    "zero_fault_arrays",
+]
+
+
+def __getattr__(name):
+    # lazy: sweep_state imports repro.sim/checkpoint machinery, which
+    # imports the guards above — a top-level import would cycle
+    if name == "SweepCheckpointer":
+        from .sweep_state import SweepCheckpointer
+        return SweepCheckpointer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

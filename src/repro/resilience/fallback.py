@@ -1,0 +1,195 @@
+"""Bounded power-solver fallback chain (host-side, per sweep round).
+
+PR 6's batched solvers already *return* convergence diagnostics
+(``bisection_converged``, ``dinkelbach_converged``/``residual``/
+``safeguard``, ``maxsum_grad_norm``) — the drivers just never looked.
+This module promotes them to control flow: after the primary solve,
+each cell row is judged converged-and-finite; failed rows get ONE
+bounded retry (perturbed restarts for max-sum, doubled iteration
+budgets for the deterministic solvers — re-running those unchanged
+would reproduce the same failure), then walk the configured chain
+(Dinkelbach → max-sum → full-power uniform by default).  The uniform
+stage is terminal: full power for every active user always yields
+finite rates, so a round can degrade but never crash.
+
+A non-finite solution row additionally triggers the channel-recovery
+hook: the caller passes ``rebuild()`` (re-derive the ChannelBatch from
+the retained realizations) and the chain re-solves on the rebuilt
+bundle — the recovery path for corrupted channel estimates.
+
+Everything merges row-wise in numpy (the drivers are host loops), and
+every recovery emits a ``resilience.fallback`` obs event.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs as _obs
+from repro.phy import solvers as _solvers
+from repro.phy.solvers import BatchedPowerSolution
+
+from .faults import ResilienceConfig
+
+
+def converged_rows(sol: BatchedPowerSolution, mask: np.ndarray
+                   ) -> np.ndarray:
+    """[B] bool — per-cell verdict from the solver's own diagnostics
+    plus finiteness of the power/latency rows (active users only)."""
+    m = np.asarray(mask) > 0
+    p = np.asarray(sol.p)
+    lat = np.asarray(sol.latencies)
+    ok = np.all(np.where(m, np.isfinite(p), True), axis=1)
+    ok &= np.all(np.where(m, np.isfinite(lat), True), axis=1)
+    info = sol.info
+    for key in ("bisection_converged", "dinkelbach_converged"):
+        if key in info:
+            ok &= np.asarray(info[key]).astype(bool)
+    if "maxsum_grad_norm" in info:
+        ok &= np.isfinite(np.asarray(info["maxsum_grad_norm"]))
+    return ok
+
+
+def finite_rows(sol: BatchedPowerSolution, mask: np.ndarray
+                ) -> np.ndarray:
+    """[B] bool — finiteness only (the channel-corruption symptom)."""
+    m = np.asarray(mask) > 0
+    p = np.asarray(sol.p)
+    lat = np.asarray(sol.latencies)
+    ok = np.all(np.where(m, np.isfinite(p), True), axis=1)
+    return ok & np.all(np.where(m, np.isfinite(lat), True), axis=1)
+
+
+def uniform_power_solution(cb, bits, mask) -> BatchedPowerSolution:
+    """The terminal fallback: full power for every active user."""
+    bits = jnp.asarray(bits, jnp.float32)
+    maskj = jnp.asarray(mask, jnp.float32)
+    return _solvers._finish(cb, bits, maskj, maskj, {})
+
+
+def _retry_solve(power, cb, bits, mask, plan, t
+                 ) -> Optional[BatchedPowerSolution]:
+    """One bounded retry of the primary controller: perturbed-init
+    restarts for max-sum; doubled iteration budget for the
+    deterministic solvers (an unchanged re-run would reproduce the
+    failure bit-for-bit)."""
+    name = power.name
+    if name == "max-sum-rate":
+        mask_np = np.asarray(mask, np.float64)
+        starts = _solvers.maxsum_starts(mask_np, power.restarts)
+        jitter = plan.retry_jitter(t, starts.shape) if plan is not None \
+            else np.zeros(starts.shape)
+        starts = np.clip(starts + jitter * (starts > 0), 0.0, 1.0)
+        return _solvers.maxsum_solve(cb, bits, mask=mask,
+                                     iters=power.iters, lr=power.lr,
+                                     starts=starts)
+    if name == "bisection-lp":
+        return _solvers.bisection_solve(cb, bits, mask=mask,
+                                        eps_rel=power.eps_rel,
+                                        max_iters=2 * power.max_iters)
+    if name == "dinkelbach":
+        return _solvers.dinkelbach_solve(
+            cb, bits, mask=mask, p_circuit_w=power.p_circuit_w,
+            outer=2 * power.outer, inner=power.inner, lr=power.lr,
+            tol=power.tol)
+    return None
+
+
+def _chain_solve(stage: str, cb, bits, mask) -> BatchedPowerSolution:
+    if stage == "dinkelbach":
+        return _solvers.dinkelbach_solve(cb, bits, mask=mask)
+    if stage == "max-sum-rate":
+        return _solvers.maxsum_solve(cb, bits, mask=mask)
+    if stage == "bisection-lp":
+        return _solvers.bisection_solve(cb, bits, mask=mask)
+    if stage == "uniform":
+        return uniform_power_solution(cb, bits, mask)
+    raise KeyError(f"unknown fallback stage {stage!r}")
+
+
+def _merge(base: BatchedPowerSolution, alt: BatchedPowerSolution,
+           take: np.ndarray) -> BatchedPowerSolution:
+    """Row-wise merge: rows where ``take`` adopt ``alt``'s solution."""
+    sel = take[:, None]
+    return BatchedPowerSolution(
+        p=np.where(sel, np.asarray(alt.p), np.asarray(base.p)),
+        rates=np.where(sel, np.asarray(alt.rates),
+                       np.asarray(base.rates)),
+        latencies=np.where(sel, np.asarray(alt.latencies),
+                           np.asarray(base.latencies)),
+        info=base.info)
+
+
+def resilient_batched_solve(
+        power, cb, bits, mask, *, config: ResilienceConfig,
+        t: int = 0, rebuild: Optional[Callable] = None,
+        obs_tag: str = "") -> Tuple[BatchedPowerSolution, np.ndarray,
+                                    Optional[object]]:
+    """Primary solve → retry → fallback chain, per cell row.
+
+    Returns ``(solution, fallbacks [B] int32, rebuilt_cb)`` where
+    ``fallbacks`` counts the recovery stages each row consumed (0 =
+    primary converged first try — the common case, in which the primary
+    solution object is returned UNTOUCHED, keeping the no-fault path's
+    arrays identical to a driver without this wrapper) and
+    ``rebuilt_cb`` is the recovered ChannelBatch when the corruption
+    hook fired (the caller refreshes its cache with it)."""
+    plan = config.faults
+    solve = _solvers.batched_solver(power)
+    bits_j = jnp.asarray(bits)
+    mask_j = jnp.asarray(mask)
+    sol = solve(cb, bits_j, mask=mask_j)
+    forced = plan.solver_forced_failure(t)
+    ok = converged_rows(sol, mask) & (not forced)
+    B = ok.shape[0]
+    fallbacks = np.zeros(B, np.int32)
+    if ok.all():
+        return sol, fallbacks, None
+
+    rebuilt_cb = None
+    stages_run = []
+    # channel recovery: non-finite rows mean the bundle itself decayed
+    if rebuild is not None and not finite_rows(sol, mask).all():
+        rebuilt_cb = rebuild()
+        cb = rebuilt_cb
+        alt = solve(cb, bits_j, mask=mask_j)
+        take = ~ok
+        sol = _merge(sol, alt, take)
+        fallbacks += take.astype(np.int32)
+        ok = ok | (take & converged_rows(alt, mask) & (not forced))
+        stages_run.append("channel_rebuild")
+    if not ok.all() and config.solver_retries > 0:
+        alt = _retry_solve(power, cb, bits_j, mask_j, plan, t)
+        if alt is not None:
+            take = ~ok & converged_rows(alt, mask) & (not forced)
+            if take.any():
+                sol = _merge(sol, alt, take)
+                fallbacks[take] += 1
+                ok |= take
+            stages_run.append(f"retry:{power.name}")
+    for stage in config.solver_chain:
+        if ok.all():
+            break
+        if stage == power.name:
+            continue
+        alt = _chain_solve(stage, cb, bits_j, mask_j)
+        accepted = converged_rows(alt, mask) if stage != "uniform" \
+            else np.ones(B, bool)
+        take = ~ok & accepted
+        if take.any():
+            sol = _merge(sol, alt, take)
+            fallbacks[take] += 1
+            ok |= take
+            stages_run.append(stage)
+    if _obs.enabled() and fallbacks.any():
+        _obs.record("resilience.fallback", t=t, power=power.name,
+                    tag=obs_tag, cells=int((fallbacks > 0).sum()),
+                    stages=",".join(stages_run), forced=bool(forced),
+                    rebuilt=rebuilt_cb is not None)
+    return sol, fallbacks, rebuilt_cb
+
+
+__all__ = ["converged_rows", "finite_rows", "resilient_batched_solve",
+           "uniform_power_solution"]

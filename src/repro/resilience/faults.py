@@ -1,0 +1,133 @@
+"""FaultPlan / ResilienceConfig — the failure model's specification.
+
+A :class:`FaultPlan` names WHAT can go wrong and with what per-round
+probability; everything is seeded and drawn host-side per round
+(``numpy.random.default_rng((seed, stream, t))``), so a fault trace is
+exactly reproducible and the jitted step only ever sees plain arrays —
+the fault draw is an *input* of the step, never a branch inside it.
+:class:`ResilienceConfig` bundles a plan with the recovery policy
+(guards on/off, the solver fallback chain, IO retry/backoff) and is
+what `EngineConfig.resilience` / `run_grid_batched(resilience=...)`
+accept.
+
+The axes (DESIGN.md §14):
+
+* ``nan_delta_prob`` / ``inf_delta_prob`` — a user's local delta turns
+  non-finite before quantization (diverged optimizer, bad batch);
+* ``bitflip_prob``  — one bit of the user's packed sign plane flips in
+  transit (detected only when ``WirePath(checksum=True)``);
+* ``dropout_prob``  — the upload is lost mid-transfer: the payload is
+  treated as never received;
+* ``channel_corrupt_prob`` — the cached channel-estimate bundle decays
+  (NaN coefficients), recovered by rebuilding from realizations;
+* ``solver_fail_rounds`` — the primary power solve is declared
+  non-converged on these rounds, exercising the fallback chain;
+* ``kill_after_rounds`` — sweep preemption: the process SIGKILLs
+  itself after this many completed+checkpointed rounds (the
+  kill-and-resume chaos test).
+
+``FaultPlan.none()`` draws all-zero masks: every guard reduces to
+``where(False, ...)`` / xor-with-0 identities, which is how the
+bit-for-bit no-fault parity contract is kept.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+# independent named substreams off the plan seed
+_DELTA_STREAM = 0xFA17    # per-user delta/plane/dropout draws
+_CHAN_STREAM = 0xC047     # channel-estimate corruption
+_RETRY_STREAM = 0x5EED    # perturbed solver restarts
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded per-round fault injection spec (probabilities per round,
+    per user where a user axis exists)."""
+    nan_delta_prob: float = 0.0
+    inf_delta_prob: float = 0.0
+    bitflip_prob: float = 0.0
+    dropout_prob: float = 0.0
+    channel_corrupt_prob: float = 0.0
+    solver_fail_rounds: Tuple[int, ...] = ()
+    kill_after_rounds: Optional[int] = None
+    seed: int = 0
+
+    @classmethod
+    def none(cls) -> "FaultPlan":
+        """The identity plan — injects nothing, ever."""
+        return cls()
+
+    @property
+    def is_none(self) -> bool:
+        return (self.nan_delta_prob == 0 and self.inf_delta_prob == 0
+                and self.bitflip_prob == 0 and self.dropout_prob == 0
+                and self.channel_corrupt_prob == 0
+                and not self.solver_fail_rounds
+                and self.kill_after_rounds is None)
+
+    # ------------------------------------------------------ host draws
+    def draw(self, t: int, K: int, replicate: Optional[int] = None
+             ) -> Dict[str, np.ndarray]:
+        """Per-round fault masks for K users (numpy, host-side).
+
+        Keys: ``nan``/``inf``/``drop`` [K] bool, ``flip_mask`` [K]
+        uint32 (0 = no flip; else a single-bit xor mask) and
+        ``flip_word`` [K] int32 (word index into the flattened sign
+        plane, reduced mod the word count device-side)."""
+        key = ((self.seed, _DELTA_STREAM, t) if replicate is None
+               else (self.seed, _DELTA_STREAM, t, replicate))
+        rng = np.random.default_rng(key)
+        nan = rng.random(K) < self.nan_delta_prob
+        inf = rng.random(K) < self.inf_delta_prob
+        flip = rng.random(K) < self.bitflip_prob
+        drop = rng.random(K) < self.dropout_prob
+        bit = rng.integers(0, 32, K).astype(np.uint32)
+        word = rng.integers(0, np.int32(2 ** 31 - 1), K).astype(np.int32)
+        flip_mask = np.where(flip, np.uint32(1) << bit,
+                             np.uint32(0)).astype(np.uint32)
+        return {"nan": nan, "inf": inf, "drop": drop,
+                "flip_mask": flip_mask, "flip_word": word}
+
+    def solver_forced_failure(self, t: int) -> bool:
+        """True when round t's primary power solve must be treated as
+        non-converged regardless of its flags."""
+        return t in self.solver_fail_rounds
+
+    def channel_corrupt(self, t: int) -> bool:
+        rng = np.random.default_rng((self.seed, _CHAN_STREAM, t))
+        return bool(rng.random() < self.channel_corrupt_prob)
+
+    def retry_jitter(self, t: int, shape) -> np.ndarray:
+        """Perturbation for retry-with-perturbed-init restarts."""
+        rng = np.random.default_rng((self.seed, _RETRY_STREAM, t))
+        return rng.uniform(-0.05, 0.05, shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """A fault plan plus the recovery policy that answers it.
+
+    ``solver_chain`` names the bounded fallback order tried after the
+    primary controller (and its one perturbed-init retry) fails;
+    ``"uniform"`` is the terminal full-power stage and always accepted.
+    ``guards=False`` keeps injection without detection (for measuring
+    blast radius in chaos tests)."""
+    faults: FaultPlan = FaultPlan.none()
+    guards: bool = True
+    solver_chain: Tuple[str, ...] = ("dinkelbach", "max-sum-rate",
+                                     "uniform")
+    solver_retries: int = 1
+    io_retries: int = 3
+    io_backoff_s: float = 0.05
+
+    @classmethod
+    def none(cls) -> "ResilienceConfig":
+        """Guards on, nothing injected — the production posture."""
+        return cls()
+
+
+__all__ = ["FaultPlan", "ResilienceConfig"]

@@ -1,0 +1,126 @@
+"""jit-safe inject / detect / quarantine primitives for the engine step.
+
+Everything here is traced INTO the engine's jitted round step: faults
+arrive as plain arrays (host-drawn, see faults.py), detection is pure
+masking, and recovery is ``where``-gated so the no-fault path stays
+bit-for-bit identical to an engine without a resilience layer —
+``where(all-True, x, y)`` returns x's exact bits and ``word ^ 0`` is
+the identity, so XLA computes the same values (the parity battery in
+tests/test_resilience.py pins this on every aggregation path).
+
+The quarantine contract (DESIGN.md §14): a payload is BAD when its
+delta has a non-finite entry, its upload dropped mid-transfer, or its
+wire checksum fails.  Bad payloads are (1) zeroed BEFORE encode — a
+NaN row would otherwise poison the packed header and survive
+weight-zeroing because ``NaN * 0 = NaN`` — and (2) masked out of the
+weighted aggregation with the surviving users' ``rho`` renormalized to
+sum to the original total.  A final finite guard on the aggregated
+update freezes the global model for the round if everything failed.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.mixed_res import H_INF
+from repro.kernels.ops import MixedResWire, verify_wire
+
+
+def zero_fault_arrays(K: int) -> Dict[str, np.ndarray]:
+    """The no-op fault draw (used when a step needs the arrays but the
+    plan injects nothing this round)."""
+    return {"nan": np.zeros(K, bool), "inf": np.zeros(K, bool),
+            "drop": np.zeros(K, bool),
+            "flip_mask": np.zeros(K, np.uint32),
+            "flip_word": np.zeros(K, np.int32)}
+
+
+def inject_delta_faults(flat: jnp.ndarray, faults: Dict) -> jnp.ndarray:
+    """Poison selected users' [U, d] deltas with NaN / +inf."""
+    flat = jnp.where(faults["nan"][:, None], jnp.float32(jnp.nan), flat)
+    flat = jnp.where(faults["inf"][:, None], jnp.float32(jnp.inf), flat)
+    return flat
+
+
+def finite_rows(flat: jnp.ndarray) -> jnp.ndarray:
+    """[U] bool — True where the user's whole delta is finite."""
+    return jnp.all(jnp.isfinite(flat), axis=1)
+
+
+def sanitize_rows(flat: jnp.ndarray, good: jnp.ndarray) -> jnp.ndarray:
+    """Zero quarantined rows so non-finite payloads cannot reach the
+    encoder (NaN survives multiplication by a zero weight)."""
+    return jnp.where(good[:, None], flat, 0.0)
+
+
+def inject_bitflips(wire: MixedResWire, faults: Dict) -> MixedResWire:
+    """Flip one sign-plane bit per selected user (post-encode, i.e. in
+    transit AFTER the checksum was stamped — that is what the decode
+    verify is for).  flip_mask == 0 users xor with 0: bit-identical."""
+    signs = wire.signs
+    U = signs.shape[0]
+    flat_s = signs.reshape(U, -1)
+    idx = faults["flip_word"] % flat_s.shape[1]
+    rows = jnp.arange(U)
+    flat_s = flat_s.at[rows, idx].set(
+        flat_s[rows, idx] ^ faults["flip_mask"])
+    return wire._replace(signs=flat_s.reshape(signs.shape))
+
+
+def head_finite(wire: MixedResWire) -> jnp.ndarray:
+    """[U] bool — True where the user's delta was entirely finite,
+    read off the encoded header instead of an O(U d) isfinite pass:
+    ``H_INF`` is the row's inf-norm through a NaN-propagating max, so
+    it is non-finite iff SOME element was (an all-finite row cannot
+    overflow f32's max into inf through abs/max)."""
+    return jnp.isfinite(wire.head[:, H_INF])
+
+
+def sanitize_head(wire: MixedResWire, good: jnp.ndarray) -> MixedResWire:
+    """Zero quarantined rows' header lanes so their (garbage) planes
+    decode to exactly 0 — every decode scale (dw_q, step, dbar) lives
+    in the head, and a zeroed head is bit-for-bit what encoding a
+    zeroed row produces.  O(U) instead of zeroing [U, d] deltas before
+    the encoder; ``where(all-True, ...)`` keeps the no-fault head
+    untouched."""
+    return wire._replace(head=jnp.where(good[:, None], wire.head, 0.0))
+
+
+def payload_ok(good_pre: jnp.ndarray, wire: MixedResWire,
+               checksum: bool) -> jnp.ndarray:
+    """[U] bool — pre-encode verdict folded with the wire checksum."""
+    if not checksum:
+        return good_pre
+    return good_pre & verify_wire(wire)
+
+
+def quarantine_weights(weights: jnp.ndarray, ok: jnp.ndarray):
+    """Mask bad users out of the aggregation, renormalizing the
+    survivors' weights to the original total.  Returns ``(w', ok)``
+    where ``w'`` is bitwise ``weights`` when every user is ok."""
+    okf = ok.astype(weights.dtype)
+    wsum = jnp.sum(weights)
+    wsum_good = jnp.sum(weights * okf)
+    scale = wsum / jnp.where(wsum_good > 0, wsum_good, 1.0)
+    any_bad = ~jnp.all(ok)
+    return jnp.where(any_bad, weights * okf * scale, weights), ok
+
+
+def quarantined_count(ok: jnp.ndarray, active: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """Scalar int32 — quarantined ACTIVE users (padded cohort slots and
+    churned-out users never count)."""
+    return jnp.sum(jnp.where(ok, 0, 1) * (active > 0).astype(jnp.int32))
+
+
+def update_ok(agg: jnp.ndarray) -> jnp.ndarray:
+    """Scalar bool — final finite guard on the aggregated update."""
+    return jnp.all(jnp.isfinite(agg))
+
+
+__all__ = ["finite_rows", "head_finite", "inject_bitflips",
+           "inject_delta_faults", "payload_ok", "quarantine_weights",
+           "quarantined_count", "sanitize_head", "sanitize_rows",
+           "update_ok", "zero_fault_arrays"]

@@ -1,0 +1,372 @@
+"""Cell-granular sweep checkpoint/resume on ``repro.checkpoint``.
+
+:class:`SweepCheckpointer` gives ``run_grid_batched`` a durable round
+frontier: after every ``every``-th lockstep round of a scenario, the
+full training state of EVERY track and the accounting of EVERY
+(quantizer, power) cell is written atomically (one ``save_checkpoint``
+.npz for the device pytrees + its JSON metadata for the host state),
+and a completed scenario's result rows land in ``rows.json``.  A
+process killed mid-sweep (``kill -9`` included — the chaos suite does
+exactly that) re-runs the same ``run_grid_batched`` call and continues
+from the last completed (scenario, quantizer, power, round) frontier:
+finished scenarios are skipped outright from ``rows.json``, the
+in-flight scenario restores its newest valid checkpoint and resumes at
+round ``t0 + 1``.
+
+What is (and is not) serialized:
+
+* device state — per-track params/quantizer-state pytrees (replicated:
+  the stacked [R] carries plus each cell's per-replicate final-params
+  snapshots) and the async clock's payload buffer go in the .npz;
+* host state — numpy Generator ``bit_generator.state`` dicts, per-cell
+  RoundLog lists, latency/alive/max_p accounting and the async clock's
+  host arrays go in the JSON metadata (all fixed-shape device trees in
+  the archive, all variable-length state in JSON);
+* channels are NOT serialized: realizations replay deterministically
+  from the engine's redraw rule (``make_channel(cfg, channel_seed +
+  t')`` at the last redraw round ``t' <= t0``), so restore rebuilds
+  them instead of shipping [M, K] grids to disk.
+
+Every IO call runs under bounded retry/backoff
+(``ResilienceConfig.io_retries`` / ``io_backoff_s``); restore leans on
+the hardened ``restore_checkpoint`` (truncated/corrupt archives fall
+back to the newest valid retained step).  ``FaultPlan.
+kill_after_rounds`` arms the preemption fault: the process SIGKILLs
+itself after that many successful round saves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import signal
+import time
+import warnings
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro import obs as _obs
+from repro.checkpoint.io import (latest_step, restore_checkpoint,
+                                 save_checkpoint)
+
+from .faults import ResilienceConfig
+
+_ROWS_FILE = "rows.json"
+_KEEP = 2      # retained round checkpoints per scenario
+
+
+def _with_retry(fn: Callable, retries: int, backoff_s: float,
+                what: str = "sweep checkpoint IO"):
+    """Run ``fn`` with bounded retry + exponential backoff on OSError —
+    the transient-filesystem recovery path (DESIGN.md §14)."""
+    last: Optional[BaseException] = None
+    for attempt in range(max(0, retries) + 1):
+        try:
+            return fn()
+        except OSError as e:        # noqa: PERF203 - bounded retry loop
+            last = e
+            if attempt < retries:
+                if _obs.enabled():
+                    _obs.record("resilience.io_retry", what=what,
+                                attempt=attempt + 1, error=str(e))
+                time.sleep(backoff_s * (2 ** attempt))
+    raise last
+
+
+def _slug(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9._-]+", "_", name)
+
+
+def _rng_state(rng: np.random.Generator) -> Dict:
+    return rng.bit_generator.state
+
+
+def _restore_rng(state: Dict) -> np.random.Generator:
+    rng = np.random.default_rng(0)
+    rng.bit_generator.state = state
+    return rng
+
+
+def _log_to_dict(log) -> Dict:
+    d = dataclasses.asdict(log)
+    d["bits_per_user"] = np.asarray(log.bits_per_user,
+                                    np.float64).tolist()
+    if d.get("test_acc") is not None:
+        d["test_acc"] = float(d["test_acc"])
+    return d
+
+
+def _log_from_dict(d: Dict):
+    from repro.fl.loop import RoundLog
+
+    d = dict(d)
+    d["bits_per_user"] = np.asarray(d["bits_per_user"], np.float64)
+    known = {f.name for f in dataclasses.fields(RoundLog)}
+    return RoundLog(**{k: v for k, v in d.items() if k in known})
+
+
+def _device(tree):
+    import jax.numpy as jnp
+
+    return jax.tree_util.tree_map(lambda x: jnp.asarray(x), tree)
+
+
+def _replay_channel(engine, chan, t0: int, replicate: Optional[int]):
+    """The deterministic channel replay: re-derive the realization in
+    force at round ``t0 + 1`` from the engine's redraw rule instead of
+    serializing [M, K] grids."""
+    from repro.sim.engine import make_channel
+
+    every = engine.engine_cfg.redraw_channel_every
+    if chan is None or every <= 0:
+        return chan
+    tp = 0
+    for t in range(2, t0 + 1):
+        if (t - 1) % every == 0:
+            tp = t
+    if tp == 0:
+        return chan
+    seed = (engine.engine_cfg.channel_seed + tp if replicate is None
+            else engine._repl_chan_seed(replicate, tp))
+    return make_channel(chan.cfg, seed=seed)
+
+
+class SweepCheckpointer:
+    """Round-granular checkpoint/resume for ``run_grid_batched``.
+
+    One instance per driver call; ``directory`` is the durable root
+    (``rows.json`` + one ``scn_<name>/`` checkpoint dir per scenario).
+    """
+
+    def __init__(self, directory: str,
+                 resilience: Optional[ResilienceConfig] = None,
+                 every: int = 1):
+        if every < 1:
+            raise ValueError(f"checkpoint_every must be >= 1, got {every}")
+        self.directory = directory
+        self.resilience = resilience or ResilienceConfig.none()
+        self.every = every
+        self._saves = 0
+        os.makedirs(directory, exist_ok=True)
+        self._rows: Dict[str, List[Dict]] = self._load_rows()
+
+    # ------------------------------------------------- completed rows
+    def _retry(self, fn, what):
+        return _with_retry(fn, self.resilience.io_retries,
+                           self.resilience.io_backoff_s, what)
+
+    def _load_rows(self) -> Dict[str, List[Dict]]:
+        path = os.path.join(self.directory, _ROWS_FILE)
+        if not os.path.exists(path):
+            return {}
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            warnings.warn(f"sweep rows file {path} unreadable ({e}); "
+                          "restarting the sweep from scratch",
+                          stacklevel=2)
+            return {}
+
+    def completed_rows(self, scenario_name: str,
+                       expected_cells: int) -> Optional[List[Dict]]:
+        """The scenario's finished result rows, or None when it must
+        (re)run — a grid reshape invalidates the stored rows."""
+        rows = self._rows.get(scenario_name)
+        if rows is None or len(rows) != expected_cells:
+            return None
+        return rows
+
+    def mark_scenario_done(self, scenario_name: str,
+                           rows: List[Dict]) -> None:
+        """Record the scenario's rows atomically (tmp + os.replace)."""
+        self._rows[scenario_name] = rows
+        path = os.path.join(self.directory, _ROWS_FILE)
+
+        def write():
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(self._rows, f)
+            os.replace(tmp, path)
+
+        self._retry(write, "rows.json")
+        if _obs.enabled():
+            _obs.record("resilience.scenario_done",
+                        scenario=scenario_name, cells=len(rows))
+
+    def scenario_dir(self, scenario_name: str) -> str:
+        return os.path.join(self.directory, f"scn_{_slug(scenario_name)}")
+
+    # ------------------------------------------------------ save round
+    def save_round(self, scn, tracks: List, t: int) -> None:
+        """Persist every track + cell of the scenario after round t."""
+        replicated = hasattr(tracks[0].state, "chans") if tracks else False
+        tree: Dict[str, Any] = {}
+        meta: Dict[str, Any] = {"replicated": replicated, "tracks": []}
+        for i, tr in enumerate(tracks):
+            node: Dict[str, Any] = {"params": tr.state.params,
+                                    "qstate": tr.state.qstate}
+            clock = tr.state.async_clock
+            if clock is not None:
+                node["clock_buffer"] = clock.buffer
+            tm: Dict[str, Any] = {}
+            if replicated:
+                tm["rngs"] = [_rng_state(r) for r in tr.state.rngs]
+                tm["part_rngs"] = [_rng_state(r)
+                                   for r in tr.state.part_rngs]
+                cells = []
+                for j, cell in enumerate(tr.cells):
+                    eng = tr.engine
+                    snaps = [cell.params[r] if not cell.alive[r]
+                             else eng.replicate_params(tr.state, r)
+                             for r in range(tr.state.R)]
+                    node[f"cell{j}_params"] = jax.tree_util.tree_map(
+                        lambda *xs: np.stack([np.asarray(x)
+                                              for x in xs]), *snaps)
+                    cells.append({
+                        "logs": [[_log_to_dict(l) for l in logs]
+                                 for logs in cell.logs],
+                        "cum_latency": cell.cum_latency.tolist(),
+                        "alive": cell.alive.tolist(),
+                        "rounds_done": cell.rounds_done.tolist(),
+                        "max_p": float(cell.max_p)})
+                tm["cells"] = cells
+            else:
+                tm["rng"] = _rng_state(tr.state.rng)
+                tm["part_rng"] = _rng_state(tr.state.part_rng)
+                tm["cum_latency"] = float(tr.state.cum_latency)
+                tm["rounds_done"] = int(tr.state.rounds_done)
+                tm["cells"] = [{
+                    "logs": [_log_to_dict(l) for l in cell.acct.logs],
+                    "cum_latency": float(cell.acct.cum_latency),
+                    "rounds_done": int(cell.acct.rounds_done),
+                    "alive": bool(cell.alive),
+                    "max_p": float(cell.max_p)}
+                    for cell in tr.cells]
+            if clock is not None:
+                tm["clock"] = {
+                    "in_flight": clock.in_flight.tolist(),
+                    "remaining_s": clock.remaining_s.tolist(),
+                    "staleness": clock.staleness.tolist(),
+                    "uploads_started": int(clock.uploads_started),
+                    "arrived_total": int(clock.arrived_total),
+                    "dropped_stale": int(clock.dropped_stale),
+                    "dropped_churn": int(clock.dropped_churn)}
+            tree[f"track{i}"] = node
+            meta["tracks"].append(tm)
+
+        directory = self.scenario_dir(scn.name)
+        self._retry(
+            lambda: save_checkpoint(directory, t, tree, metadata=meta,
+                                    keep=_KEEP),
+            f"scenario checkpoint {scn.name}@{t}")
+        self._saves += 1
+        if _obs.enabled():
+            _obs.record("resilience.checkpoint", scenario=scn.name,
+                        round=t, tracks=len(tracks))
+        kill_after = self.resilience.faults.kill_after_rounds
+        if kill_after is not None and self._saves >= kill_after:
+            # sweep preemption fault: die the hard way, AFTER the save
+            # landed — resume must pick up from this exact frontier
+            os.kill(os.getpid(), signal.SIGKILL)
+
+    # --------------------------------------------------------- restore
+    def restore_round(self, scn, tracks: List) -> int:
+        """Restore the scenario's newest valid checkpoint into freshly
+        built tracks; returns the completed-round frontier t0 (0 when
+        nothing valid is on disk — run from the start)."""
+        directory = self.scenario_dir(scn.name)
+        if latest_step(directory) is None:
+            return 0
+        replicated = hasattr(tracks[0].state, "chans") if tracks else False
+        template: Dict[str, Any] = {}
+        for i, tr in enumerate(tracks):
+            node: Dict[str, Any] = {"params": tr.state.params,
+                                    "qstate": tr.state.qstate}
+            if tr.state.async_clock is not None:
+                node["clock_buffer"] = tr.state.async_clock.buffer
+            if replicated:
+                for j in range(len(tr.cells)):
+                    node[f"cell{j}_params"] = tr.state.params
+            template[f"track{i}"] = node
+        try:
+            tree, t0, meta = self._retry(
+                lambda: restore_checkpoint(directory, template),
+                f"scenario restore {scn.name}")
+        except Exception as e:      # no valid retained checkpoint
+            warnings.warn(
+                f"no restorable checkpoint for scenario {scn.name!r} "
+                f"({e}); re-running from round 1", stacklevel=2)
+            return 0
+        if meta.get("replicated", False) != replicated or \
+                len(meta.get("tracks", ())) != len(tracks):
+            warnings.warn(
+                f"checkpoint layout for {scn.name!r} does not match the "
+                "current grid; re-running from round 1", stacklevel=2)
+            return 0
+        for i, tr in enumerate(tracks):
+            node, tm = tree[f"track{i}"], meta["tracks"][i]
+            tr.state.params = _device(node["params"])
+            tr.state.qstate = _device(node["qstate"])
+            clock = tr.state.async_clock
+            if clock is not None and "clock" in tm:
+                clock.buffer = _device(node["clock_buffer"])
+                cm = tm["clock"]
+                clock.in_flight = np.asarray(cm["in_flight"], bool)
+                clock.remaining_s = np.asarray(cm["remaining_s"],
+                                               np.float64)
+                clock.staleness = np.asarray(cm["staleness"], np.int64)
+                clock.uploads_started = int(cm["uploads_started"])
+                clock.arrived_total = int(cm["arrived_total"])
+                clock.dropped_stale = int(cm["dropped_stale"])
+                clock.dropped_churn = int(cm["dropped_churn"])
+                clock.payload = None
+            if replicated:
+                tr.state.rngs = [_restore_rng(s) for s in tm["rngs"]]
+                tr.state.part_rngs = [_restore_rng(s)
+                                      for s in tm["part_rngs"]]
+                tr.state.rounds_done = t0
+                for r in range(tr.state.R):
+                    tr.state.chans[r] = _replay_channel(
+                        tr.engine, tr.state.chans[r], t0, r)
+                for j, cell in enumerate(tr.cells):
+                    cm = tm["cells"][j]
+                    cell.logs = [[_log_from_dict(d) for d in logs]
+                                 for logs in cm["logs"]]
+                    cell.cum_latency = np.asarray(cm["cum_latency"],
+                                                  np.float64)
+                    cell.alive = np.asarray(cm["alive"], bool)
+                    cell.rounds_done = np.asarray(cm["rounds_done"],
+                                                  np.int64)
+                    cell.max_p = float(cm["max_p"])
+                    snaps = _device(node[f"cell{j}_params"])
+                    cell.params = [
+                        None if cell.alive[r]
+                        else jax.tree_util.tree_map(lambda x, _r=r:
+                                                    x[_r], snaps)
+                        for r in range(tr.state.R)]
+            else:
+                tr.state.rng = _restore_rng(tm["rng"])
+                tr.state.part_rng = _restore_rng(tm["part_rng"])
+                tr.state.cum_latency = float(tm["cum_latency"])
+                tr.state.rounds_done = int(tm["rounds_done"])
+                tr.state.chan = _replay_channel(tr.engine,
+                                                tr.state.chan, t0, None)
+                for j, cell in enumerate(tr.cells):
+                    cm = tm["cells"][j]
+                    cell.acct.logs = [_log_from_dict(d)
+                                      for d in cm["logs"]]
+                    cell.acct.cum_latency = float(cm["cum_latency"])
+                    cell.acct.rounds_done = int(cm["rounds_done"])
+                    cell.acct.params = tr.state.params
+                    cell.alive = bool(cm["alive"])
+                    cell.max_p = float(cm["max_p"])
+        if _obs.enabled():
+            _obs.record("resilience.resume", scenario=scn.name, round=t0)
+        return int(t0)
+
+
+__all__ = ["SweepCheckpointer", "_with_retry"]

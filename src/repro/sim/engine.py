@@ -132,6 +132,7 @@ from repro.kernels.ops import (H_DBAR, H_DWQ, H_INF, MixedResWire,
                                mixed_res_encode, mixed_res_wire_reduce,
                                segmented_wire_aggregate)
 from repro.kernels.ops import mixed_res_wire_aggregate as _wire_aggregate
+from repro.resilience import guards as _rg
 from repro import obs as _obs
 
 
@@ -249,6 +250,13 @@ class EngineConfig:
     async_mode: bool = False
     staleness: StalenessConfig = dataclasses.field(
         default_factory=StalenessConfig)
+    # Optional repro.resilience.ResilienceConfig: threads seeded
+    # per-round fault masks through the fused step and arms the
+    # jit-safe quarantine guards (DESIGN.md §14).  None (default)
+    # builds the exact pre-resilience step graphs; a config with
+    # FaultPlan.none() injects nothing and is bit-for-bit with None
+    # (tests/test_resilience.py parity battery).
+    resilience: Optional[object] = None
 
     @property
     def effective_fused(self) -> bool:
@@ -472,6 +480,7 @@ class RoundWork:
     active: np.ndarray             # [K] 0/1 participation mask
     mean_s: float                  # mean high-res fraction (active users)
     participating: Optional[np.ndarray] = None   # [K] churn mask (async)
+    quarantined: int = 0           # users masked out by the guards
 
 
 @dataclasses.dataclass
@@ -482,6 +491,7 @@ class ReplicatedRoundWork:
     active: np.ndarray             # [R, K] 0/1 participation masks
     mean_s: np.ndarray             # [R] mean high-res fraction per replicate
     participating: Optional[np.ndarray] = None   # [R, K] churn masks (async)
+    quarantined: Optional[np.ndarray] = None     # [R] guard-masked users
 
 
 @dataclasses.dataclass
@@ -645,6 +655,19 @@ class VectorizedFLEngine:
             # construction, not mid-run in the jit
             check_packed_dim(self.d, where="the packed wire plane")
         self._segments = self._resolve_budget_segments(wp)
+        self._resilience = self.engine_cfg.resilience
+        if self._resilience is not None:
+            if not self.engine_cfg.effective_fused:
+                raise ValueError(
+                    "the resilience guards trace into the fused round "
+                    "step; configure EngineConfig(fused=True) (the "
+                    "exact mode's eager sequential replay has no "
+                    "guard insertion points)")
+            if self._clusters > 1:
+                raise ValueError(
+                    "resilience guards are not supported with the "
+                    "two-level cluster hierarchy (WirePath.clusters > "
+                    "1); drop clusters or resilience")
         self.qstate = quantizer.init_batched_state(self.K, self.d)
         self.comp_lat = computation_latency(fl.L, fl.dataset_size_for_comp,
                                             self.K)
@@ -781,7 +804,7 @@ class VectorizedFLEngine:
                "dw_q": dw_q, "inf": inf}
         return bits, aux
 
-    def _cohort_accumulate(self, params, xs, ys, weights):
+    def _cohort_accumulate(self, params, xs, ys, weights, faults=None):
         """Stream the stacked users through `lax.scan` in cohorts of
         C = WirePath.cohort_size: each chunk runs local AdaGrad + the
         fused packed encode, and the weighted dequant-reduce folds into
@@ -791,16 +814,30 @@ class VectorizedFLEngine:
         The user axis is zero-padded up to a multiple of C; padded
         slots carry weight 0 and so contribute exactly +-0.0 to the
         fold (DESIGN.md §12).  Returns ``(acc [d] f32, head [U, 8])``
-        with the padded rows stripped from the headers."""
+        with the padded rows stripped from the headers.
+
+        ``faults`` (resilience path, DESIGN.md §14) adds per-chunk
+        inject + detect: bad users' weights zero out inside the fold
+        and the carried good-weight total comes back so the CALLER can
+        renormalize the whole accumulator GLOBALLY — per-chunk
+        renormalization would misweight chunks against each other.
+        Resilient returns ``(acc, head, ok [U], wsum, wsum_good)``."""
         q, d, C = self.quantizer, self.d, self._cohort
         wp = self.wire_path_spec
         U = xs.shape[0]
         Gc = -(-U // C)
         pad = Gc * C - U
+        resilient = faults is not None
+        guards_on = resilient and self._resilience.guards
+        wsum = jnp.sum(weights) if resilient else None
+        if resilient:
+            faults = dict(faults)
         if pad:
             padu = lambda a: jnp.pad(a, [(0, pad)] + [(0, 0)]
                                      * (a.ndim - 1))
             xs, ys, weights = padu(xs), padu(ys), padu(weights)
+            if resilient:
+                faults = {k: padu(v) for k, v in faults.items()}
         chunk = lambda a: a.reshape((Gc, C) + a.shape[1:])
 
         def body(acc, args):
@@ -811,10 +848,41 @@ class VectorizedFLEngine:
                                         path=wp)
             return acc, wire.head
 
-        acc, heads = jax.lax.scan(
-            body, jnp.zeros((d,), jnp.float32),
-            (chunk(xs), chunk(ys), chunk(weights)))
-        return acc, heads.reshape(Gc * C, -1)[:U]
+        def body_r(carry, args):
+            acc, wg = carry
+            x_c, y_c, w_c, f_c = args
+            flat = self._batched_local(params, x_c, y_c)  # [C, d]
+            flat = _rg.inject_delta_faults(flat, f_c)
+            wire = mixed_res_encode(flat, q.lambda_, q.b, path=wp)
+            wire = _rg.inject_bitflips(wire, f_c)
+            good = ~f_c["drop"]
+            if guards_on:
+                # head-based O(C) detection: H_INF is a NaN-propagating
+                # max|row|, and zeroing a bad row's head makes its
+                # planes decode to exactly 0 (guards.sanitize_head) —
+                # no second [C, d] isfinite/sanitize pass
+                good = good & _rg.head_finite(wire)
+                wire = _rg.sanitize_head(wire, good)
+            ok = _rg.payload_ok(good, wire,
+                                wp.checksum and guards_on)
+            # zero bad users out of the fold; the global renorm (one
+            # rescale over the full carried sum) happens in the caller
+            w_eff = jnp.where(ok, w_c, 0.0)
+            acc = mixed_res_wire_reduce(wire, w_eff, q.b, d, acc=acc,
+                                        path=wp)
+            return (acc, wg + jnp.sum(w_eff)), (wire.head, ok)
+
+        if not resilient:
+            acc, heads = jax.lax.scan(
+                body, jnp.zeros((d,), jnp.float32),
+                (chunk(xs), chunk(ys), chunk(weights)))
+            return acc, heads.reshape(Gc * C, -1)[:U]
+        (acc, wsum_good), (heads, oks) = jax.lax.scan(
+            body_r, (jnp.zeros((d,), jnp.float32), jnp.float32(0.0)),
+            (chunk(xs), chunk(ys), chunk(weights),
+             {k: chunk(v) for k, v in faults.items()}))
+        return (acc, heads.reshape(Gc * C, -1)[:U],
+                oks.reshape(-1)[:U], wsum, wsum_good)
 
     def _build_train_flat(self):
         """One jit dispatch: all K users' local AdaGrad runs + stacked
@@ -919,7 +987,116 @@ class VectorizedFLEngine:
             tap(res.bits, res.aux, active)
             return params, new_qstate, res.bits, res.aux
 
-        return step
+        if self._resilience is None:
+            return step
+
+        # ---- resilience variant (DESIGN.md §14): same arithmetic with
+        # inject/detect/quarantine threaded through.  Faults arrive as
+        # plain arrays (host-drawn, repro.resilience.faults) so nothing
+        # here branches on them; every guard is where-gated, keeping a
+        # no-fault round bit-for-bit with the pristine step above
+        # (tests/test_resilience.py parity battery).
+        guards_on = self._resilience.guards
+        d = self.d
+
+        def finish(params, qstate, agg, ok, bits, aux, active):
+            """Shared epilogue: quarantine accounting, the final finite
+            guard on the aggregated update (freeze the global model for
+            the round when everything failed), param update."""
+            new = jax.tree_util.tree_map(
+                lambda p, u: p + u, params, unflatten_pytree(agg, spec))
+            if guards_on:
+                okall = _rg.update_ok(agg) & jnp.any(ok)
+                params = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(okall, n, o), new, params)
+            else:
+                okall = jnp.asarray(True)
+                params = new
+            aux = dict(aux)
+            aux["quarantined"] = _rg.quarantined_count(ok, active)
+            aux["update_ok"] = okall
+            tap(bits, aux, active)
+            return params, qstate, bits, aux
+
+        def step_r(params, qstate, xs, ys, weights, active, faults):
+            if plane == "packed" and cohort is not None:
+                acc, head, ok, wsum, wsum_good = self._cohort_accumulate(
+                    params, xs, ys, weights, faults=faults)
+                bits, aux = self._head_stats(head)
+                # GLOBAL renormalization across all chunks: one rescale
+                # of the carried sum, gated so the no-fault fold keeps
+                # its exact bits
+                any_bad = ~jnp.all(ok)
+                scale = wsum / jnp.where(wsum_good > 0, wsum_good, 1.0)
+                acc = jnp.where(any_bad, acc * scale, acc)
+                return finish(params, qstate, acc, ok, bits, aux,
+                              active)
+            flat = self._batched_local(params, xs, ys)
+            flat = _rg.inject_delta_faults(flat, faults)
+            good = ~faults["drop"]
+            if plane == "packed" and segments is None:
+                # decomposed _wire_aggregate — identical op sequence,
+                # with the in-transit bitflip + checksum verify between
+                # encode and decode.  Detection reads the encode's own
+                # header (head_finite/sanitize_head): O(K) on the
+                # 8-float heads instead of an O(K d) isfinite pass +
+                # a second [K, d] sanitized buffer
+                wire = mixed_res_encode(flat, q.lambda_, q.b, path=wp)
+                wire = _rg.inject_bitflips(wire, faults)
+                if guards_on:
+                    good = good & _rg.head_finite(wire)
+                    wire = _rg.sanitize_head(wire, good)
+                ok = _rg.payload_ok(good, wire,
+                                    wp.checksum and guards_on)
+                w_eff, _ = _rg.quarantine_weights(weights, ok)
+                agg = mixed_res_wire_reduce(wire, w_eff, q.b, d,
+                                            path=wp)
+                bits, aux = self._head_stats(wire.head)
+                return finish(params, qstate, agg, ok, bits, aux,
+                              active)
+            if guards_on:
+                # dense/segmented recons: NaN rides the payload itself
+                # (NaN * 0 = NaN), so bad rows must be zeroed in the
+                # delta matrix before quantization
+                good = good & _rg.finite_rows(flat)
+                flat = _rg.sanitize_rows(flat, good)
+            if plane == "packed":
+                # per-layer budget: delta-level faults + quarantine
+                # only (bitflips/checksums are per-segment wires —
+                # not modeled; the flip draw is ignored here)
+                ok = good
+                w_eff, _ = _rg.quarantine_weights(weights, ok)
+                agg, bits, aux = segmented_wire_aggregate(
+                    flat, w_eff, segments, path=wp)
+                return finish(params, qstate, agg, ok, bits, aux,
+                              active)
+            ok = good
+            w_eff, _ = _rg.quarantine_weights(weights, ok)
+            if segments is not None:
+                recon, bits, aux = segmented_quantize(flat, segments)
+                agg = jnp.einsum("k,kd->d", w_eff, recon)
+                return finish(params, qstate, agg, ok, bits, aux,
+                              active)
+            res, new_qstate = q.batched(flat, qstate)
+            if new_qstate is not None:
+                # quarantined users did not (effectively) transmit:
+                # freeze their state along with the absent users'
+                commit = jnp.where(ok, active, 0.0)
+                new_qstate = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(
+                        jnp.reshape(commit, (K,) + (1,) * (n.ndim - 1))
+                        > 0, n, o),
+                    new_qstate, qstate)
+                qstate = new_qstate
+            if plane == "signplane":
+                agg = _signplane_aggregate(flat, res.recon,
+                                           res.aux["dw_q"], w_eff)
+            else:
+                agg = jnp.einsum("k,kd->d", w_eff, res.recon)
+            return finish(params, qstate, agg, ok, res.bits, res.aux,
+                          active)
+
+        return step_r
 
     def _jit_fused_step(self, step):
         # params and quantizer state are round-to-round carries: donate
@@ -931,8 +1108,12 @@ class VectorizedFLEngine:
         if self._user_sharding is not None:
             us, rs = self._user_sharding, self._repl_sharding
             # params replicated; every stacked [K, ...] arg (quantizer
-            # state, minibatches, weights, activity mask) user-sharded
-            return jax.jit(step, in_shardings=(rs, us, us, us, us, us),
+            # state, minibatches, weights, activity mask — and the
+            # resilience fault-mask dict, when threaded) user-sharded
+            shardings = (rs, us, us, us, us, us)
+            if self._resilience is not None:
+                shardings = shardings + (us,)
+            return jax.jit(step, in_shardings=shardings,
                            donate_argnums=(0, 1))
         return jax.jit(step, donate_argnums=(0, 1))
 
@@ -951,12 +1132,14 @@ class VectorizedFLEngine:
             if R == 1:
                 fused = self._fused_step
 
-                def step1(params, qstate, xs, ys, weights, active):
+                def step1(params, qstate, xs, ys, weights, active,
+                          *rest):
                     sq = lambda tr: jax.tree_util.tree_map(
                         lambda x: x[0], tr)
                     p, q, bits, aux = fused(sq(params), sq(qstate),
                                             xs[0], ys[0], weights[0],
-                                            active[0])
+                                            active[0],
+                                            *[sq(r) for r in rest])
                     ex = lambda tr: jax.tree_util.tree_map(
                         lambda x: x[None], tr)
                     return ex(p), ex(q), bits[None], ex(aux)
@@ -984,11 +1167,12 @@ class VectorizedFLEngine:
                 if mode == "map":
                     # on-device loop INSIDE the one jitted dispatch:
                     # per-replicate convs keep the fast unbatched CPU
-                    # lowering (see EngineConfig.replicate_batching)
+                    # lowering (see EngineConfig.replicate_batching).
+                    # *args: the resilient step carries a trailing
+                    # fault-mask dict after the six standard operands
                     self._repl_step_cache[R] = jax.jit(
-                        probe(lambda p, q, xs, ys, w, a: jax.lax.map(
-                            lambda args: fn(*args),
-                            (p, q, xs, ys, w, a))),
+                        probe(lambda *args: jax.lax.map(
+                            lambda a: fn(*a), args)),
                         donate_argnums=(0, 1))
                 else:
                     self._repl_step_cache[R] = jax.jit(
@@ -1039,7 +1223,57 @@ class VectorizedFLEngine:
             tap(res.bits, res.aux, commit)
             return res.recon, new_qstate, res.bits, res.aux
 
-        return train
+        if self._resilience is None:
+            return train
+
+        # resilience variant (DESIGN.md §14): a quarantined payload is
+        # equivalent to an upload that never started — the host folds
+        # aux["payload_ok"] into the fresh mask, so the event clock
+        # carries no in-flight record and the buffer never sees it.
+        # Packed payloads are neutralized by zeroing the wire header
+        # (O(K)); dense recons need the bad rows zeroed BEFORE
+        # quantization, since NaN * 0 = NaN would otherwise poison the
+        # aggregate through a weight-0 slot.
+        guards_on = self._resilience.guards
+
+        def train_r(params, qstate, xs, ys, commit, faults):
+            flat = self._batched_local(params, xs, ys)
+            flat = _rg.inject_delta_faults(flat, faults)
+            good = ~faults["drop"]
+            if plane == "packed":
+                # head-based detection (see step_r): a quarantined
+                # wire's zeroed head decodes to exactly 0 even if it
+                # lingers in the staleness buffer
+                wire = mixed_res_encode(flat, q.lambda_, q.b, path=wp)
+                wire = _rg.inject_bitflips(wire, faults)
+                if guards_on:
+                    good = good & _rg.head_finite(wire)
+                    wire = _rg.sanitize_head(wire, good)
+                ok = _rg.payload_ok(good, wire,
+                                    wp.checksum and guards_on)
+                bits, aux = self._head_stats(wire.head)
+                aux = dict(aux)
+                aux["payload_ok"] = ok
+                tap(bits, aux, commit)
+                return wire, qstate, bits, aux
+            if guards_on:
+                good = good & _rg.finite_rows(flat)
+                flat = _rg.sanitize_rows(flat, good)
+            res, new_qstate = q.batched(flat, qstate)
+            if new_qstate is not None:
+                commit_eff = jnp.where(good, commit, 0.0)
+                new_qstate = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(
+                        jnp.reshape(commit_eff,
+                                    (K,) + (1,) * (n.ndim - 1))
+                        > 0, n, o),
+                    new_qstate, qstate)
+            aux = dict(res.aux)
+            aux["payload_ok"] = good
+            tap(res.bits, aux, commit)
+            return res.recon, new_qstate, res.bits, aux
+
+        return train_r
 
     def _build_async_agg_fn(self):
         """Unjitted (params, fresh, buf, w_fresh, w_buf, move, keep) ->
@@ -1112,9 +1346,10 @@ class VectorizedFLEngine:
                 def ex(tr):
                     return jax.tree_util.tree_map(lambda x: x[None], tr)
 
-                def train_r1(params, qstate, xs, ys, commit):
+                def train_r1(params, qstate, xs, ys, commit, *rest):
                     pay, qs, bits, aux = train1(sq(params), sq(qstate),
-                                                xs[0], ys[0], commit[0])
+                                                xs[0], ys[0], commit[0],
+                                                *[sq(r) for r in rest])
                     return ex(pay), ex(qs), bits[None], ex(aux)
 
                 def agg_r1(params, fresh, buf, w_fresh, w_buf, move,
@@ -1192,6 +1427,20 @@ class VectorizedFLEngine:
         return params, qstate, res.bits, res.aux
 
     # ------------------------------------------------------------- run
+    def _draw_faults(self, t: int, R: Optional[int] = None):
+        """The round's fault masks as device arrays ([K], or stacked
+        [R, K]) — None without a resilience config (the pristine step
+        signatures take no faults argument)."""
+        if self._resilience is None:
+            return None
+        plan = self._resilience.faults
+        if R is None:
+            f = plan.draw(t, self.K)
+        else:
+            per_r = [plan.draw(t, self.K, replicate=r) for r in range(R)]
+            f = {k: np.stack([p[k] for p in per_r]) for k in per_r[0]}
+        return {k: jnp.asarray(v) for k, v in f.items()}
+
     def _draw_active(self, part_rng: np.random.Generator) -> np.ndarray:
         p = self.engine_cfg.participation
         if p >= 1.0:
@@ -1249,6 +1498,7 @@ class VectorizedFLEngine:
             return self._clustered_round(state, t, sel, active)
         xs = jnp.asarray(self.dataset.x[sel])
         ys = jnp.asarray(self.dataset.y[sel])
+        faults = self._draw_faults(t)
         if ecfg.async_active:
             # async: busy users (mid-upload) keep transmitting their
             # old payload — only participating, non-busy users start a
@@ -1259,15 +1509,25 @@ class VectorizedFLEngine:
             train_step, _ = self._async_steps(None)
             clock.payload, state.qstate, bits, aux = train_step(
                 state.params, state.qstate, xs, ys,
-                jnp.asarray(fresh, jnp.float32))
+                jnp.asarray(fresh, jnp.float32),
+                *(() if faults is None else (faults,)))
             clock.uploads_started += int(fresh.sum())
+            quarantined = 0
+            if faults is not None:
+                # quarantined payload == upload that never happened:
+                # fold the verdict into the fresh mask BEFORE the event
+                # clock sees it
+                ok_np = np.asarray(aux["payload_ok"], bool)
+                quarantined = int(np.sum(fresh.astype(bool) & ~ok_np))
+                fresh = fresh * ok_np
             bits_np = np.asarray(bits, np.float64) * fresh
             s_np = np.asarray(aux["s"], np.float64) if "s" in aux \
                 else np.ones(self.K)
             fb = fresh.astype(bool)
             mean_s = float(np.mean(s_np[fb])) if fb.any() else 0.0
             return RoundWork(t=t, bits_np=bits_np, active=fresh,
-                             mean_s=mean_s, participating=active)
+                             mean_s=mean_s, participating=active,
+                             quarantined=quarantined)
         weights = self._round_weights(active)
         if not ecfg.effective_fused:
             state.params, state.qstate, bits, aux = self._dense_round(
@@ -1276,13 +1536,16 @@ class VectorizedFLEngine:
             state.params, state.qstate, bits, aux = self._fused_step(
                 state.params, state.qstate, xs, ys,
                 jnp.asarray(weights, jnp.float32),
-                jnp.asarray(active, jnp.float32))
+                jnp.asarray(active, jnp.float32),
+                *(() if faults is None else (faults,)))
+        quarantined = int(aux["quarantined"]) if faults is not None \
+            else 0
         bits_np = np.asarray(bits, np.float64) * active
         s_np = np.asarray(aux["s"], np.float64) if "s" in aux \
             else np.ones(self.K)
         mean_s = float(np.mean(s_np[active.astype(bool)]))
         return RoundWork(t=t, bits_np=bits_np, active=active,
-                         mean_s=mean_s)
+                         mean_s=mean_s, quarantined=quarantined)
 
     def _clustered_round(self, state: RunState, t: int, sel: np.ndarray,
                          active: np.ndarray) -> RoundWork:
@@ -1389,14 +1652,22 @@ class VectorizedFLEngine:
         ys = jnp.asarray(self.dataset.y[sel])
         active = np.stack([self._draw_active(prng)
                            for prng in state.part_rngs])      # [R, K]
+        faults = self._draw_faults(t, R)
         if ecfg.async_active:
             clock = state.async_clock
             fresh = active * (~clock.in_flight).astype(np.float64)
             train_step, _ = self._async_steps(R)
             clock.payload, state.qstate, bits, aux = train_step(
                 state.params, state.qstate, xs, ys,
-                jnp.asarray(fresh, jnp.float32))
+                jnp.asarray(fresh, jnp.float32),
+                *(() if faults is None else (faults,)))
             clock.uploads_started += int(fresh.sum())
+            quarantined = None
+            if faults is not None:
+                ok_np = np.asarray(aux["payload_ok"], bool)
+                quarantined = np.sum(fresh.astype(bool) & ~ok_np,
+                                     axis=-1).astype(np.int64)
+                fresh = fresh * ok_np
             state.rounds_done = t
             bits_np = np.asarray(bits, np.float64) * fresh
             s_np = np.asarray(aux["s"], np.float64) if "s" in aux \
@@ -1406,13 +1677,17 @@ class VectorizedFLEngine:
                 if fresh[r].any() else 0.0 for r in range(R)])
             return ReplicatedRoundWork(t=t, bits_np=bits_np,
                                        active=fresh, mean_s=mean_s,
-                                       participating=active)
+                                       participating=active,
+                                       quarantined=quarantined)
         weights = np.stack([self._round_weights(a) for a in active])
         step = self._replicated_step(R)
         state.params, state.qstate, bits, aux = step(
             state.params, state.qstate, xs, ys,
             jnp.asarray(weights, jnp.float32),
-            jnp.asarray(active, jnp.float32))
+            jnp.asarray(active, jnp.float32),
+            *(() if faults is None else (faults,)))
+        quarantined = None if faults is None else \
+            np.asarray(aux["quarantined"], np.int64)
         state.rounds_done = t
         bits_np = np.asarray(bits, np.float64) * active
         s_np = np.asarray(aux["s"], np.float64) if "s" in aux \
@@ -1420,7 +1695,8 @@ class VectorizedFLEngine:
         mean_s = np.array([float(np.mean(s_np[r][active[r].astype(bool)]))
                            for r in range(R)])
         return ReplicatedRoundWork(t=t, bits_np=bits_np, active=active,
-                                   mean_s=mean_s)
+                                   mean_s=mean_s,
+                                   quarantined=quarantined)
 
     def complete_round_replicated_async(
             self, state: ReplicatedRunState, work: ReplicatedRoundWork,
@@ -1590,7 +1866,8 @@ class VectorizedFLEngine:
     def finish_round(self, state: RunState, work: RoundWork,
                      uplink: float, verbose: bool = False,
                      async_info: Optional[AsyncRoundInfo] = None,
-                     per_user_s: Optional[np.ndarray] = None) -> bool:
+                     per_user_s: Optional[np.ndarray] = None,
+                     power_fallbacks: int = 0) -> bool:
         """Stage 4: latency accounting, eval, logging.  Returns False
         once the latency budget is exhausted (stop stepping).
 
@@ -1620,14 +1897,21 @@ class VectorizedFLEngine:
         if self.eval_due(t):
             acc = self.model_spec.accuracy(state.params, state.test_x,
                                            state.test_y)
+        quarantined = int(getattr(work, "quarantined", 0) or 0)
         state.logs.append(RoundLog(t, work.bits_np, uplink,
                                    self.comp_lat, state.cum_latency,
                                    work.mean_s, acc,
                                    straggler_gap_s=gap,
                                    mean_staleness=stale,
                                    effective_participation=eff,
-                                   dropped_uploads=dropped))
+                                   dropped_uploads=dropped,
+                                   quarantined_users=quarantined,
+                                   power_fallbacks=int(power_fallbacks)))
         state.rounds_done = t
+        if _obs.enabled() and (quarantined or power_fallbacks):
+            _obs.record("resilience.quarantine", t=t,
+                        quarantined_users=quarantined,
+                        power_fallbacks=int(power_fallbacks))
         self._log_round(t, acc, work, uplink, state.cum_latency,
                         verbose, gap=gap)
         return not self.budget_spent(state.cum_latency)

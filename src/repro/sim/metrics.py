@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import csv
 import os
+import tempfile
 from typing import Dict, Iterable, List, Sequence
 
 
@@ -58,6 +59,12 @@ def summarize_logs(logs: List) -> Dict[str, float]:
         if logs else float("nan"),
         "dropped_uploads": float(sum(
             getattr(l, "dropped_uploads", 0) for l in logs)),
+        # resilience totals (PR 10): guard-quarantined payloads and
+        # power-solver fallback stages consumed across the run
+        "quarantined_users": float(sum(
+            getattr(l, "quarantined_users", 0) for l in logs)),
+        "power_fallbacks": float(sum(
+            getattr(l, "power_fallbacks", 0) for l in logs)),
     }
 
 
@@ -93,13 +100,16 @@ METRIC_FIELDS = ["rounds", "best_acc", "final_acc", "mean_bits_per_user",
                  "mean_s", "total_latency_s", "mean_uplink_s",
                  "p95_uplink_s", "mean_straggler_gap_s",
                  "mean_staleness", "effective_participation",
-                 "dropped_uploads", "max_p"]
+                 "dropped_uploads", "quarantined_users",
+                 "power_fallbacks", "resumed_from_round", "max_p"]
 
 # the replicated driver's extra columns (summarize_replicates); written
 # only when some row carries them, so unreplicated sweep CSVs keep
-# their schema
+# their schema.  max_p and resumed_from_round are driver-filled
+# (outside the per-replicate summaries), so they carry no ci95.
 REPLICATE_FIELDS = ["replicates"] + [
-    f + "_ci95" for f in METRIC_FIELDS if f != "max_p"]
+    f + "_ci95" for f in METRIC_FIELDS
+    if f not in ("max_p", "resumed_from_round")]
 
 
 def write_metrics_csv(rows: Iterable[Dict], path: str) -> None:
@@ -111,7 +121,19 @@ def write_metrics_csv(rows: Iterable[Dict], path: str) -> None:
     fields = ["scenario", "quantizer", "power"] + METRIC_FIELDS
     if any(f in row for f in REPLICATE_FIELDS for row in rows):
         fields += REPLICATE_FIELDS
-    with open(path, "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=fields, extrasaction="ignore")
-        w.writeheader()
-        w.writerows(rows)
+    # atomic: a reader (or a kill -9 mid-write) never sees a torn CSV —
+    # the temp file lands in the target directory so os.replace stays
+    # a same-filesystem rename
+    fd, tmp = tempfile.mkstemp(
+        dir=os.path.dirname(path) or ".", suffix=".csv.tmp")
+    try:
+        with os.fdopen(fd, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=fields,
+                               extrasaction="ignore")
+            w.writeheader()
+            w.writerows(rows)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise

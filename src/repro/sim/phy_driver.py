@@ -166,16 +166,29 @@ def _emit_solve_event(plabel: str, sol, mask: np.ndarray,
     _obs.record("phy.solve", **fields)
 
 
+def _poison_bundle(cb):
+    """The channel-estimate corruption fault: NaN out the cached device
+    bundle's direct-link coefficients — the symptom `resilient_
+    batched_solve` detects (non-finite solution rows) and recovers from
+    by rebuilding the bundle from the retained realizations."""
+    import jax.numpy as jnp
+
+    return dataclasses.replace(cb, A_bar=cb.A_bar * jnp.float32(np.nan))
+
+
 def _solve_round_batched(cells: List[_Cell], works: List[RoundWork],
-                         cache: _BundleCache
-                         ) -> List[UplinkSolution]:
+                         cache: _BundleCache, t: int = 0,
+                         resilience=None
+                         ) -> Tuple[List[UplinkSolution], np.ndarray]:
     """One batched device solve per distinct power spec; returns one
     :class:`UplinkSolution` per cell — straggler latency plus per-user
     completion times [K] (zeros without a channel — the async event
-    clock's input) for this round."""
+    clock's input) for this round — and the per-cell count of power
+    fallback stages consumed (all-zero without a resilience config)."""
     K0 = cells[0].track.engine.K if cells else 0
     uplinks = [0.0] * len(cells)
     per_user = [np.zeros(K0) for _ in cells]
+    fb_counts = np.zeros(len(cells), np.int64)
     # group cells by power label (one spec per label within a grid)
     groups: Dict[str, List[int]] = {}
     for i, cell in enumerate(cells):
@@ -199,7 +212,23 @@ def _solve_round_batched(cells: List[_Cell], works: List[RoundWork],
             mask[row] = works[i].active
             bits[row] = np.where(works[i].active > 0,
                                  np.maximum(works[i].bits_np, 1.0), 1.0)
-        sol = batched_solver(cells[idx[0]].power)(cb, bits, mask=mask)
+        if resilience is not None:
+            from repro.resilience.fallback import resilient_batched_solve
+
+            if resilience.faults.channel_corrupt(t):
+                cb = _poison_bundle(cb)
+                cache[plabel] = (cache[plabel][0], cb)
+            sol, fb, rebuilt = resilient_batched_solve(
+                cells[idx[0]].power, cb, bits, mask,
+                config=resilience, t=t, obs_tag=plabel,
+                rebuild=lambda ch=chans: bundle_from_realizations(ch))
+            if rebuilt is not None:
+                cache[plabel] = (cache[plabel][0], rebuilt)
+            for row, i in enumerate(idx):
+                fb_counts[i] = fb[row]
+        else:
+            sol = batched_solver(cells[idx[0]].power)(cb, bits,
+                                                      mask=mask)
         stragglers = np.asarray(sol.straggler_latency, np.float64)
         latencies = np.asarray(sol.latencies, np.float64)
         p_max_round = np.asarray(np.max(sol.p, axis=-1), np.float64)
@@ -209,13 +238,17 @@ def _solve_round_batched(cells: List[_Cell], works: List[RoundWork],
             uplinks[i] = float(stragglers[row])
             per_user[i] = latencies[row]
             cells[i].max_p = max(cells[i].max_p, float(p_max_round[row]))
-    return [UplinkSolution(u, pu) for u, pu in zip(uplinks, per_user)]
+    return ([UplinkSolution(u, pu)
+             for u, pu in zip(uplinks, per_user)], fb_counts)
 
 
 def _run_scenario_lockstep(scn: Scenario, tracks: List[_Track],
-                           verbose: bool) -> None:
+                           verbose: bool, resilience=None,
+                           ckpt=None) -> int:
+    """Returns the resumed-from round frontier (0 for a fresh run)."""
     cache: _BundleCache = {}
-    for t in range(1, scn.T + 1):
+    t0 = ckpt.restore_round(scn, tracks) if ckpt is not None else 0
+    for t in range(t0 + 1, scn.T + 1):
         live_tracks = [tr for tr in tracks if tr.alive]
         if not live_tracks:
             break
@@ -235,9 +268,11 @@ def _run_scenario_lockstep(scn: Scenario, tracks: List[_Track],
                     if c.alive]
             works = [track_work[id(c.track)] for c in live]
             with _obs.scope("solve_uplink"):
-                sols = _solve_round_batched(live, works, cache)
+                sols, fallbacks = _solve_round_batched(
+                    live, works, cache, t=t, resilience=resilience)
             with _obs.scope("finish_round"):
-                for cell, work, (uplink, pu) in zip(live, works, sols):
+                for cell, work, (uplink, pu), fb in zip(
+                        live, works, sols, fallbacks):
                     eng = cell.track.engine
                     info = None
                     with _obs.context(quantizer=cell.qlabel,
@@ -255,20 +290,28 @@ def _run_scenario_lockstep(scn: Scenario, tracks: List[_Track],
                         cell.acct.params = cell.track.state.params
                         cell.alive = eng.finish_round(
                             cell.acct, work, uplink, verbose=verbose,
-                            async_info=info, per_user_s=pu)
+                            async_info=info, per_user_s=pu,
+                            power_fallbacks=int(fb))
+        if ckpt is not None and t % ckpt.every == 0:
+            ckpt.save_round(scn, tracks, t)
+    return t0
 
 
 def _solve_round_replicated(cells: List[_ReplCell],
                             works: List[ReplicatedRoundWork],
-                            cache: _BundleCache, R: int
-                            ) -> Tuple[np.ndarray, np.ndarray]:
+                            cache: _BundleCache, R: int, t: int = 0,
+                            resilience=None
+                            ) -> Tuple[np.ndarray, np.ndarray,
+                                       np.ndarray]:
     """One batched device solve per distinct power spec over the
     flattened R x cells axis; returns per-(cell, replicate) straggler
-    latencies [n_cells, R] and per-user completion times
-    [n_cells, R, K]."""
+    latencies [n_cells, R], per-user completion times [n_cells, R, K]
+    and fallback-stage counts [n_cells, R] (zeros without a resilience
+    config)."""
     uplinks = np.zeros((len(cells), R))
     K0 = cells[0].track.engine.K if cells else 0
     per_user = np.zeros((len(cells), R, K0))
+    fb_counts = np.zeros((len(cells), R), np.int64)
     groups: Dict[str, List[int]] = {}
     for i, cell in enumerate(cells):
         if cell.power is None or cell.track.state.chans[0] is None:
@@ -291,7 +334,24 @@ def _solve_round_replicated(cells: List[_ReplCell],
             mask[row * R:(row + 1) * R] = w.active
             bits[row * R:(row + 1) * R] = np.where(
                 w.active > 0, np.maximum(w.bits_np, 1.0), 1.0)
-        sol = batched_solver(cells[idx[0]].power)(cb, bits, mask=mask)
+        if resilience is not None:
+            from repro.resilience.fallback import resilient_batched_solve
+
+            if resilience.faults.channel_corrupt(t):
+                cb = _poison_bundle(cb)
+                cache[plabel] = (cache[plabel][0], cb)
+            sol, fb, rebuilt = resilient_batched_solve(
+                cells[idx[0]].power, cb, bits, mask,
+                config=resilience, t=t, obs_tag=plabel,
+                rebuild=lambda g=grid: bundle_from_realization_grid(g))
+            if rebuilt is not None:
+                cache[plabel] = (cache[plabel][0], rebuilt)
+            fb = np.asarray(fb, np.int64).reshape(len(idx), R)
+            for row, i in enumerate(idx):
+                fb_counts[i] = fb[row]
+        else:
+            sol = batched_solver(cells[idx[0]].power)(cb, bits,
+                                                      mask=mask)
         stragglers = np.asarray(sol.straggler_latency,
                                 np.float64).reshape(len(idx), R)
         latencies = np.asarray(sol.latencies,
@@ -309,14 +369,17 @@ def _solve_round_replicated(cells: List[_ReplCell],
                 cells[i].max_p = max(
                     cells[i].max_p,
                     float(np.max(p_max_round[row][cells[i].alive])))
-    return uplinks, per_user
+    return uplinks, per_user, fb_counts
 
 
 def _run_scenario_lockstep_replicated(scn: Scenario,
                                       tracks: List[_ReplTrack], R: int,
-                                      verbose: bool) -> None:
+                                      verbose: bool, resilience=None,
+                                      ckpt=None) -> int:
+    """Returns the resumed-from round frontier (0 for a fresh run)."""
     cache: _BundleCache = {}
-    for t in range(1, scn.T + 1):
+    t0 = ckpt.restore_round(scn, tracks) if ckpt is not None else 0
+    for t in range(t0 + 1, scn.T + 1):
         live_tracks = [tr for tr in tracks if tr.alive]
         if not live_tracks:
             break
@@ -334,8 +397,8 @@ def _run_scenario_lockstep_replicated(scn: Scenario,
                     if c.alive.any()]
             works = [track_work[id(c.track)] for c in live]
             with _obs.scope("solve_uplink"):
-                uplinks, per_user = _solve_round_replicated(
-                    live, works, cache, R)
+                uplinks, per_user, fallbacks = _solve_round_replicated(
+                    live, works, cache, R, t=t, resilience=resilience)
             # async cells aggregate BEFORE eval (sync cells aggregated
             # inside the train step, so the eval ordering matches)
             infos: List[Optional[object]] = [None] * len(live)
@@ -360,17 +423,21 @@ def _run_scenario_lockstep_replicated(scn: Scenario,
                                 [c.alive for c in tr.cells]))
                         if tr.engine.eval_due(t) else None)
             with _obs.scope("finish_round"):
-                for cell, work, uplink, pu, info in zip(
-                        live, works, uplinks, per_user, infos):
+                for cell, work, uplink, pu, fb, info in zip(
+                        live, works, uplinks, per_user, fallbacks,
+                        infos):
                     _finish_replicated_cell(cell, work, uplink,
                                             track_acc, t, R, verbose,
                                             async_info=info,
-                                            per_user=pu)
+                                            per_user=pu, fallbacks=fb)
+        if ckpt is not None and t % ckpt.every == 0:
+            ckpt.save_round(scn, tracks, t)
     for tr in tracks:
         for cell in tr.cells:
             for r in np.flatnonzero(cell.alive):
                 cell.params[r] = tr.engine.replicate_params(
                     tr.state, int(r))
+    return t0
 
 
 def _finish_replicated_cell(cell: _ReplCell, work: ReplicatedRoundWork,
@@ -378,7 +445,8 @@ def _finish_replicated_cell(cell: _ReplCell, work: ReplicatedRoundWork,
                             track_acc: Dict[int, Optional[np.ndarray]],
                             t: int, R: int, verbose: bool,
                             async_info=None,
-                            per_user: Optional[np.ndarray] = None
+                            per_user: Optional[np.ndarray] = None,
+                            fallbacks: Optional[np.ndarray] = None
                             ) -> None:
     from repro.fl.loop import RoundLog
 
@@ -405,11 +473,17 @@ def _finish_replicated_cell(cell: _ReplCell, work: ReplicatedRoundWork,
             stale, dropped = 0.0, 0
         cell.cum_latency[r] += up + comp_lat
         acc = None if accs is None else float(accs[r])
+        quarantined = (int(work.quarantined[r])
+                       if getattr(work, "quarantined", None) is not None
+                       else 0)
         cell.logs[r].append(RoundLog(
             t, work.bits_np[r], up, comp_lat,
             float(cell.cum_latency[r]), float(work.mean_s[r]),
             acc, straggler_gap_s=gap, mean_staleness=stale,
-            effective_participation=eff, dropped_uploads=dropped))
+            effective_participation=eff, dropped_uploads=dropped,
+            quarantined_users=quarantined,
+            power_fallbacks=(int(fallbacks[r])
+                             if fallbacks is not None else 0)))
         cell.rounds_done[r] = t
         if eng.budget_spent(cell.cum_latency[r]):
             cell.alive[r] = False
@@ -466,7 +540,10 @@ def run_grid_batched(scenarios: List[Union[str, Scenario]],
                      quick: bool = True, out_csv: Optional[str] = None,
                      latency_budget_s: Optional[float] = None,
                      verbose: bool = False, mesh=None,
-                     replicates: Optional[int] = None
+                     replicates: Optional[int] = None,
+                     resilience=None,
+                     checkpoint_dir: Optional[str] = None,
+                     checkpoint_every: int = 1
                      ) -> List[SweepResult]:
     """``run_grid`` semantics on the batched phy path.
 
@@ -481,12 +558,32 @@ def run_grid_batched(scenarios: List[Union[str, Scenario]],
     becomes the per-replicate FLResult list.  ``replicates=None``
     (default) keeps the unreplicated driver unless the scenario itself
     declares ``Scenario.replicates > 1``.
+
+    ``resilience`` (a :class:`repro.resilience.ResilienceConfig`) arms
+    the fault-injection + detection + recovery layer (DESIGN.md §14):
+    engines gain jit-traced payload guards, power solves route through
+    the bounded fallback chain, and detect/recover actions surface as
+    the ``quarantined_users`` / ``power_fallbacks`` metric columns.
+    ``ResilienceConfig.none()`` reproduces the unarmed driver
+    bit-for-bit (tests/test_resilience.py).
+
+    ``checkpoint_dir`` makes the sweep preemption-safe: round-granular
+    state snapshots land there every ``checkpoint_every`` rounds, and a
+    re-run with the same directory skips finished scenarios and resumes
+    interrupted ones from the last completed round frontier —
+    ``resumed_from_round`` records where a resumed scenario's cells
+    picked up.
     """
     from .metrics import write_metrics_csv
 
     if replicates is not None and replicates < 1:
         raise ValueError(f"replicates must be >= 1, got {replicates}")
     powers = powers if powers is not None else {"none": None}
+    ckpt = None
+    if checkpoint_dir is not None:
+        from repro.resilience import SweepCheckpointer
+        ckpt = SweepCheckpointer(checkpoint_dir, resilience=resilience,
+                                 every=checkpoint_every)
     results: List[SweepResult] = []
     for scenario in scenarios:
         scn = _resolve_scenario(scenario, quick, latency_budget_s)
@@ -494,6 +591,23 @@ def run_grid_batched(scenarios: List[Union[str, Scenario]],
             n_before = len(results)
             R = replicates if replicates is not None \
                 else (scn.replicates if scn.replicates > 1 else None)
+            expected = len(quantizers) * len(powers)
+            if ckpt is not None:
+                done = ckpt.completed_rows(scn.name, expected)
+                if done is not None:
+                    # scenario finished in an earlier run: rebuild its
+                    # summary rows from the checkpoint ledger (no
+                    # FLResult — the params were not retained)
+                    for row in done:
+                        results.append(SweepResult(
+                            cell=SweepCell(scn, row["quantizer"],
+                                           row["power"]),
+                            result=None,
+                            summary={k: v for k, v in row.items()
+                                     if k not in ("scenario",
+                                                  "quantizer",
+                                                  "power")}))
+                    continue
             problem = build_problem(scn)
             chan = problem[4]
             # sync cells share one training state per quantizer (power
@@ -509,7 +623,8 @@ def run_grid_batched(scenarios: List[Union[str, Scenario]],
                 for qlabel, qspec in quantizers.items():
                     for group in pgroups:
                         engine = _make_engine(scn, problem, qspec, None,
-                                              mesh=mesh)
+                                              mesh=mesh,
+                                              resilience=resilience)
                         track = _ReplTrack(
                             engine=engine,
                             state=engine.start_replicated_run(R))
@@ -525,8 +640,9 @@ def run_grid_batched(scenarios: List[Union[str, Scenario]],
                                 rounds_done=np.zeros(R, dtype=np.int64),
                                 params=[None] * R))
                         tracks_r.append(track)
-                _run_scenario_lockstep_replicated(scn, tracks_r, R,
-                                                  verbose)
+                t0 = _run_scenario_lockstep_replicated(
+                    scn, tracks_r, R, verbose, resilience=resilience,
+                    ckpt=ckpt)
                 for track in tracks_r:
                     for cell in track.cells:
                         results.append(_to_replicated_result(scn, cell))
@@ -535,7 +651,8 @@ def run_grid_batched(scenarios: List[Union[str, Scenario]],
                 for qlabel, qspec in quantizers.items():
                     for group in pgroups:
                         engine = _make_engine(scn, problem, qspec, None,
-                                              mesh=mesh)
+                                              mesh=mesh,
+                                              resilience=resilience)
                         track = _Track(engine=engine,
                                        state=engine.start_run())
                         for plabel, pspec in group:
@@ -549,7 +666,9 @@ def run_grid_batched(scenarios: List[Union[str, Scenario]],
                                 qlabel=qlabel, plabel=plabel,
                                 acct=acct))
                         tracks.append(track)
-                _run_scenario_lockstep(scn, tracks, verbose)
+                t0 = _run_scenario_lockstep(scn, tracks, verbose,
+                                            resilience=resilience,
+                                            ckpt=ckpt)
                 for track in tracks:
                     for cell in track.cells:
                         res = _to_result(scn, track.engine,
@@ -557,6 +676,12 @@ def run_grid_batched(scenarios: List[Union[str, Scenario]],
                                          (cell.qlabel, cell.plabel))
                         res.summary["max_p"] = cell.max_p
                         results.append(res)
+            if t0 > 0:
+                for res in results[n_before:]:
+                    res.summary["resumed_from_round"] = float(t0)
+            if ckpt is not None:
+                ckpt.mark_scenario_done(
+                    scn.name, [r.row() for r in results[n_before:]])
             if _obs.enabled():
                 for res in results[n_before:]:
                     _obs.record(

@@ -88,7 +88,8 @@ def _resolve_scenario(scenario: Union[str, Scenario], quick: bool,
 
 
 def _make_engine(scn: Scenario, problem, quantizer: QuantSpec,
-                 power: PowerSpec, mesh=None) -> VectorizedFLEngine:
+                 power: PowerSpec, mesh=None,
+                 resilience=None) -> VectorizedFLEngine:
     from repro.fl.loop import FLConfig
 
     train, test, shards, model, chan = problem
@@ -100,6 +101,8 @@ def _make_engine(scn: Scenario, problem, quantizer: QuantSpec,
     ecfg = scn.engine_config()
     if mesh is not None:
         ecfg = dataclasses.replace(ecfg, mesh=mesh)
+    if resilience is not None:
+        ecfg = dataclasses.replace(ecfg, resilience=resilience)
     return VectorizedFLEngine(train, test, shards, model, q,
                               pc if chan is not None else None, chan,
                               fl, engine=ecfg)
